@@ -1,0 +1,112 @@
+"""Shared benchmark plumbing.
+
+The paper's testbed is 16xA100 over 40 Gbps Ethernet.  Its regimes are
+reproduced on the assignment's TPU-v5e hardware model by scaling the
+interconnect bandwidth so the coverage rate (CR = T_comm / T_compute)
+lands where the paper's benchmarks landed:
+
+    VGG-19-like    CR ~ 2.0   (param-heavy, cheap compute)
+    ResNet-101-like CR ~ 1.4
+    GPT-2-like     CR ~ 1.0
+
+Each regime is an (assigned arch, bandwidth) pair so every number still
+flows through the real Profiler -> Solver -> Simulator pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.core.bucket import BucketTimes
+from repro.core.deft import plan_deft
+from repro.core.policies import ALL_BASELINES
+from repro.core.profiler import HardwareModel, profile_arch
+from repro.core.scheduler import DeftScheduler, SchedulerConfig
+from repro.core.simulator import SimResult, simulate_baseline, simulate_deft
+
+
+@dataclasses.dataclass(frozen=True)
+class Regime:
+    name: str          # paper benchmark this regime mirrors
+    arch: str          # assigned architecture that carries it
+    ici_bw: float      # interconnect bytes/s that lands the target CR
+    seq_len: int = 4096
+
+
+REGIMES = (
+    Regime("vgg19-like(CR~2)", "gemma2-2b", 1.55e9),
+    Regime("resnet101-like(CR~1.4)", "gemma2-2b", 2.2e9),
+    Regime("gpt2-like(CR~1)", "qwen3-4b", 4.5e9),
+)
+
+
+def hw_for(regime: Regime, dp: int = 16, mu: float = 1.65) -> HardwareModel:
+    return HardwareModel(dp_degree=dp, ici_bw=regime.ici_bw, mu=mu)
+
+
+def profile_regime(
+    regime: Regime,
+    dp: int = 16,
+    partition_elems: int = 6_500_000,
+    strategy: str = "deft",
+):
+    cfg = get_config(regime.arch)
+    hw = hw_for(regime, dp)
+    return profile_arch(
+        cfg, hw=hw, seq_len=regime.seq_len, per_device_batch=1,
+        partition_strategy=strategy, partition_elems=partition_elems,
+    )
+
+
+def deft_with_preserver(
+    times: BucketTimes,
+    mu: float = 1.65,
+    heterogeneous: bool = True,
+    eps: float = 0.01,
+    max_retries: int = 10,
+) -> Tuple[list, SchedulerConfig]:
+    """Solver + Preserver feedback (paper Fig. 7): the schedule the
+    benchmarks simulate is the accuracy-checked one, not the raw solver
+    output — update frequency cannot collapse just to win throughput."""
+    from repro.core.deft import solve_schedule
+    from repro.core.preserver import WalkParams, check_schedule
+
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    factor = 1.0
+    for _ in range(max_retries + 1):
+        scfg = SchedulerConfig(heterogeneous=heterogeneous, mu=mu,
+                               capacity_factor=factor)
+        sched = solve_schedule(times, scfg)
+        if check_schedule(sched.batch_size_sequence, sched.period, walk,
+                          eps=eps).ok:
+            break
+        factor *= 1.2
+    plans = DeftScheduler(times, scfg).run(48)
+    return plans, scfg
+
+
+def run_all_schedulers(
+    times: BucketTimes,
+    mu: float = 1.65,
+    heterogeneous: bool = True,
+) -> Dict[str, SimResult]:
+    out: Dict[str, SimResult] = {}
+    for name, mk in ALL_BASELINES.items():
+        out[name] = simulate_baseline(times, mk(times))
+    plans, scfg = deft_with_preserver(times, mu=mu,
+                                      heterogeneous=heterogeneous)
+    out["deft"] = simulate_deft(times, plans, mu=mu,
+                                heterogeneous=heterogeneous)
+    return out
+
+
+def timed(fn: Callable, *args, **kw) -> Tuple[object, float]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,63 @@
+"""Paper Fig. 10 analog: time-to-solution for the four schedulers in the
+three regimes.
+
+Wall-time per iteration comes from the discrete-event simulator; the loss
+trajectory comes from the Preserver's Gaussian-walk model rolled out with
+each scheduler's actual update pattern (DeFT applies fewer, k-merged
+updates).  The product is a loss-vs-wall-clock curve — the shape of the
+paper's Fig. 10 without a GPU cluster."""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, emit, profile_regime, run_all_schedulers
+from repro.core.preserver import WalkParams, expected_next_state
+from repro.core.scheduler import DeftScheduler, SchedulerConfig, extract_schedule
+
+TARGET_FRACTION = 0.25   # "solution" = loss reduced to 25% of initial
+HORIZON = 4000           # iterations simulated
+
+
+def time_to_solution(iter_time: float, batch_mults, walk: WalkParams) -> float:
+    """Roll the walk with one update per entry of the repeating
+    ``batch_mults`` pattern; each pattern period costs ``period`` x
+    iter_time wall seconds."""
+    s = walk.s0
+    target = walk.s0 * TARGET_FRACTION + walk.s_star
+    t = 0.0
+    it = 0
+    while it < HORIZON:
+        for k in batch_mults:
+            s = expected_next_state(s, float(k), walk)
+            it += k
+            t = it * iter_time
+            if s <= target:
+                return t
+    return float("inf")
+
+
+def run() -> None:
+    walk = WalkParams(s0=6.0, s_star=1.0, eta=0.02, mu=1.0, sigma=60.0,
+                      batch=256)
+    for regime in REGIMES:
+        prof = profile_regime(regime)
+        results = run_all_schedulers(prof.times)
+        # update patterns: baselines update every iteration (k=1)
+        plans = DeftScheduler(prof.times, SchedulerConfig()).run(48)
+        sched = extract_schedule(plans, prof.times.n)
+        patterns = {name: (1,) for name in results if name != "deft"}
+        patterns["deft"] = sched.batch_size_sequence or (1,)
+        tts = {}
+        for name, r in results.items():
+            tts[name] = time_to_solution(r.iteration_time, patterns[name],
+                                         walk)
+        base = tts["pytorch-ddp"]
+        for name, r in results.items():
+            emit(
+                f"fig10/{regime.name}/{name}", r.iteration_time * 1e6,
+                f"iter={r.iteration_time*1e3:.1f}ms "
+                f"bubble={r.bubble_fraction:.2f} tts={tts[name]:.0f}s "
+                f"speedup_vs_ddp={base/max(tts[name],1e-9):.2f}x",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 14 analog: relative speedup vs worker count (4..32) per
+scheduler.  Speedup = single-worker throughput x N / simulated iteration
+time (the 'Linear' line is N)."""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, emit, hw_for, run_all_schedulers
+from repro.configs import get_config
+from repro.core.profiler import profile_arch
+
+
+def run() -> None:
+    regime = REGIMES[1]  # ResNet-like
+    cfg = get_config(regime.arch)
+    for dp in (4, 8, 16, 32):
+        hw = hw_for(regime, dp=dp)
+        prof = profile_arch(cfg, hw=hw, seq_len=regime.seq_len,
+                            per_device_batch=1)
+        compute = prof.times.fwd_total + prof.times.bwd_total
+        results = run_all_schedulers(prof.times)
+        for name, r in results.items():
+            speedup = dp * compute / r.iteration_time
+            emit(
+                f"fig14/dp{dp}/{name}", r.iteration_time * 1e6,
+                f"speedup={speedup:.1f}x linear={dp}x "
+                f"efficiency={speedup/dp:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 15 analog: throughput under shrinking interconnect
+bandwidth (the paper throttled 40 Gbps Ethernet to 10/20/30/40)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_all_schedulers
+from repro.configs import get_config
+from repro.core.profiler import HardwareModel, profile_arch
+
+# bandwidths chosen so the profiled CR sweeps the paper's regimes
+# (CR ~ 8 / 4 / 2 / 1 -- the paper's 10..40 Gbps sweep on VGG-19)
+BWS = (1.5e9, 3.0e9, 6.0e9, 1.2e10)
+
+
+def run() -> None:
+    cfg = get_config("gemma2-2b")
+    for bw in BWS:
+        hw = HardwareModel(dp_degree=16, ici_bw=bw)
+        prof = profile_arch(cfg, hw=hw, seq_len=4096, per_device_batch=1)
+        results = run_all_schedulers(prof.times)
+        base = results["pytorch-ddp"].iteration_time
+        for name, r in results.items():
+            emit(
+                f"fig15/bw{bw/1e9:.1f}GBps/{name}",
+                r.iteration_time * 1e6,
+                f"CR={prof.times.coverage_rate:.2f} "
+                f"iter={r.iteration_time*1e3:.1f}ms "
+                f"speedup_vs_ddp={base/r.iteration_time:.2f}x "
+                f"upd/iter={r.updates_per_iteration:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig. 16 analog: the influence of tensor partition size on each
+scheduler's iteration time (3M / 4M / 6.5M / 8M / 10M elements)."""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, emit, profile_regime, run_all_schedulers
+
+SIZES = (3_000_000, 4_000_000, 6_500_000, 8_000_000, 10_000_000)
+
+
+def run() -> None:
+    # each scheme keeps its own partition strategy at every size (paper:
+    # DDP uses uniform 10..40MB buckets; US-Byte/DeFT re-partition)
+    from benchmarks.common import deft_with_preserver
+    from repro.core.policies import ALL_BASELINES
+    from repro.core.simulator import simulate_baseline, simulate_deft
+
+    regime = REGIMES[0]  # VGG-like, the paper's choice for this figure
+    strategies = {"pytorch-ddp": "uniform", "bytescheduler": "bytescheduler",
+                  "us-byte": "usbyte", "deft": "deft"}
+    for size in SIZES:
+        profs = {
+            strat: profile_regime(regime, partition_elems=size,
+                                  strategy=strat)
+            for strat in set(strategies.values())
+        }
+        for name, mk in ALL_BASELINES.items():
+            t = profs[strategies[name]].times
+            r = simulate_baseline(t, mk(t))
+            emit(
+                f"fig16/part{size//1_000_000}M/{name}",
+                r.iteration_time * 1e6,
+                f"buckets={t.n} iter={r.iteration_time*1e3:.1f}ms "
+                f"bubble={r.bubble_fraction:.2f}",
+            )
+        t = profs["deft"].times
+        plans, scfg = deft_with_preserver(t)
+        r = simulate_deft(t, plans)
+        emit(
+            f"fig16/part{size//1_000_000}M/deft", r.iteration_time * 1e6,
+            f"buckets={t.n} iter={r.iteration_time*1e3:.1f}ms "
+            f"bubble={r.bubble_fraction:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

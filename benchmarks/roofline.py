@@ -1,0 +1,47 @@
+"""Roofline table assembly: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and emits the per-(arch x shape x mode) roofline
+terms.  Run the dry-run sweep first; missing combos are reported."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def rows():
+    if not DRYRUN_DIR.exists():
+        return []
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        d["_file"] = p.name
+        out.append(d)
+    return out
+
+
+def run() -> None:
+    rs = rows()
+    if not rs:
+        emit("roofline/missing", 0,
+             "run PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return
+    for d in rs:
+        if "skip" in d:
+            emit(f"roofline/{d['arch']}/{d['shape']}", 0, f"SKIP {d['skip']}")
+            continue
+        emit(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mode']}/{d['mesh']}",
+            d.get("wall_seconds", 0) * 1e6,
+            f"compute={d['t_compute']*1e3:.2f}ms "
+            f"memory={d['t_memory']*1e3:.2f}ms "
+            f"collective={d['t_collective']*1e3:.2f}ms "
+            f"dominant={d['dominant']} useful={d['useful_flops_ratio']:.2f} "
+            f"mem/dev={d['bytes_per_device']/2**30:.2f}GiB",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Render the EXPERIMENTS.md §Roofline markdown table from the dry-run
+JSONs.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_table [--update]
+
+``--update`` splices the table into EXPERIMENTS.md at the
+``<!-- ROOFLINE TABLE -->`` marker.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def build_table() -> str:
+    rows = []
+    skips = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if "skip" in d:
+            skips.append(d)
+            continue
+        # hillclimb variants carry their --opt suffix in the filename
+        stem = p.stem
+        for token in stem.split("_"):
+            if token.startswith(("sharded-decode", "dp-only", "microbatch")):
+                d["mode"] = d["mode"] + "+" + token
+        rows.append(d)
+    rows.sort(key=lambda d: (d["mesh"], d["arch"], SHAPE_ORDER.get(d["shape"], 9),
+                             d["mode"]))
+    lines = [
+        "| arch | shape | mode | mesh | t_compute (ms) | t_memory (ms) | "
+        "t_collective (ms) | bound | useful (6ND/HLO) | mem/dev (GiB) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mode']} | {d['mesh']} | "
+            f"{d['t_compute']*1e3:.2f} | {d['t_memory']*1e3:.2f} | "
+            f"{d['t_collective']*1e3:.2f} | {d['dominant']} | "
+            f"{d['useful_flops_ratio']:.3f} | "
+            f"{d['bytes_per_device']/2**30:.2f} |"
+        )
+    seen = set()
+    for d in skips:
+        key = (d["arch"], d["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        lines.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | — | "
+                     f"SKIP: {d['skip']} | — | — |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true")
+    args = ap.parse_args()
+    table = build_table()
+    print(table)
+    if args.update:
+        exp = ROOT / "EXPERIMENTS.md"
+        text = exp.read_text()
+        marker = "<!-- ROOFLINE TABLE -->"
+        assert marker in text
+        pre = text.split(marker)[0]
+        post = text.split(marker, 1)[1]
+        # drop any previously spliced table (up to the next section header)
+        tail = post.split("\n## ", 1)
+        rest = ("\n## " + tail[1]) if len(tail) > 1 else ""
+        exp.write_text(pre + marker + "\n\n" + table + "\n" + rest)
+        print(f"\n(updated {exp})")
+
+
+if __name__ == "__main__":
+    main()

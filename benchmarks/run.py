@@ -1,0 +1,47 @@
+"""Benchmark entry point: one section per paper table/figure plus the
+dry-run roofline table.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig10_time_to_solution,
+        fig14_scalability,
+        fig15_bandwidth,
+        fig16_partition_size,
+        roofline,
+        table1_coverage_rates,
+        table2_bucket_times,
+        table4_multilink,
+    )
+
+    sections = [
+        ("table1 (coverage rates)", table1_coverage_rates.run),
+        ("table2 (bucket times)", table2_bucket_times.run),
+        ("table4 (multi-link)", table4_multilink.run),
+        ("fig10 (time-to-solution)", fig10_time_to_solution.run),
+        ("fig14 (scalability)", fig14_scalability.run),
+        ("fig15 (bandwidth)", fig15_bandwidth.run),
+        ("fig16 (partition size)", fig16_partition_size.run),
+        ("roofline (dry-run)", roofline.run),
+    ]
+    t0 = time.time()
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; fail at the end
+            failures += 1
+            print(f"{name},0,ERROR {type(e).__name__}: {e}")
+    print(f"# benchmarks done in {time.time() - t0:.1f}s, "
+          f"{failures} section failures")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table I analog: forward/backward/communication time + coverage
+rate, for the paper's three regimes AND every assigned architecture under
+the production hardware model."""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, emit, profile_regime, timed
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.profiler import HardwareModel, profile_arch
+
+
+def run() -> None:
+    for regime in REGIMES:
+        prof, us = timed(profile_regime, regime)
+        t = prof.times
+        emit(
+            f"table1/{regime.name}", us,
+            f"arch={regime.arch} Tf={t.fwd_total*1e3:.1f}ms "
+            f"Tb={t.bwd_total*1e3:.1f}ms Tc={t.comm_total*1e3:.1f}ms "
+            f"CR={t.coverage_rate:.2f}",
+        )
+    hw = HardwareModel(dp_degree=16)
+    for arch in ARCH_NAMES:
+        prof, us = timed(
+            profile_arch, get_config(arch), hw=hw, seq_len=4096,
+            per_device_batch=1,
+        )
+        t = prof.times
+        emit(
+            f"table1/assigned/{arch}", us,
+            f"Tf={t.fwd_total*1e3:.1f}ms Tb={t.bwd_total*1e3:.1f}ms "
+            f"Tc={t.comm_total*1e3:.1f}ms CR={t.coverage_rate:.2f} "
+            f"buckets={t.n}",
+        )
+
+
+if __name__ == "__main__":
+    run()

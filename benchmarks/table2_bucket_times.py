@@ -1,0 +1,28 @@
+"""Paper Table II analog: per-bucket fwd/bwd/comm imbalance for the
+VGG-like regime (the motivation for merging computation into one knapsack
+capacity)."""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, emit, profile_regime, timed
+
+
+def run() -> None:
+    regime = REGIMES[0]  # VGG-like
+    prof, us = timed(profile_regime, regime)
+    t = prof.times
+    for i in range(t.n):
+        emit(
+            f"table2/bucket{i + 1}", us / t.n,
+            f"fwd={t.fwd[i]*1e6:.0f}us bwd={t.bwd[i]*1e6:.0f}us "
+            f"comm={t.comm[i]*1e6:.0f}us",
+        )
+    imb = max(t.comm) / max(min(c for c in t.comm if c > 0), 1e-9)
+    emit(
+        "table2/total", us,
+        f"fwd={t.fwd_total*1e3:.1f}ms bwd={t.bwd_total*1e3:.1f}ms "
+        f"comm={t.comm_total*1e3:.1f}ms comm_imbalance={imb:.1f}x",
+    )
+
+
+if __name__ == "__main__":
+    run()

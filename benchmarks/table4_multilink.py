@@ -1,0 +1,34 @@
+"""Paper Table IV analog: all-reduce time on the primary vs secondary
+link, multi-link vs single-link (contention) across tensor sizes.
+
+The paper measured NCCL vs gloo over one or two NICs; the TPU adaptation
+models the secondary path at 1/mu of ICI speed and single-link contention
+as serialized transfers (paper: gloo slows ~20% when sharing the NIC —
+here the two transfers share one link's bandwidth exactly)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.profiler import HardwareModel
+
+SIZES = (4_194_304, 8_388_608, 16_777_216, 33_554_432, 67_108_864)
+
+
+def run() -> None:
+    hw = HardwareModel(dp_degree=16)
+    for n in SIZES:
+        t_p = hw.allreduce_time(n)
+        t_s = hw.allreduce_time(n, link_bw=hw.secondary_bw)
+        # multi-link: both proceed concurrently -> max; single-link: share
+        multi = max(t_p, t_s)
+        single = t_p + t_s
+        emit(
+            f"table4/size{n}", t_p * 1e6,
+            f"primary={t_p*1e3:.2f}ms secondary={t_s*1e3:.2f}ms "
+            f"ratio={t_s/t_p:.2f} multi_link={multi*1e3:.2f}ms "
+            f"single_link={single*1e3:.2f}ms "
+            f"contention_penalty={single/multi:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    run()

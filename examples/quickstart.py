@@ -1,0 +1,58 @@
+"""Quickstart: plan a DeFT communication schedule for an assigned
+architecture and compare it against the baselines in the timeline
+simulator — the whole paper pipeline in one page.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch gemma2-2b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.deft import plan_deft
+from repro.core.policies import ALL_BASELINES
+from repro.core.profiler import HardwareModel
+from repro.core.scheduler import DeftScheduler
+from repro.core.simulator import simulate_baseline, simulate_deft
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="gemma2-2b")
+    ap.add_argument("--bandwidth", type=float, default=1.2e10,
+                    help="interconnect bytes/s (small => high CR)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    hw = HardwareModel(dp_degree=16, ici_bw=args.bandwidth)
+
+    # 1. Profiler + Solver + Preserver (paper Fig. 7)
+    plan = plan_deft(cfg, hw=hw, seq_len=4096, per_device_batch=1)
+    t = plan.profile.times
+    print(f"arch={cfg.name}  params={cfg.total_params():,}")
+    print(f"buckets={t.n}  T_fwd={t.fwd_total*1e3:.1f}ms  "
+          f"T_bwd={t.bwd_total*1e3:.1f}ms  T_comm={t.comm_total*1e3:.1f}ms  "
+          f"CR={t.coverage_rate:.2f}")
+    s = plan.schedule
+    print(f"schedule: period={s.period}  updates/period={s.updates_per_period}"
+          f"  batch-size sequence={s.batch_size_sequence}")
+    print(f"preserver: ratio={plan.verdict.ratio:.4f} ok={plan.verdict.ok} "
+          f"(capacity x{plan.capacity_factor:.2f}, {plan.retries} retries)")
+
+    # 2. Timeline comparison (paper Fig. 10/11 style)
+    print("\nscheduler        iter(ms)  bubbles  upd/iter  speedup")
+    plans = DeftScheduler(t, plan.scheduler_cfg).run(48)
+    r_deft = simulate_deft(t, plans)
+    rows = [("deft", r_deft)]
+    for name, mk in ALL_BASELINES.items():
+        rows.append((name, simulate_baseline(t, mk(t))))
+    base = dict(rows)["pytorch-ddp"].iteration_time
+    for name, r in rows:
+        print(f"{name:16s} {r.iteration_time*1e3:8.1f}  "
+              f"{r.bubble_fraction:7.2f}  {r.updates_per_iteration:8.2f}  "
+              f"{base/r.iteration_time:6.2f}x")
+
+
+if __name__ == "__main__":
+    main()

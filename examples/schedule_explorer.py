@@ -1,0 +1,74 @@
+"""Schedule explorer: ASCII timeline of what each scheduler does with one
+iteration's buckets — the paper's Fig. 11-13 rendered in a terminal.
+
+    PYTHONPATH=src python examples/schedule_explorer.py --cr 2.0
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core.bucket import BucketTimes
+from repro.core.deft import plan_deft
+from repro.core.policies import ALL_BASELINES
+from repro.core.profiler import HardwareModel, profile_arch
+from repro.core.scheduler import DeftScheduler
+from repro.core.simulator import simulate_baseline, simulate_deft
+
+WIDTH = 100
+
+
+def render(timeline, t_end, label):
+    streams = {}
+    for stream, s, e, tag in timeline:
+        streams.setdefault(stream, []).append((s, e, tag))
+    print(f"\n== {label} ==")
+    for stream in sorted(streams):
+        row = [" "] * WIDTH
+        for s, e, tag in streams[stream]:
+            a = int(s / t_end * (WIDTH - 1))
+            b = max(int(e / t_end * (WIDTH - 1)), a + 1)
+            ch = tag[0] if tag else "#"
+            for i in range(a, min(b, WIDTH)):
+                row[i] = ch
+        print(f"{stream:8s} |{''.join(row)}|")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--cr", type=float, default=2.0)
+    ap.add_argument("--iters", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    hw = HardwareModel(dp_degree=16)
+    prof = profile_arch(cfg, hw=hw, seq_len=4096, per_device_batch=1)
+    t = prof.times
+    scale = args.cr * (t.fwd_total + t.bwd_total) / max(t.comm_total, 1e-12)
+    t = BucketTimes(t.fwd, t.bwd, tuple(c * scale for c in t.comm))
+    print(f"arch={cfg.name} buckets={t.n} CR={t.coverage_rate:.2f}")
+    print("legend: F=forward  B=backward  C=communication")
+
+    for name, mk in ALL_BASELINES.items():
+        r = simulate_baseline(t, mk(t), n_iterations=args.iters + 2,
+                              keep_timeline=True)
+        t_end = max(e for _, _, e, _ in r.timeline)
+        render(r.timeline, t_end,
+               f"{name}: iter={r.iteration_time*1e3:.1f}ms "
+               f"bubble={r.bubble_fraction:.2f}")
+
+    plan = plan_deft(cfg, hw=hw, seq_len=4096)
+    sched = DeftScheduler(t, plan.scheduler_cfg)
+    plans = sched.run(args.iters + 4)
+    r = simulate_deft(t, plans, keep_timeline=True)
+    t_end = max(e for _, _, e, _ in r.timeline)
+    render(r.timeline, t_end,
+           f"deft: iter={r.iteration_time*1e3:.1f}ms "
+           f"bubble={r.bubble_fraction:.2f} "
+           f"upd/iter={r.updates_per_iteration:.2f}")
+
+
+if __name__ == "__main__":
+    main()

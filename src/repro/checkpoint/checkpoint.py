@@ -1,0 +1,83 @@
+"""Pytree checkpointing: npz arrays + json tree metadata.
+
+Leaves are flattened with '/'-joined key paths into a single compressed
+.npz; the tree structure, dtypes and non-array leaves live in a sidecar
+json.  Restore rebuilds the exact pytree (tuples stay tuples).  Writes are
+atomic (tmp + rename) so a crashed save never corrupts the latest step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save(directory: str, step: int, tree, *, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {"step": step, "treedef": str(treedef), "keys": sorted(arrays)}
+    base = os.path.join(directory, f"{name}_{step:08d}")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
+    # write through the handle — np.savez would silently append ".npz" to a
+    # path not ending in it, leaving the temp file empty after the rename
+    with os.fdopen(fd, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    os.replace(tmp, base + ".npz")
+    with open(base + ".json.tmp", "w") as f:
+        json.dump(meta, f)
+    os.replace(base + ".json.tmp", base + ".json")
+    return base + ".npz"
+
+
+def restore(directory: str, step: int, like, *, name: str = "ckpt"):
+    """Restore into the structure of ``like`` (shapes/dtypes verified)."""
+    base = os.path.join(directory, f"{name}_{step:08d}")
+    with np.load(base + ".npz") as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path, leaf) in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=getattr(leaf, "dtype", None)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str, *, name: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    pat = re.compile(rf"{re.escape(name)}_(\d+)\.npz$")
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := pat.match(f))
+    ]
+    return max(steps) if steps else None

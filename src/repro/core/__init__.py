@@ -1,0 +1,45 @@
+"""DeFT core: the paper's contribution.
+
+Profiler (analytical bucket-time reconstruction) -> Solver (two-stage 0/1
+multi-knapsack scheduling, Algorithms 1+2) -> Preserver (Gaussian-walk
+convergence check + capacity feedback).  ``plan_deft`` ties them together.
+"""
+from repro.core.bucket import Bucket, BucketTimes, build_buckets
+from repro.core.deft import DeftPlan, plan_deft, solve_schedule
+from repro.core.knapsack import (
+    greedy_multi_knapsack,
+    knapsack_two_link,
+    naive_knapsack,
+    recursive_knapsack,
+)
+from repro.core.policies import ALL_BASELINES, BaselinePolicy
+from repro.core.preserver import (
+    PreserverVerdict,
+    WalkParams,
+    check_schedule,
+    expected_next_state,
+    rollout,
+)
+from repro.core.profiler import HardwareModel, Profile, profile_arch
+from repro.core.scheduler import (
+    DeftSchedule,
+    DeftScheduler,
+    IterationPlan,
+    PhaseSpec,
+    SchedulerConfig,
+    Task,
+    extract_schedule,
+)
+from repro.core.simulator import SimResult, simulate_baseline, simulate_deft
+
+__all__ = [
+    "Bucket", "BucketTimes", "build_buckets",
+    "DeftPlan", "plan_deft", "solve_schedule",
+    "greedy_multi_knapsack", "knapsack_two_link", "naive_knapsack", "recursive_knapsack",
+    "ALL_BASELINES", "BaselinePolicy",
+    "PreserverVerdict", "WalkParams", "check_schedule", "expected_next_state", "rollout",
+    "HardwareModel", "Profile", "profile_arch",
+    "DeftSchedule", "DeftScheduler", "IterationPlan", "PhaseSpec",
+    "SchedulerConfig", "Task", "extract_schedule",
+    "SimResult", "simulate_baseline", "simulate_deft",
+]

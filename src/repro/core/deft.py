@@ -1,0 +1,104 @@
+"""DeFT top level: Profiler -> Solver -> Preserver feedback loop (Fig. 7).
+
+``plan_deft`` is the single entry point used by the train loop, the
+benchmarks and the examples: given an architecture + hardware model +
+input shape, it profiles bucket times analytically, runs the two-stage
+knapsack Solver, checks the resulting variable-batch-size sequence with
+the Preserver, and — on failure — enlarges the knapsack capacity (paper:
+"allowing more communications in each iteration, which avoids excessive
+decrease in parameter update frequency") and re-solves, up to
+``max_retries`` (paper: 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.bucket import BucketTimes
+from repro.core.preserver import PreserverVerdict, WalkParams, check_schedule
+from repro.core.profiler import HardwareModel, Profile, profile_arch
+from repro.core.scheduler import (
+    DeftSchedule,
+    DeftScheduler,
+    SchedulerConfig,
+    extract_schedule,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeftPlan:
+    """Everything downstream consumers need."""
+
+    profile: Profile
+    schedule: DeftSchedule
+    verdict: PreserverVerdict
+    capacity_factor: float       # final (post-feedback) knapsack scale
+    retries: int
+    scheduler_cfg: SchedulerConfig
+
+    @property
+    def coverage_rate(self) -> float:
+        return self.profile.coverage_rate
+
+
+def solve_schedule(
+    times: BucketTimes,
+    scfg: SchedulerConfig,
+    n_buckets: Optional[int] = None,
+    warmup: int = 16,
+) -> DeftSchedule:
+    """Solver: Algorithm 2 over the horizon, then cycle extraction."""
+    sched = DeftScheduler(times, scfg)
+    plans = sched.run()
+    return extract_schedule(plans, n_buckets or times.n, warmup=warmup)
+
+
+def plan_deft(
+    cfg: ArchConfig,
+    hw: HardwareModel = HardwareModel(),
+    seq_len: int = 4096,
+    per_device_batch: int = 1,
+    heterogeneous: bool = True,
+    mu: float = 1.65,
+    walk: Optional[WalkParams] = None,
+    eps: float = 0.01,
+    max_retries: int = 10,
+    capacity_growth: float = 1.2,
+    partition_elems: int = 6_500_000,
+    rebase_total_flops: Optional[float] = None,
+) -> DeftPlan:
+    """Profile -> solve -> preserve, with the capacity feedback loop."""
+    profile = profile_arch(
+        cfg,
+        hw=hw,
+        seq_len=seq_len,
+        per_device_batch=per_device_batch,
+        partition_strategy="deft",
+        partition_elems=partition_elems,
+        rebase_total_flops=rebase_total_flops,
+    )
+    walk = walk or WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+
+    factor = 1.0
+    last = None
+    for retry in range(max_retries + 1):
+        scfg = SchedulerConfig(
+            heterogeneous=heterogeneous, mu=mu, capacity_factor=factor
+        )
+        schedule = solve_schedule(profile.times, scfg, n_buckets=len(profile.times.fwd))
+        verdict = check_schedule(
+            schedule.batch_size_sequence, schedule.period, walk, eps=eps
+        )
+        last = DeftPlan(
+            profile=profile,
+            schedule=schedule,
+            verdict=verdict,
+            capacity_factor=factor,
+            retries=retry,
+            scheduler_cfg=scfg,
+        )
+        if verdict.ok:
+            return last
+        factor *= capacity_growth
+    return last  # best effort after max retries (paper caps at 10)

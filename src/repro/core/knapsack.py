@@ -1,0 +1,167 @@
+"""0/1 knapsack machinery (paper §III.B-C).
+
+The scheduling problem: items are bucket *communication times* (value ==
+weight), the knapsack capacity is merged *computation time*.  Three solvers:
+
+* ``naive_knapsack``       — exact DP on microsecond-scaled integers
+                             (Problem 1).
+* ``recursive_knapsack``   — Algorithm 1: dependency-aware refinement for
+                             the backward stage.  Scheduling the comm of the
+                             deepest (output-side) bucket leaves only the
+                             backward time of shallower buckets to overlap
+                             with, so the recursion also tries dropping the
+                             last item while shrinking capacity by that
+                             bucket's backward time, and keeps the better.
+* ``greedy_multi_knapsack``— Problem 2 heuristic for heterogeneous links:
+                             capacities sorted ascending, items placed
+                             longest-first into the smallest knapsack with
+                             room.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+_SCALE = 1e6  # seconds -> integer microseconds for exact DP
+# Bound the DP table: with n items the capacity axis is clamped to
+# _MAX_DP_CELLS / n cells (the rescale loop below coarsens the integer
+# unit).  1M cells keeps every solve a few ms with <=0.1% capacity error
+# at the paper's scales (ms..s bucket times).
+_MAX_DP_CELLS = 1_000_000
+
+
+def _to_int(xs: Sequence[float]) -> List[int]:
+    return [max(0, int(round(x * _SCALE))) for x in xs]
+
+
+def naive_knapsack(times: Sequence[float], capacity: float) -> List[int]:
+    """Exact 0/1 knapsack (value == weight). Returns selected item indices.
+
+    Falls back to a density-greedy if the DP table would be unreasonably
+    large (never happens at paper scale: <20 items, <1 s capacities)."""
+    n = len(times)
+    if n == 0 or capacity <= 0:
+        return []
+    w = _to_int(times)
+    # round (not truncate) so an exactly-fitting item is not rejected by
+    # float noise; weights above use the same rounding
+    cap = int(round(capacity * _SCALE))
+    if cap <= 0:
+        return []
+    # Rescale to keep the DP table bounded (profiled capacities are
+    # hundreds of ms = ~1e6 integer cells; the table stays a few MB).
+    # Nonzero items stay >= 1 after rescaling — a coarsened-to-zero item
+    # is NOT free and must still compete for capacity.
+    while n * cap > _MAX_DP_CELLS and cap > 1:
+        w = [max(x // 10, 1) if x > 0 else 0 for x in w]
+        cap //= 10
+    # vectorized classic 0/1 DP: `cand` reads the pre-update row, so each
+    # item is used at most once; `choice` records per-item improvements
+    # for the backtrack.
+    dp = np.zeros(cap + 1, np.int64)
+    choice = np.zeros((n, cap + 1), bool)
+    for i in range(n):
+        wi = w[i]
+        if wi == 0:
+            choice[i, :] = True   # zero-weight item always fits
+            continue
+        if wi > cap:
+            continue
+        cand = dp[: cap + 1 - wi] + wi
+        better = cand > dp[wi:]
+        dp[wi:] = np.where(better, cand, dp[wi:])
+        choice[i, wi:] = better
+    # backtrack
+    sel: List[int] = []
+    c = cap
+    for i in range(n - 1, -1, -1):
+        if choice[i, c]:
+            sel.append(i)
+            c -= w[i]
+            if c < 0:
+                c = 0
+    sel.reverse()
+    # rounding error is bounded by one (possibly rescaled) integer unit
+    # per item; keep the matching tolerance
+    unit = max(round(capacity * _SCALE), 1) / max(cap, 1) / _SCALE
+    assert sum(times[i] for i in sel) <= capacity * 1.001 + n * unit + 1e-6
+    return sel
+
+
+def recursive_knapsack(
+    comm_times: Sequence[float],
+    remain_time: float,
+    bwd_times: Sequence[float],
+    _depth: int = 0,
+) -> List[int]:
+    """Algorithm 1 (RecursiveKnapsack).
+
+    ``comm_times``/``bwd_times`` are ordered as produced by backward:
+    position 0 is bucket N (output side, gradient ready first), the last
+    position is the shallowest considered bucket.  ``order1`` solves the
+    plain knapsack; ``order2`` drops the *last* element (the shallowest
+    bucket, whose comm would only start after nearly all backward is done)
+    and shrinks the capacity by the backward time of its predecessor, per
+    the paper's ``RecursiveKnapsack(CommTimeList - C_N, remainTime -
+    T_{N-1})`` step.  The better total wins.
+    """
+    n = len(comm_times)
+    if n == 0 or remain_time <= 0:
+        return []
+    if sum(comm_times) <= remain_time:
+        return list(range(n))   # everything fits; recursion cannot improve
+    order1 = naive_knapsack(comm_times, remain_time)
+    if n == 1 or _depth > 30:
+        return order1
+    shrink = bwd_times[n - 2] if n - 2 < len(bwd_times) else 0.0
+    order2 = recursive_knapsack(
+        comm_times[: n - 1], remain_time - shrink, bwd_times, _depth + 1
+    )
+    s1 = sum(comm_times[i] for i in order1)
+    s2 = sum(comm_times[i] for i in order2)
+    return order1 if s1 >= s2 else order2
+
+
+def greedy_multi_knapsack(
+    times: Sequence[float], capacities: Sequence[float]
+) -> Dict[int, List[int]]:
+    """Problem 2 greedy heuristic (§III.C): returns {knapsack_id: item
+    indices}, knapsack ids indexing ``capacities`` as given.  Placement:
+    capacities ascending, items by time descending, each item into the
+    smallest-capacity knapsack that still has room.  O(N*M)."""
+    order_caps = sorted(range(len(capacities)), key=lambda k: capacities[k])
+    remaining = {k: capacities[k] for k in order_caps}
+    items = sorted(range(len(times)), key=lambda i: -times[i])
+    placed: Dict[int, List[int]] = {k: [] for k in range(len(capacities))}
+    for i in items:
+        for k in order_caps:
+            if times[i] <= remaining[k]:
+                placed[k].append(i)
+                remaining[k] -= times[i]
+                break
+    for k in placed:
+        placed[k].sort()
+    return placed
+
+
+def knapsack_two_link(
+    times: Sequence[float],
+    primary_capacity: float,
+    secondary_capacity: float,
+) -> Tuple[List[int], List[int]]:
+    """Two-knapsack selection (primary=ICI/NCCL, secondary=slow link).
+
+    Returns (primary_items, secondary_items).  Uses the greedy heuristic,
+    then locally improves the primary set with the exact DP over the items
+    the greedy left out or placed on the secondary link."""
+    placed = greedy_multi_knapsack(times, [primary_capacity, secondary_capacity])
+    primary, secondary = placed.get(0, []), placed.get(1, [])
+    # refinement: re-solve the primary knapsack exactly over all items not
+    # on the secondary link
+    free = [i for i in range(len(times)) if i not in secondary]
+    sub = naive_knapsack([times[i] for i in free], primary_capacity)
+    primary2 = [free[j] for j in sub]
+    if sum(times[i] for i in primary2) > sum(times[i] for i in primary):
+        primary = primary2
+    return sorted(primary), sorted(secondary)

@@ -1,0 +1,142 @@
+"""Convergence Preserver (paper §IV.C).
+
+DeFT's delayed/merged updates are equivalent to training with a *variable
+batch-size sequence*: every N iterations the optimizer applies m <= N
+updates with batch sizes ``k_1*B, ..., k_m*B`` where ``sum(k_i) == N``.
+
+Convergence impact is quantified with the Gaussian-random-walk-with-rebound
+model of Yin et al. (KDD'17, "Small batch or large batch?"): the training
+loss is a walker ``s_t`` that either steps toward the objective ``S*`` or
+rebounds past it; the per-update step is Gaussian with mean ``eta*mu_t``
+and std ``eta*sigma_t/sqrt(B)`` (larger batches -> less noise).  The
+closed-form expected next state is
+
+    E_B(s_{t+1}) = (s_t - S* - eta*mu_t) * (Phi(a) - Phi(-a))
+                   + (eta*sigma_t/sqrt(B)) * sqrt(2/pi) * exp(-a^2/2)
+                   + S*
+    a = (s_t - S* - eta*mu_t) * sqrt(B) / (eta*sigma_t)
+
+The Preserver rolls this forward over one schedule period under both the
+fixed-B sequence O_B (N updates) and DeFT's sequence O_D (m updates with
+batch k_i*B) and compares the expected final losses.  A ratio outside
+``[1-eps, 1+eps]`` fails the check; the feedback loop (deft.py) then
+enlarges the knapsack capacity (more communication per iteration -> higher
+update frequency) and re-solves, up to 10 retries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+
+def _phi(x: float) -> float:
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkParams:
+    """Inputs of the Gaussian-walk model, collected by the Profiler during
+    the trial-application window (paper Fig. 7: "convergence info").
+
+    s0:      current training loss.
+    s_star:  objective loss value S* (lowest reachable; 0 is conservative).
+    eta:     learning rate.
+    mu:      mean gradient step magnitude per unit batch (square-sum of the
+             gradient in the paper's notation).
+    sigma:   per-example noise std of the step.
+    batch:   the base global batch size B.
+    """
+
+    s0: float
+    s_star: float = 0.0
+    eta: float = 0.01
+    mu: float = 1.0
+    sigma: float = 10.0
+    batch: int = 256
+
+
+def expected_next_state(s_t: float, batch_mult: float, p: WalkParams) -> float:
+    """E_{k*B}(s_{t+1}) with rebound (Yin et al. eq. used by the paper)."""
+    b_eff = max(p.batch * batch_mult, 1e-9)
+    drift = p.eta * p.mu
+    noise = p.eta * p.sigma / math.sqrt(b_eff)
+    centered = s_t - p.s_star - drift
+    if noise <= 1e-30:
+        # deterministic limit: plain descent with rebound
+        return abs(centered) + p.s_star
+    a = centered / noise
+    e = (
+        centered * (_phi(a) - _phi(-a))
+        + noise * math.sqrt(2.0 / math.pi) * math.exp(-0.5 * a * a)
+        + p.s_star
+    )
+    return e
+
+
+def rollout(batch_mults: Sequence[float], p: WalkParams) -> float:
+    """Expected loss after applying updates with the given batch-size
+    multipliers in order, starting from p.s0."""
+    s = p.s0
+    for k in batch_mults:
+        s = expected_next_state(s, k, p)
+    return s
+
+
+@dataclasses.dataclass(frozen=True)
+class PreserverVerdict:
+    ratio: float            # E[O_B] / E[O_D]
+    e_baseline: float       # expected loss, fixed-B sequence
+    e_deft: float           # expected loss, DeFT variable sequence
+    ok: bool
+    eps: float
+
+
+def check_schedule(
+    batch_size_sequence: Sequence[int],
+    period: int,
+    params: WalkParams,
+    eps: float = 0.01,
+) -> PreserverVerdict:
+    """Compare O_D = (k_1, ..., k_m) against O_B = (1,)*period.
+
+    Note the paper's Table V: O_D applies *fewer* updates, each with a
+    k-times-larger effective batch (less noise per update but fewer noise-
+    averaging opportunities); the ratio stays ~1 when the sequence is mild.
+    """
+    ks = list(batch_size_sequence)
+    if not ks:
+        # schedule produced no updates in a period -> divergent by definition
+        return PreserverVerdict(
+            ratio=float("inf"), e_baseline=0.0, e_deft=float("inf"), ok=False, eps=eps
+        )
+    assert sum(ks) >= period or True  # merged generations may straddle periods
+    e_b = rollout([1.0] * period, params)
+    e_d = rollout([float(k) for k in ks], params)
+    denom = e_d - params.s_star
+    numer = e_b - params.s_star
+    ratio = numer / denom if abs(denom) > 1e-30 else float("inf")
+    ok = (1.0 - eps) <= ratio <= (1.0 + eps)
+    return PreserverVerdict(ratio=ratio, e_baseline=e_b, e_deft=e_d, ok=ok, eps=eps)
+
+
+def estimate_walk_params_from_losses(
+    losses: Sequence[float],
+    eta: float,
+    batch: int,
+    s_star: float = 0.0,
+) -> WalkParams:
+    """Fit mu/sigma from an observed loss trace (the Profiler's convergence
+    log): mu from the mean per-step decrease, sigma from the residual std.
+    Used by the live training loop; benchmarks use synthetic WalkParams."""
+    if len(losses) < 3:
+        return WalkParams(s0=losses[-1] if losses else 1.0, eta=eta, batch=batch)
+    deltas = [losses[i] - losses[i + 1] for i in range(len(losses) - 1)]
+    mean_d = sum(deltas) / len(deltas)
+    var_d = sum((d - mean_d) ** 2 for d in deltas) / max(len(deltas) - 1, 1)
+    mu = max(mean_d / max(eta, 1e-12), 1e-9)
+    sigma = math.sqrt(max(var_d, 1e-18)) * math.sqrt(batch) / max(eta, 1e-12)
+    return WalkParams(
+        s0=losses[-1], s_star=s_star, eta=eta, mu=mu, sigma=sigma, batch=batch
+    )

@@ -1,0 +1,212 @@
+"""Two-stream discrete-event timeline simulator.
+
+The paper evaluates wall-clock throughput on a real 16-GPU cluster.  This
+container has no cluster, so the *timeline* consequences of each scheduling
+scheme (iteration time, bubbles, speedups — Figs. 10-16) are reproduced
+with an event-driven model faithful to WFBP semantics:
+
+* one serial **compute stream** (backward ``n-1..0`` then next iteration's
+  forward ``0..n-1``),
+* one or two FIFO **communication links** (primary; optional secondary at
+  ``1/mu`` speed),
+* dependency edges: a fresh bucket's comm starts only after its backward;
+  a baseline's next-iteration forward of bucket ``b`` waits for bucket
+  ``b``'s sync (the hard dependency DeFT removes); DeFT's forward-stage
+  comms are WaitAll'ed at forward end (Algorithm 2 line 12).
+
+The simulator runs either a :class:`BaselinePolicy` or a DeFT plan list and
+reports steady-state iteration time + bubble fraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.bucket import BucketTimes
+from repro.core.policies import BaselinePolicy
+from repro.core.scheduler import IterationPlan, Task
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    iteration_time: float          # steady-state seconds/iteration
+    compute_time: float            # pure compute per iteration
+    bubble_fraction: float         # (iter - compute) / iter
+    updates_per_iteration: float   # 1.0 for baselines; <=1 for DeFT
+    timeline: Optional[List[Tuple[str, float, float, str]]] = None
+    # timeline entries: (stream, start, end, label)
+
+    @property
+    def throughput_speedup_vs(self):
+        return lambda other: other.iteration_time / self.iteration_time
+
+
+class _Link:
+    def __init__(self, speed_factor: float = 1.0):
+        self.free_at = 0.0
+        self.speed = speed_factor   # >1 = slower (multiply durations)
+
+    def transmit(self, ready: float, duration: float) -> Tuple[float, float]:
+        start = max(self.free_at, ready)
+        end = start + duration * self.speed
+        self.free_at = end
+        return start, end
+
+
+def simulate_baseline(
+    times: BucketTimes,
+    policy: BaselinePolicy,
+    n_iterations: int = 12,
+    keep_timeline: bool = False,
+) -> SimResult:
+    n = times.n
+    link = _Link()
+    t = 0.0
+    timeline: List[Tuple[str, float, float, str]] = []
+    comm_done: Dict[int, float] = {}   # bucket -> completion of last sync
+    iter_starts: List[float] = []
+
+    for it in range(n_iterations):
+        iter_starts.append(t)
+        # ---- forward (of this iteration; consumes last iteration's syncs)
+        for b in range(n):
+            if it > 0:
+                if policy.overlap_forward:
+                    t = max(t, comm_done.get(b, 0.0))
+                # non-overlapping DDP handled after backward below
+            s = t
+            t += times.fwd[b]
+            if keep_timeline:
+                timeline.append(("compute", s, t, f"F{b}@{it}"))
+        # ---- backward: produce gradients n-1..0
+        ready: Dict[int, float] = {}
+        for b in range(n - 1, -1, -1):
+            s = t
+            t += times.bwd[b]
+            ready[b] = t
+            if keep_timeline:
+                timeline.append(("compute", s, t, f"B{b}@{it}"))
+        # ---- event-driven link: at each free moment serve the highest-
+        # priority READY bucket (a priority queue never idles the link
+        # while lower-priority gradients are waiting)
+        prio = {b: i for i, b in enumerate(policy.launch_order)}
+        pending = set(range(n))
+        t_link = link.free_at
+        while pending:
+            avail = [b for b in pending if ready[b] <= t_link]
+            if not avail:
+                t_link = min(ready[b] for b in pending)
+                continue
+            b = min(avail, key=lambda x: prio[x])
+            s, e = link.transmit(max(t_link, ready[b]), times.comm[b])
+            t_link = e
+            comm_done[b] = e
+            pending.remove(b)
+            if keep_timeline:
+                timeline.append(("link0", s, e, f"C{b}@{it}"))
+        if not policy.overlap_forward:
+            # PyTorch DDP: optimizer step waits for every all-reduce
+            t = max(t, max(comm_done.values()))
+
+    compute = times.fwd_total + times.bwd_total
+    span = (t - iter_starts[2]) / (n_iterations - 2)  # skip warmup iters
+    return SimResult(
+        name=policy.name,
+        iteration_time=span,
+        compute_time=compute,
+        bubble_fraction=max(0.0, 1.0 - compute / span),
+        updates_per_iteration=1.0,
+        timeline=timeline if keep_timeline else None,
+    )
+
+
+def simulate_deft(
+    times: BucketTimes,
+    plans: Sequence[IterationPlan],
+    mu: float = 1.65,
+    heterogeneous: bool = True,
+    keep_timeline: bool = False,
+    name: str = "deft",
+) -> SimResult:
+    """Run the DeFT plan list through the timeline model.
+
+    Semantics per Algorithm 2: forward-stage comms launch at forward begin
+    and are WaitAll'ed at forward end; backward-stage comms of *old* tasks
+    launch at backward begin, fresh tasks at their gradient-ready time;
+    parameter updates happen at iteration end and wait for every synced
+    task of the completed generation (stale-parameter forward means no
+    other dependency exists)."""
+    n = times.n
+    links = {0: _Link(1.0), 1: _Link(mu)}
+    t = 0.0
+    timeline: List[Tuple[str, float, float, str]] = []
+    iter_starts: List[float] = []
+    pending_done: Dict[Tuple[int, Tuple[int, ...]], float] = {}
+    n_updates = 0
+
+    for plan in plans:
+        it = plan.iteration
+        iter_starts.append(t)
+        fwd_start = t
+        # forward-stage comms: old tasks, resident locally, start at once
+        fwd_ends: List[float] = []
+        for link_id, tasks in ((0, plan.fwd_primary), (1, plan.fwd_secondary)):
+            for task in tasks:
+                s, e = links[link_id].transmit(fwd_start, times.comm[task.bucket])
+                fwd_ends.append(e)
+                pending_done[(task.bucket, task.origins)] = e
+                if keep_timeline:
+                    timeline.append((f"link{link_id}", s, e, f"C{task.bucket}~{task.origins}"))
+        # forward compute (no per-bucket dependency: delayed updates)
+        for b in range(n):
+            s = t
+            t += times.fwd[b]
+            if keep_timeline:
+                timeline.append(("compute", s, t, f"F{b}@{it}"))
+        # WaitAll(order) at forward end
+        if fwd_ends:
+            t = max(t, max(fwd_ends))
+        # backward compute
+        bwd_start = t
+        ready: Dict[int, float] = {}
+        for b in range(n - 1, -1, -1):
+            s = t
+            t += times.bwd[b]
+            ready[b] = t
+            if keep_timeline:
+                timeline.append(("compute", s, t, f"B{b}@{it}"))
+        # backward-stage comms
+        sync_ends: List[float] = []
+        for link_id, tasks in ((0, plan.bwd_primary), (1, plan.bwd_secondary)):
+            for task in tasks:
+                fresh = it in task.origins
+                avail = ready[task.bucket] if fresh else bwd_start
+                s, e = links[link_id].transmit(avail, times.comm[task.bucket])
+                sync_ends.append(e)
+                pending_done[(task.bucket, task.origins)] = e
+                if keep_timeline:
+                    timeline.append((f"link{link_id}", s, e, f"C{task.bucket}~{task.origins}"))
+        # parameter update at iteration end: waits for the generation's syncs
+        if plan.update:
+            n_updates += 1
+            gen_ends = [
+                e
+                for (b, origins), e in pending_done.items()
+                if set(origins) & set(plan.update_origins)
+            ]
+            if gen_ends:
+                t = max(t, max(gen_ends))
+
+    compute = times.fwd_total + times.bwd_total
+    warm = max(2, len(plans) // 4)
+    span = (t - iter_starts[warm]) / max(len(plans) - warm, 1)
+    updates = sum(1 for p in plans[warm:] if p.update) / max(len(plans) - warm, 1)
+    return SimResult(
+        name=name,
+        iteration_time=span,
+        compute_time=compute,
+        bubble_fraction=max(0.0, 1.0 - compute / span),
+        updates_per_iteration=updates,
+        timeline=timeline if keep_timeline else None,
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticDataset, make_batch, batch_spec
+
+__all__ = ["SyntheticDataset", "make_batch", "batch_spec"]

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots the DeFT schedule overlaps
+against: flash attention (causal/window/softcap/GQA), the RG-LRU linear
+recurrence, and the RWKV-6 chunked recurrence.  Each subpackage ships
+kernel.py (pl.pallas_call + BlockSpec), ops.py (dispatching wrapper) and
+ref.py (pure-jnp oracle); tests sweep shapes/dtypes in interpret mode.
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+__all__ = ["flash_attention", "attention_reference", "flash_attention_pallas"]

@@ -1,0 +1,5 @@
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_reference
+from repro.kernels.rglru.kernel import rglru_scan_pallas
+
+__all__ = ["rglru_scan", "rglru_scan_reference", "rglru_scan_pallas"]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the RG-LRU recurrence.
+
+TPU adaptation: the recurrence is elementwise over the width dim (VPU
+work, no MXU), so the kernel tiles (batch, width) across the grid and
+blocks the *sequence* into VMEM-resident chunks; the carried state h
+lives in a VMEM scratch buffer that persists across the sequential chunk
+grid dimension.  Within a chunk the scan is an unrolled first-order
+recurrence over vectors of width ``block_w`` — sequential in time (a
+linear scan is latency-bound by construction) but fully vectorized over
+width, which is the axis TPUs care about.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(b_ref, a_ref, h0_ref, h_out_ref, hfin_ref, state_ref, *,
+                  block_s: int, num_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        at = a_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)
+        h = at * h + bt
+        h_out_ref[0, t, :] = h.astype(h_out_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, state_ref[0])
+    state_ref[0, :] = h
+
+    @pl.when(ic == num_chunks - 1)
+    def _fin():
+        hfin_ref[0, :] = h.astype(hfin_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "block_w", "interpret")
+)
+def rglru_scan_pallas(
+    b: jax.Array,                 # [B, S, W]
+    a: jax.Array,                 # [B, S, W]
+    h0: Optional[jax.Array] = None,
+    *,
+    block_s: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, s, w = b.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    block_s = min(block_s, s)
+    block_w = min(block_w, w)
+    assert s % block_s == 0 and w % block_w == 0
+    nc = s // block_s
+    nw = w // block_w
+    kernel = functools.partial(_rglru_kernel, block_s=block_s, num_chunks=nc)
+    h, hfin = pl.pallas_call(
+        kernel,
+        # width is embarrassingly parallel; chunks are sequential (inner dim)
+        grid=(bsz * nw, nc),
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_s, block_w),
+                lambda i, ic, nw=nw: (i // nw, ic, i % nw),
+            ),
+            pl.BlockSpec(
+                (1, block_s, block_w),
+                lambda i, ic, nw=nw: (i // nw, ic, i % nw),
+            ),
+            pl.BlockSpec((1, block_w), lambda i, ic, nw=nw: (i // nw, i % nw)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, block_s, block_w),
+                lambda i, ic, nw=nw: (i // nw, ic, i % nw),
+            ),
+            pl.BlockSpec((1, block_w), lambda i, ic, nw=nw: (i // nw, i % nw)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(b, a, h0)
+    return h, hfin

@@ -1,0 +1,55 @@
+"""Dispatcher for the RG-LRU scan.
+
+* TPU            -> Pallas kernel (sequence-blocked, state in VMEM).
+* elsewhere      -> ``jax.lax.associative_scan`` (log-depth parallel scan;
+                    also the production path inside pjit since XLA shards
+                    it over batch/width).
+The sequential-scan oracle lives in ref.py for testing.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_scan_pallas
+from repro.kernels.rglru.ref import rglru_scan_reference
+
+
+def _associative(b, a, h0):
+    if h0 is not None:
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None, :].astype(b.dtype), b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh, hh[:, -1]
+
+
+def rglru_scan(
+    b: jax.Array,
+    a: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    impl: Optional[str] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t-1} + b_t. Returns (h [B,S,W], h_final [B,W])."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "associative"
+    b32 = b.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+    if impl == "pallas":
+        return rglru_scan_pallas(b32, a32, h0, interpret=interpret)
+    if impl == "associative":
+        return _associative(b32, a32, h0)
+    if impl == "ref":
+        return rglru_scan_reference(b32, a32, h0)
+    raise ValueError(impl)

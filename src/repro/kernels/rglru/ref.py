@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the width dim.  The oracle is
+a plain sequential ``lax.scan``; the production path uses
+``jax.lax.associative_scan`` (log-depth) and the Pallas kernel blocks the
+sequence with the state held in VMEM.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_reference(
+    b: jax.Array,                 # [B, S, W] input term b_t
+    a: jax.Array,                 # [B, S, W] decay a_t in (0, 1)
+    h0: Optional[jax.Array] = None,  # [B, W]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (h [B,S,W], h_final [B,W])."""
+    bsz, s, w = b.shape
+    init = jnp.zeros((bsz, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    final, hs = jax.lax.scan(
+        step,
+        init,
+        (a.transpose(1, 0, 2).astype(jnp.float32), b.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    return hs.transpose(1, 0, 2), final

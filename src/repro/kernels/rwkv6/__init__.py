@@ -1,0 +1,5 @@
+from repro.kernels.rwkv6.ops import rwkv6_mix
+from repro.kernels.rwkv6.ref import rwkv6_reference
+from repro.kernels.rwkv6.kernel import rwkv6_pallas
+
+__all__ = ["rwkv6_mix", "rwkv6_reference", "rwkv6_pallas"]

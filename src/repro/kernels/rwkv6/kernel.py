@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the RWKV-6 recurrence, sequence-chunked.
+
+TPU adaptation: instead of a token-by-token scan (latency-bound), the
+sequence is processed in chunks of T tokens.  Within a chunk the
+recurrence unrolls into dense matmuls (MXU work) using cumulative
+per-channel decays:
+
+    lw[t]   = sum_{i<=t} log w[i]                  (exclusive for queries)
+    A[t,i]  = (r[t] * exp(lw[t-1])) . (k[i] * exp(-lw[i]))   for i < t
+    A[t,t]  = r[t] . (u * k[t])
+    o       = A @ v  +  (r * exp(lw_excl)) @ S_in
+    S_out   = diag(exp(lw[T-1])) S_in + (k * exp(lw[T-1] - lw))^T @ v
+
+The head state S [D, D] lives in VMEM scratch and persists across the
+sequential chunk grid dimension.  Chunk length is bounded (default 32) so
+``exp(-lw)`` stays within fp32 range for the fastest-decaying channels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+    o_ref, sfin_ref,
+    state_ref,
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)       # [T, D]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)       # [D]
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    lw_inc = jnp.cumsum(logw, axis=0)      # inclusive
+    lw_exc = lw_inc - logw                 # exclusive
+
+    rd = r * jnp.exp(lw_exc)               # [T, D]
+    kd = k * jnp.exp(-lw_inc)
+    a = jax.lax.dot_general(
+        rd, kd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # [T, T]
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ipos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a = jnp.where(ipos < tpos, a, 0.0)     # strict lower triangular
+    diag = jnp.sum(r * (u[None, :] * k), axis=-1)  # [T]
+    a = a + jnp.where(ipos == tpos, diag[:, None], 0.0)
+
+    s_in = state_ref[...]                  # [D, D]
+    o = jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + jax.lax.dot_general(
+        rd, s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0, ...] = o.astype(o_ref.dtype)
+
+    lw_end = lw_inc[-1]                    # [D]
+    k_end = k * jnp.exp(lw_end[None, :] - lw_inc)
+    s_out = jnp.exp(lw_end)[:, None] * s_in + jax.lax.dot_general(
+        k_end, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    state_ref[...] = s_out
+
+    @pl.when(ic == num_chunks - 1)
+    def _fin():
+        sfin_ref[0, ...] = s_out.astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_pallas(
+    r: jax.Array,                # [BH, S, D] (batch*heads flattened)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,                # [BH, D]
+    s0: jax.Array,               # [BH, D, D]
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bh, s, d = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    kernel = functools.partial(_rwkv6_kernel, chunk=chunk, num_chunks=nc)
+    seq_spec = pl.BlockSpec((1, chunk, d), lambda i, ic: (i, ic, 0))
+    o, sfin = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, d), lambda i, ic: (i, 0)),
+            pl.BlockSpec((1, d, d), lambda i, ic: (i, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, d, d), lambda i, ic: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return o, sfin

@@ -1,0 +1,110 @@
+"""Dispatcher for the RWKV-6 time-mix recurrence.
+
+* TPU        -> Pallas chunked kernel.
+* elsewhere  -> chunked-jnp (same math as the kernel: intra-chunk matmuls
+                + lax.scan over chunk states) for long sequences, or the
+                sequential oracle for short ones / decode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import rwkv6_pallas
+from repro.kernels.rwkv6.ref import rwkv6_reference
+
+_CHUNK = 32
+_REF_MAX_SEQ = 128  # sequential scan is fine below this
+
+
+def _chunked_jnp(r, k, v, w, u, s0, chunk: int = _CHUNK):
+    """Chunked formulation in plain jnp (mirrors kernel.py)."""
+    b, s, h, d = r.shape
+    pad = (-s) % chunk
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    sp = r.shape[1]
+    nc = sp // chunk
+
+    def to_chunks(t):
+        return (
+            t.reshape(b, nc, chunk, h, d)
+            .transpose(1, 0, 3, 2, 4)
+            .astype(jnp.float32)
+        )  # [nc, B, H, T, D]
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    s_init = jnp.zeros((b, h, d, d), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    tpos = jnp.arange(chunk)[:, None]
+    ipos = jnp.arange(chunk)[None, :]
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                           # [B,H,T,D]
+        logw = jnp.log(jnp.maximum(wt, 1e-30))
+        lw_inc = jnp.cumsum(logw, axis=2)
+        lw_exc = lw_inc - logw
+        rd = rt * jnp.exp(lw_exc)
+        kd = kt * jnp.exp(-lw_inc)
+        a = jnp.einsum("bhtd,bhid->bhti", rd, kd)
+        a = jnp.where(ipos < tpos, a, 0.0)
+        diag = jnp.sum(rt * (u[None, :, None, :] * kt), axis=-1)
+        a = a + jnp.where(ipos == tpos, diag[..., None], 0.0)
+        o = jnp.einsum("bhti,bhid->bhtd", a, vt) + jnp.einsum(
+            "bhtd,bhdv->bhtv", rd, state
+        )
+        lw_end = lw_inc[:, :, -1:, :]
+        k_end = kt * jnp.exp(lw_end - lw_inc)
+        state = jnp.exp(lw_end[:, :, 0, :])[..., :, None] * state + jnp.einsum(
+            "bhtk,bhtv->bhkv", k_end, vt
+        )
+        return state, o
+
+    final, outs = jax.lax.scan(step, s_init, (rc, kc, vc, wc))
+    o = outs.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, d)[:, :s]
+    return o, final
+
+
+def rwkv6_mix(
+    r: jax.Array,                # [B, S, H, D]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,                # [H, D]
+    s0: Optional[jax.Array] = None,
+    *,
+    impl: Optional[str] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, d = r.shape
+    if impl is None:
+        if jax.default_backend() == "tpu" and s % _CHUNK == 0:
+            impl = "pallas"
+        elif s <= _REF_MAX_SEQ:
+            impl = "ref"
+        else:
+            impl = "chunked"
+    if impl == "ref":
+        return rwkv6_reference(r, k, v, w, u, s0)
+    if impl == "chunked":
+        return _chunked_jnp(r, k, v, w, u, s0)
+    if impl == "pallas":
+        def flat(t):
+            return t.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        s0_ = (
+            jnp.zeros((b * h, d, d), jnp.float32)
+            if s0 is None
+            else s0.reshape(b * h, d, d)
+        )
+        u_ = jnp.broadcast_to(u[None], (b, h, d)).reshape(b * h, d)
+        o, sf = rwkv6_pallas(
+            flat(r), flat(k), flat(v), flat(w), u_, s0_, interpret=interpret
+        )
+        return (
+            o.reshape(b, h, s, d).transpose(0, 2, 1, 3),
+            sf.reshape(b, h, d, d),
+        )
+    raise ValueError(impl)

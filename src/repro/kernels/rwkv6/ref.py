@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the RWKV-6 time-mix recurrence (Finch).
+
+Per head with state S [D_k, D_v]:
+
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+with data-dependent per-channel decay w_t in (0,1).  Plain sequential
+``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_reference(
+    r: jax.Array,                # [B, S, H, D]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,                # [B, S, H, D] decay in (0, 1)
+    u: jax.Array,                # [H, D] bonus
+    s0: Optional[jax.Array] = None,  # [B, H, D, D]
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, d = r.shape
+    state0 = jnp.zeros((b, h, d, d), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs  # [B, H, D]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,Dk,Dv]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, out
+
+    xs = tuple(
+        t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, w)
+    )
+    final, outs = jax.lax.scan(step, state0, xs)
+    return outs.transpose(1, 0, 2, 3), final

@@ -1,0 +1,159 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins for every model input.
+
+Nothing here allocates device memory — parameters/optimizer state come
+from ``jax.eval_shape`` over the real init functions and carry
+``NamedSharding``s, so ``jax.jit(...).lower(**specs)`` sees exactly the
+shapes+shardings a real launch would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import config_for_shape, get_shape
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.data.pipeline import batch_spec
+from repro.models.model import init_cache, init_params
+from repro.optim.optimizers import OptimizerSpec, init_opt_state
+from repro.serve.steps import cache_specs
+from repro.sharding.specs import batch_axes, needs_fsdp, param_rules, spec_tree
+
+
+def _with_shardings(tree, specs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree,
+        specs,
+    )
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg, dtype=dtype), key)
+
+
+def param_shardings_specs(params_sds, cfg: ArchConfig, mesh, multi_pod: bool):
+    rules = param_rules(cfg.name, multi_pod)
+    return spec_tree(params_sds, rules, mesh)
+
+
+def train_input_specs(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh,
+    *,
+    multi_pod: bool = False,
+    opt_spec: Optional[OptimizerSpec] = None,
+    deft: bool = False,
+    accum_devices: int = 1,
+    param_dtype=jnp.bfloat16,
+    opt_dtype=jnp.bfloat16,
+    accum_dtype=jnp.float32,
+    layout: str = "tp",
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(state_specs, batch_specs) for lowering a train step."""
+    from repro.optim.optimizers import adamw
+
+    opt_spec = opt_spec or adamw()
+    params = abstract_params(cfg, dtype=param_dtype)
+    pspecs = spec_tree(params, param_rules(cfg.name, multi_pod, layout), mesh)
+    opt = jax.eval_shape(
+        lambda p: init_opt_state(opt_spec, p, dtype=opt_dtype), params
+    )
+    ospecs = {
+        "step": P(),
+        **{k: pspecs for k in opt if k != "step"},
+    }
+    state = {"params": params, "opt": opt}
+    sspecs = {"params": pspecs, "opt": ospecs}
+    if deft:
+        dp = batch_axes(multi_pod) if not needs_fsdp(cfg.name) else ("pod",)
+        dp_joint = dp if len(dp) > 1 else dp[0]
+        acc = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                (accum_devices,) + l.shape, accum_dtype
+            ),
+            params,
+        )
+        # device axis leads; the rest keeps the parameter's model-axis
+        # sharding so accumulators never replicate what params shard.
+        accspec = jax.tree.map(lambda spec: P(dp_joint, *tuple(spec)), pspecs)
+        state["cur"] = acc
+        state["fut"] = acc
+        sspecs["cur"] = accspec
+        sspecs["fut"] = accspec
+    state = _with_shardings(state, sspecs, mesh)
+
+    batch = batch_spec(cfg, shape.global_batch, shape.seq_len, dtype=param_dtype)
+    dp = batch_axes(multi_pod, layout)
+    dp = dp if len(dp) > 1 else dp[0]
+    bspecs = jax.tree.map(
+        lambda sds: P(*((dp,) + (None,) * (len(sds.shape) - 1))), batch
+    )
+    batch = _with_shardings(batch, bspecs, mesh)
+    return state, batch
+
+
+def serve_input_specs(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh,
+    *,
+    multi_pod: bool = False,
+    param_dtype=jnp.bfloat16,
+    cache_dtype=jnp.bfloat16,
+) -> Dict[str, Any]:
+    """Specs for prefill (tokens + empty cache) or decode (token + full
+    cache + pos)."""
+    params = abstract_params(cfg, dtype=param_dtype)
+    pspecs = param_shardings_specs(params, cfg, mesh, multi_pod)
+    params = _with_shardings(params, pspecs, mesh)
+
+    b = shape.global_batch
+    chunk = shape.seq_len if shape.kind == "prefill" else 1
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, shape.seq_len, dtype=cache_dtype,
+                           prefill_chunk=chunk)
+    )
+    cspecs = cache_specs(cache, mesh, multi_pod)
+    cache = _with_shardings(cache, cspecs, mesh)
+
+    dp = batch_axes(multi_pod)
+    dp = dp if len(dp) > 1 else dp[0]
+    bdim = dp if b % _dp_size(mesh, multi_pod) == 0 else None
+
+    out: Dict[str, Any] = {"params": params, "cache": cache}
+    if shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, shape.seq_len), jnp.int32,
+            sharding=NamedSharding(mesh, P(bdim, None)),
+        )
+    else:
+        out["token"] = jax.ShapeDtypeStruct(
+            (b,), jnp.int32, sharding=NamedSharding(mesh, P(bdim))
+        )
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(mesh, P()))
+    if cfg.modality != "text" and shape.kind == "prefill":
+        # decode reuses the cross-attention K/V cached at prefill
+        out["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_modal_tokens, cfg.d_model), param_dtype,
+            sharding=NamedSharding(mesh, P(bdim, None, None)),
+        )
+    return out
+
+
+def _dp_size(mesh, multi_pod: bool) -> int:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = shape.get("data", 1)
+    if multi_pod:
+        n *= shape.get("pod", 1)
+    return n

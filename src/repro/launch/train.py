@@ -1,0 +1,167 @@
+"""Training driver: DDP baseline or the full DeFT pipeline
+(Profiler -> Solver -> Preserver -> per-phase compiled steps).
+
+On this CPU container it drives reduced configs over the debug mesh (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launch for
+a multi-device mesh); pointed at a TPU slice it drives the same code over
+``make_production_mesh()``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+        --scheduler deft --steps 60
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import save as save_ckpt
+from repro.configs import ARCH_NAMES, get_config, reduce_for_smoke
+from repro.core.bucket import BucketTimes
+from repro.core.deft import plan_deft, solve_schedule
+from repro.core.preserver import WalkParams, check_schedule
+from repro.core.profiler import HardwareModel
+from repro.core.scheduler import SchedulerConfig
+from repro.data.pipeline import SyntheticDataset
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.optim.optimizers import adamw
+from repro.sharding.specs import needs_fsdp
+from repro.train.bucketing import assign_buckets, leaf_bucket_times
+from repro.train.steps import (
+    ddp_train_step,
+    init_train_state,
+    make_deft_step_fns,
+)
+
+
+def build_schedule(
+    params,
+    cfg,
+    *,
+    dp: int,
+    seq_len: int,
+    per_device_batch: int,
+    partition_elems: int,
+    coverage_rate: float = 0.0,
+    heterogeneous: bool = True,
+    mu: float = 1.65,
+    eps: float = 0.01,
+    max_retries: int = 10,
+):
+    """Leaf-bucket profile -> Solver -> Preserver feedback loop.
+
+    coverage_rate > 0 rescales the analytic comm times to that CR — used
+    by examples/tests to reproduce a paper regime (VGG-like CR=2, GPT-2
+    CR=1) on arbitrary model sizes.
+    """
+    bucket_of, nb = assign_buckets(params, cfg, partition_elems)
+    hw = HardwareModel(dp_degree=dp)
+    times = leaf_bucket_times(params, cfg, bucket_of, nb, hw, seq_len,
+                              per_device_batch)
+    if coverage_rate > 0:
+        scale = coverage_rate * (times.fwd_total + times.bwd_total) / max(
+            times.comm_total, 1e-12
+        )
+        times = BucketTimes(times.fwd, times.bwd,
+                            tuple(c * scale for c in times.comm))
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    factor = 1.0
+    for retry in range(max_retries + 1):
+        scfg = SchedulerConfig(heterogeneous=heterogeneous, mu=mu,
+                               capacity_factor=factor)
+        schedule = solve_schedule(times, scfg)
+        verdict = check_schedule(schedule.batch_size_sequence,
+                                 schedule.period, walk, eps=eps)
+        if verdict.ok:
+            break
+        factor *= 1.2
+    return bucket_of, nb, times, schedule, verdict, factor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="gemma2-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--scheduler", choices=["ddp", "deft"], default="deft")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--coverage-rate", type=float, default=1.8,
+                    help="synthetic CR for the DeFT schedule (0 = analytic)")
+    ap.add_argument("--partition-elems", type=int, default=200_000)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--data", type=int, default=0, help="debug mesh data axis")
+    ap.add_argument("--model", type=int, default=0, help="debug mesh model axis")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="", help="checkpoint dir (optional)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    n_dev = jax.device_count()
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        data = args.data or max(n_dev // 2, 1)
+        model = args.model or (n_dev // data)
+        mesh = make_debug_mesh(data=data, model=model)
+    dp = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    fsdp = needs_fsdp(cfg.name)
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(args.seed)
+
+    print(f"arch={cfg.name} params={cfg.total_params():,} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    ds = SyntheticDataset(cfg, args.seed, args.batch, args.seq)
+
+    with jax.set_mesh(mesh):
+        if args.scheduler == "ddp":
+            state = init_train_state(key, cfg, opt)
+            step_fn = jax.jit(
+                lambda s, b: ddp_train_step(s, b, cfg=cfg, opt_spec=opt,
+                                            fsdp=fsdp)
+            )
+            fns, period = None, 1
+        else:
+            state = init_train_state(key, cfg, opt, deft=True,
+                                     accum_devices=dp)
+            bucket_of, nb, times, schedule, verdict, factor = build_schedule(
+                state["params"], cfg, dp=dp, seq_len=args.seq,
+                per_device_batch=max(args.batch // dp, 1),
+                partition_elems=args.partition_elems,
+                coverage_rate=args.coverage_rate,
+            )
+            print(f"deft: {nb} buckets, CR={times.coverage_rate:.2f}, "
+                  f"period={schedule.period}, "
+                  f"updates/period={schedule.updates_per_period}, "
+                  f"batch-size seq={schedule.batch_size_sequence}, "
+                  f"preserver ratio={verdict.ratio:.4f} "
+                  f"(capacity x{factor:.2f})")
+            fns = make_deft_step_fns(cfg, opt, schedule, bucket_of, mesh,
+                                     fsdp=fsdp)
+            period = schedule.period
+
+        t0 = time.time()
+        for step in range(args.steps):
+            batch = next(ds)
+            if args.scheduler == "ddp":
+                state, m = step_fn(state, batch)
+            else:
+                state, m = fns[step % period](state, batch)
+            if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss={float(m['loss']):.4f} "
+                      f"updated={bool(m['updated'])}")
+        dt = time.time() - t0
+        print(f"{args.steps} steps in {dt:.1f}s "
+              f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+
+    if args.ckpt:
+        path = save_ckpt(args.ckpt, args.steps, state)
+        print(f"checkpoint -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,430 @@
+"""Full model: init / forward / prefill / decode over any ArchConfig.
+
+Layer-stack assembly
+--------------------
+The decoder stack is organized as
+
+    prefix  — the first ``moe.first_k_dense`` layers (dense-FFN variants of
+              the pattern), unrolled;
+    stack   — floor((n - prefix - tail) / period) whole pattern periods,
+              with per-position weights stacked over periods and the
+              period body run under ``jax.lax.scan`` (HLO size stays
+              O(period), which is what keeps 512-device dry-run compiles
+              tractable at 100 layers);
+    tail    — the remainder layers, unrolled.
+
+Gradients w.r.t. stacked leaves come back stacked, so one leaf == one
+DeFT gradient bucket covering all periods of that weight — matching the
+paper's "less than 20 items" knapsack regime.
+
+Encoder-decoder (seamless) carries a separate scanned encoder over the
+(stub-frontend) modality embeddings; VLM cross-attention layers consume
+the modality embeddings directly as memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models.blocks import apply_block, init_block, init_block_cache
+from repro.models.common import (
+    apply_norm,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    init_norm,
+    softcap,
+)
+from repro.sharding import constrain
+from repro.util.flags import scan_unroll_enabled
+
+
+# ---------------------------------------------------------------------------
+# Stack layout
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    prefix_specs: Tuple[LayerSpec, ...]
+    period: int
+    n_periods: int
+    tail_specs: Tuple[LayerSpec, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return (
+            len(self.prefix_specs)
+            + self.period * self.n_periods
+            + len(self.tail_specs)
+        )
+
+
+def stack_layout(cfg: ArchConfig) -> StackLayout:
+    specs = cfg.layer_specs()
+    n = len(specs)
+    prefix = cfg.moe.first_k_dense if cfg.moe else 0
+    p = cfg.pattern_period
+    n_periods = (n - prefix) // p
+    tail = n - prefix - n_periods * p
+    return StackLayout(
+        prefix_specs=specs[:prefix],
+        period=p,
+        n_periods=n_periods,
+        tail_specs=specs[n - tail :] if tail else (),
+    )
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    lay = stack_layout(cfg)
+    keys = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": {"table": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)},
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)}
+
+    # prefix (dense-FFN variants; deepseek-v2 layer 0 keeps the big d_ff)
+    kp = jax.random.split(keys[2], max(len(lay.prefix_specs), 1))
+    params["prefix"] = tuple(
+        init_block(
+            kp[i], cfg, dataclasses.replace(spec, ffn="dense"),
+            dense_ffn_width=cfg.d_ff, dtype=dtype,
+        )
+        for i, spec in enumerate(lay.prefix_specs)
+    )
+
+    # scanned stack: one stacked tree per pattern position
+    stack = []
+    for j in range(lay.period):
+        spec = cfg.layer_pattern[j]
+        kj = jax.random.split(jax.random.fold_in(keys[3], j), max(lay.n_periods, 1))
+        blocks = [
+            init_block(kj[i], cfg, spec, dtype=dtype) for i in range(lay.n_periods)
+        ]
+        stack.append(_stack_trees(blocks) if blocks else {})
+    params["stack"] = tuple(stack)
+
+    kt = jax.random.split(keys[4], max(len(lay.tail_specs), 1))
+    params["tail"] = tuple(
+        init_block(kt[i], cfg, spec, dtype=dtype)
+        for i, spec in enumerate(lay.tail_specs)
+    )
+
+    if cfg.is_encoder_decoder:
+        ke = jax.random.split(keys[5], cfg.n_encoder_layers + 1)
+        enc_blocks = [
+            init_block(ke[i], cfg, LayerSpec("attn", "dense"), dtype=dtype)
+            for i in range(cfg.n_encoder_layers)
+        ]
+        params["encoder"] = {
+            "stack": _stack_trees(enc_blocks),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32,
+    prefill_chunk: int = 1,
+) -> Dict:
+    kw = dict(dtype=dtype, prefill_chunk=prefill_chunk)
+    lay = stack_layout(cfg)
+    cache: Dict[str, Any] = {
+        "prefix": tuple(
+            init_block_cache(cfg, dataclasses.replace(s, ffn="dense"), batch,
+                             max_len, **kw)
+            for s in lay.prefix_specs
+        ),
+        "stack": tuple(
+            _stack_trees(
+                [
+                    init_block_cache(cfg, cfg.layer_pattern[j], batch, max_len,
+                                     **kw)
+                    for _ in range(lay.n_periods)
+                ]
+            )
+            if lay.n_periods
+            else {}
+            for j in range(lay.period)
+        ),
+        "tail": tuple(
+            init_block_cache(cfg, s, batch, max_len, **kw)
+            for s in lay.tail_specs
+        ),
+    }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def encode(params, cfg: ArchConfig, modal_embeds: jax.Array,
+           unroll: bool = False) -> jax.Array:
+    """Run the (bidirectional) encoder over stub-frontend embeddings."""
+    assert cfg.is_encoder_decoder
+    x = constrain(modal_embeds, ("batch", "modal", "embed"))
+    spec = LayerSpec("attn", "dense")
+
+    def body(x, block_p):
+        x, _, _ = apply_block(block_p, x, cfg=cfg, spec=spec, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(
+        body, x, params["encoder"]["stack"],
+        unroll=cfg.n_encoder_layers if (unroll or scan_unroll_enabled()) else 1,
+    )
+    return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                  # [B, S] int32
+    *,
+    memory: Optional[jax.Array] = None,  # [B, M, d] modality/encoder memory
+    cache: Optional[Dict] = None,
+    pos: int | jax.Array = 0,
+    kv_length: Optional[jax.Array] = None,
+    fill_cross_cache: bool = False,
+    capacity_factor: float = 1.25,
+    remat: bool = True,
+    head: bool = True,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits [B,S,V], new_cache, aux_loss); with ``head=False``
+    the final-norm hidden states [B,S,d] replace the logits (the chunked
+    loss path applies the LM head itself)."""
+    lay = stack_layout(cfg)
+    x = params["embed"]["table"][tokens]
+    if cfg.embedding_multiplier != 1.0:
+        x = x * jnp.asarray(cfg.embedding_multiplier, x.dtype)
+    x = constrain(x, ("batch", None, "embed"))
+    aux = jnp.zeros((), jnp.float32)
+
+    block_kw = dict(
+        cfg=cfg, pos=pos, memory=memory, fill_cross_cache=fill_cross_cache,
+        kv_length=kv_length, capacity_factor=capacity_factor,
+    )
+
+    def run_block(p, x, spec, c):
+        return apply_block(p, x, spec=spec, cache=c, **block_kw)
+
+    maybe_ckpt = (
+        jax.checkpoint(run_block, static_argnums=(2,)) if remat else run_block
+    )
+
+    new_prefix = []
+    for i, spec in enumerate(lay.prefix_specs):
+        spec_d = dataclasses.replace(spec, ffn="dense")
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, a = maybe_ckpt(params["prefix"][i], x, spec_d, c)
+        new_prefix.append(nc)
+        aux = aux + a
+
+    def period_body(carry, xs):
+        x, aux = carry
+        stacked_p, stacked_c = xs
+        new_cs = []
+        for j in range(lay.period):
+            c = stacked_c[j] if stacked_c is not None else None
+            x, nc, a = maybe_ckpt(stacked_p[j], x, cfg.layer_pattern[j], c)
+            aux = aux + a
+            new_cs.append(nc if nc is not None else {})
+        return (x, aux), tuple(new_cs)
+
+    new_stack = None
+    if lay.n_periods:
+        stacked_c = tuple(cache["stack"]) if cache is not None else None
+        xs = (tuple(params["stack"]), stacked_c)
+        if cache is None:
+            xs = (tuple(params["stack"]), None)
+            (x, aux), _ = jax.lax.scan(
+                lambda c, p: (period_body(c, (p, None))[0], None), (x, aux),
+                xs[0],
+                unroll=lay.n_periods if (unroll or scan_unroll_enabled()) else 1,
+            )
+        else:
+            (x, aux), new_stack = jax.lax.scan(
+                period_body, (x, aux), xs,
+                unroll=lay.n_periods if (unroll or scan_unroll_enabled()) else 1,
+            )
+
+    new_tail = []
+    for i, spec in enumerate(lay.tail_specs):
+        c = cache["tail"][i] if cache is not None else None
+        x, nc, a = maybe_ckpt(params["tail"][i], x, spec, c)
+        new_tail.append(nc)
+        aux = aux + a
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if not head:
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "prefix": tuple(new_prefix),
+                "stack": new_stack if new_stack is not None else cache["stack"],
+                "tail": tuple(new_tail),
+            }
+        return x, new_cache, aux
+    logits = head_logits(params, cfg, x)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "prefix": tuple(new_prefix),
+            "stack": new_stack if new_stack is not None else cache["stack"],
+            "tail": tuple(new_tail),
+        }
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# LM head + loss
+# ---------------------------------------------------------------------------
+def head_logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Final-norm hidden states -> vocab logits (+ softcap)."""
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["head"]["w"]
+    logits = constrain(logits, ("batch", None, "vocab"))
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+def chunked_ce(
+    params,
+    cfg: ArchConfig,
+    x: jax.Array,                     # [B, S, d] final-norm hidden states
+    targets: jax.Array,               # [B, S] int32
+    mask: Optional[jax.Array],        # [B, S] or None
+    chunk: int,
+    unroll: bool = False,
+) -> jax.Array:
+    """Sequence-chunked LM head + cross entropy.
+
+    The [B, S, V] logits tensor dominates train-step memory at production
+    shapes (gemma2-2b train_4k: ~4 TB of f32 logits+softmax temporaries
+    globally); computing head+CE per sequence chunk under jax.checkpoint
+    caps the live logits buffer at [B, chunk, V] in both passes."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else (
+            jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+        )
+    elif mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    n = x.shape[1] // chunk
+    xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)
+    ys = targets.reshape(b, n, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, n, chunk).swapaxes(0, 1)
+    xs = constrain(xs, (None, "batch", None, "embed"))
+
+    @jax.checkpoint
+    def body(carry, sl):
+        xc, yc, mc = sl
+        xc = constrain(xc, ("batch", None, "embed"))
+        logits = head_logits(params, cfg, xc).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ys, ms), unroll=n if (unroll or scan_unroll_enabled()) else 1,
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Train / serve entry points
+# ---------------------------------------------------------------------------
+def loss_fn(
+    params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    capacity_factor: float = 1.25,
+    remat: bool = True,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ MoE aux). batch: tokens, labels, and the
+    optional stub-frontend 'memory' embeddings (audio frames / image
+    patches).  ``loss_chunk > 0`` switches to the sequence-chunked LM-head
+    path (memory: see chunked_ce)."""
+    memory = batch.get("memory")
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, memory, unroll=unroll)
+    if loss_chunk:
+        x, _, aux = forward(
+            params, cfg, batch["tokens"], memory=memory,
+            capacity_factor=capacity_factor, remat=remat, head=False,
+            unroll=unroll,
+        )
+        mask = batch.get("mask")
+        loss = chunked_ce(
+            params, cfg, x[:, :-1], batch["labels"][:, 1:],
+            mask[:, 1:] if mask is not None else None, loss_chunk,
+            unroll=unroll,
+        )
+    else:
+        logits, _, aux = forward(
+            params, cfg, batch["tokens"], memory=memory,
+            capacity_factor=capacity_factor, remat=remat, unroll=unroll,
+        )
+        loss = cross_entropy_loss(
+            logits[:, :-1], batch["labels"][:, 1:], batch.get("mask")
+        )
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def prefill(
+    params, cfg: ArchConfig, tokens: jax.Array, cache: Dict,
+    *, memory: Optional[jax.Array] = None, capacity_factor: float = 1.25,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """Fill the cache with a prompt; returns (last-position logits, cache)."""
+    if cfg.is_encoder_decoder and memory is not None:
+        memory = encode(params, cfg, memory, unroll=unroll)
+    logits, cache, _ = forward(
+        params, cfg, tokens, memory=memory, cache=cache, pos=0,
+        fill_cross_cache=True, capacity_factor=capacity_factor, remat=False,
+        unroll=unroll,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(
+    params, cfg: ArchConfig, token: jax.Array, cache: Dict, pos: jax.Array,
+    *, kv_length: Optional[jax.Array] = None, capacity_factor: float = 1.25,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """One decode step: token [B] int32, absolute position ``pos``."""
+    logits, cache, _ = forward(
+        params, cfg, token[:, None], cache=cache, pos=pos, kv_length=kv_length,
+        capacity_factor=capacity_factor, remat=False, unroll=unroll,
+    )
+    return logits[:, 0], cache

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+TPU/expert-parallel design: the routed experts' weights are stacked
+[E, d, d_e] and sharded over the 'model' mesh axis ('experts' logical
+dim).  Tokens are *gathered* into per-expert queues of static capacity C
+(sort-free scatter build), processed with one batched einsum over the
+expert dim, and scatter-added back weighted by the router probabilities.
+This keeps the compute O(tokens * top_k * expert_flops * capacity_factor)
+— not O(tokens * n_experts) — and lowers to a clean gather/einsum/scatter
+HLO that XLA shards as expert parallelism (the combine emits the expected
+all-reduce over the expert axis).
+
+Tokens overflowing an expert's capacity are dropped (standard practice;
+the residual connection carries them).  Shared experts (DeepSeek-V2) are
+plain dense FFNs applied to every token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, gated_act
+from repro.sharding import constrain
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> Dict:
+    me = cfg.moe
+    d = cfg.d_model
+    de = me.d_expert or cfg.d_ff
+    keys = jax.random.split(key, 5)
+    e = me.n_experts
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(keys[0], d, e, dtype),
+        # routed experts live under their own key so the sharding rules can
+        # tell the [E, d, de] expert tensors from (scan-stacked) dense FFNs
+        "experts": {
+            "gate": (jax.random.normal(keys[1], (e, d, de)) * std).astype(dtype),
+            "up": (jax.random.normal(keys[2], (e, d, de)) * std).astype(dtype),
+            "down": (
+                jax.random.normal(keys[3], (e, de, d)) / math.sqrt(de)
+            ).astype(dtype),
+        },
+    }
+    if me.n_shared_experts:
+        ks = jax.random.split(keys[4], 3)
+        ds = de * me.n_shared_experts
+        p["shared"] = {
+            "gate": dense_init(ks[0], d, ds, dtype),
+            "up": dense_init(ks[1], d, ds, dtype),
+            "down": dense_init(ks[2], ds, d, dtype),
+        }
+    return p
+
+
+def apply_moe(
+    p: Dict,
+    x: jax.Array,                 # [B, S, d]
+    *,
+    cfg,
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,d], aux load-balance loss scalar)."""
+    me = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = me.n_experts, me.experts_per_token
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                # [T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction of tokens per expert (x k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = me.router_aux_coef * e * jnp.sum(density / k * mean_prob)
+
+    cap = int(max(1, math.ceil(t * k / e * capacity_factor)))
+
+    # position of each (token, choice) in its expert queue
+    choice_e = top_e.reshape(-1)                          # [T*k]
+    choice_t = jnp.repeat(jnp.arange(t), k)
+    choice_w = top_p.reshape(-1)
+    onehot = jax.nn.one_hot(choice_e, e, dtype=jnp.int32)  # [T*k, E]
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)       # exclusive count
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)              # [T*k]
+
+    # scatter the token ids into per-expert queues; pos >= cap (overflow)
+    # is out of bounds and dropped by the scatter itself
+    slot_token = jnp.full((e, cap), t, jnp.int32)          # t = sentinel
+    slot_token = slot_token.at[choice_e, pos].set(choice_t, mode="drop")
+    slot_token = constrain(slot_token, ("experts", None))
+    # gather tokens (sentinel reads row of zeros)
+    xp = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xp[slot_token]                                    # [E, C, d]
+    xe = constrain(xe, ("experts", None, None))
+
+    # every per-expert intermediate is pinned to the expert-parallel axis —
+    # left unconstrained, the SPMD partitioner sometimes replicates the
+    # whole [E, C, d_ff] activation (hundreds of GiB at 160 experts)
+    ex = p["experts"]
+    gate = constrain(jnp.einsum("ecd,edf->ecf", xe, ex["gate"]),
+                     ("experts", None, None))
+    up = constrain(jnp.einsum("ecd,edf->ecf", xe, ex["up"]),
+                   ("experts", None, None))
+    act = (
+        gated_act(cfg.ffn_activation, gate, up)
+        if cfg.ffn_activation in ("silu", "gelu")
+        else jax.nn.gelu(up, approximate=True)
+    )
+    act = constrain(act, ("experts", None, None))
+    ye = jnp.einsum("ecf,efd->ecd", act, ex["down"])       # [E, C, d]
+    ye = constrain(ye, ("experts", None, None))
+
+    # combine: scatter-add back to tokens with routing weights
+    slot_w = jnp.zeros((e, cap), jnp.float32)
+    slot_w = slot_w.at[choice_e, pos].set(choice_w, mode="drop")
+    out = jnp.zeros((t + 1, d), jnp.float32)
+    out = out.at[slot_token.reshape(-1)].add(
+        (ye * slot_w[..., None]).reshape(e * cap, d), mode="drop"
+    )
+    y = out[:t].astype(x.dtype)
+
+    if me.n_shared_experts:
+        sh = p["shared"]
+        # 'batch' on the flattened token dim (batch-major) — None would
+        # force replication (see common.apply_ffn)
+        g = constrain(xt @ sh["gate"], ("batch", "ff"))
+        u = constrain(xt @ sh["up"], ("batch", "ff"))
+        y = y + gated_act(cfg.ffn_activation, g, u) @ sh["down"]
+
+    return constrain(y.reshape(b, s, d), ("batch", None, "embed")), aux

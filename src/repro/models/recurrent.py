@@ -1,0 +1,282 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin / RecurrentGemma) and RWKV-6
+(Finch) time-mix + channel-mix.
+
+Both are linear recurrences with O(1)-per-token state, which is what makes
+the ``long_500k`` decode shape feasible: the decode state is
+
+* RG-LRU — hidden h [B, W] + causal-conv ring [B, conv_width-1, W];
+* RWKV-6 — per-head matrix state S [B, H, D, D] + the token-shift buffers.
+
+Training uses ``jax.lax.associative_scan`` for the RG-LRU (the recurrence
+is an affine map, so it parallelizes log-depth) and a chunked
+``jax.lax.scan`` for RWKV-6 (data-dependent per-channel decay; the Pallas
+kernel in kernels/rwkv6 blocks it over sequence with state in VMEM).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin)
+# ---------------------------------------------------------------------------
+_C_RGLRU = 8.0  # the paper's fixed scalar c
+
+
+def init_rglru_block(key, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    w = cfg.resolved_lru_width
+    heads = cfg.n_heads
+    bh = w // heads
+    keys = jax.random.split(key, 7)
+    # Lambda init so that a = exp(-c*softplus(L)*r) starts near 0.9..0.999
+    lam = jax.random.uniform(keys[0], (w,), minval=0.9, maxval=0.999)
+    a_param = jnp.log(jnp.exp(-jnp.log(lam) / _C_RGLRU) - 1.0)  # inv softplus
+    return {
+        "wx": dense_init(keys[1], d, w, dtype),
+        "wgate": dense_init(keys[2], d, w, dtype),
+        "conv_w": (jax.random.normal(keys[3], (cfg.conv1d_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # block-diagonal gate projections: [heads, bh, bh]
+        "w_rgate": (jax.random.normal(keys[4], (heads, bh, bh)) / math.sqrt(bh)).astype(dtype),
+        "w_igate": (jax.random.normal(keys[5], (heads, bh, bh)) / math.sqrt(bh)).astype(dtype),
+        "a_param": a_param.astype(dtype),
+        "wo": dense_init(keys[6], w, d, dtype),
+    }
+
+
+def make_rglru_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }
+
+
+def _causal_conv1d(x, conv_w, conv_b, state: Optional[jax.Array]):
+    """Per-channel causal conv. x [B,S,W]; conv_w [K,W]. state: last K-1
+    inputs from the previous call (decode) or None (train, zero history)."""
+    k = conv_w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xx = jnp.concatenate([hist, x], axis=1)  # [B, S+K-1, W]
+    out = sum(
+        xx[:, i : i + x.shape[1]] * conv_w[i][None, None, :] for i in range(k)
+    )
+    new_state = xx[:, -(k - 1) :] if k > 1 else hist[:, :0]
+    return out + conv_b[None, None, :], new_state
+
+
+def _block_diag_gate(y, w_gate, heads):
+    """y [B,S,W] -> sigmoid(block-diag proj). w_gate [H, bh, bh]."""
+    b, s, w = y.shape
+    bh = w // heads
+    yh = y.reshape(b, s, heads, bh)
+    g = jnp.einsum("bshi,hij->bshj", yh, w_gate)
+    return jax.nn.sigmoid(g.reshape(b, s, w).astype(jnp.float32))
+
+
+def apply_rglru(
+    p: Dict,
+    x: jax.Array,                  # [B, S, d]
+    *,
+    cfg,
+    state: Optional[Dict] = None,  # decode state
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    heads = cfg.n_heads
+    gate = jax.nn.gelu((x @ p["wgate"]).astype(jnp.float32), approximate=True)
+    xr = x @ p["wx"]
+    xr = constrain(xr, ("batch", None, "lru"))
+    y, new_conv = _causal_conv1d(
+        xr, p["conv_w"], p["conv_b"], state["conv"] if state else None
+    )
+    r = _block_diag_gate(y, p["w_rgate"], heads)          # recurrence gate
+    i = _block_diag_gate(y, p["w_igate"], heads)          # input gate
+    log_a = -_C_RGLRU * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) normalizer, computed stably via log
+    norm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = norm * (i * y.astype(jnp.float32))
+    from repro.kernels.rglru import rglru_scan  # dispatcher (pallas/ref)
+
+    h0 = state["h"] if state else None
+    h, h_final = rglru_scan(bt, a, h0)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_final, "conv": new_conv}
+    out = (h * gate).astype(x.dtype) @ p["wo"]
+    return constrain(out, ("batch", None, "embed")), new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+_DDLERP_RANK = 32
+
+
+def init_rwkv_timemix(key, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    keys = jax.random.split(key, 14)
+    p = {
+        # token-shift base mixes (mu_x for the shared ddlerp + per-proj mus)
+        "mu_base": (jax.random.uniform(keys[0], (5, d)) * 0.5).astype(dtype),
+        # ddlerp low-rank adapters: A [d, 5*rank], B [5, rank, d]
+        "ddlerp_a": dense_init(keys[1], d, 5 * _DDLERP_RANK, dtype),
+        "ddlerp_b": (jax.random.normal(keys[2], (5, _DDLERP_RANK, d)) * 0.01).astype(dtype),
+        "wr": dense_init(keys[3], d, d, dtype),
+        "wk": dense_init(keys[4], d, d, dtype),
+        "wv": dense_init(keys[5], d, d, dtype),
+        "wg": dense_init(keys[6], d, d, dtype),
+        # decay: w = exp(-exp(w0 + lora)); w0 init for half-life spread
+        "w0": jnp.linspace(-6.0, -0.5, d).astype(dtype),
+        "w_lora_a": dense_init(keys[7], d, 64, dtype),
+        "w_lora_b": (jax.random.normal(keys[8], (64, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(keys[9], (h, hd)) * 0.1).astype(dtype),  # bonus
+        "wo": dense_init(keys[10], d, d, dtype),
+        "ln_scale": jnp.ones((d,), dtype),   # per-head groupnorm scale
+        "ln_bias": jnp.zeros((d,), dtype),
+    }
+    return p
+
+
+def make_rwkv_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),   # last token (time mix)
+        "shift_cm": jnp.zeros((batch, d), dtype),   # last token (channel mix)
+    }
+
+
+def _token_shift(x, last: Optional[jax.Array]):
+    """Return previous-token tensor: [B,S,d]; position 0 uses `last`."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+def _ddlerp(p, x, prev):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    dx = prev - x
+    base = x[:, :, None, :] + dx[:, :, None, :] * p["mu_base"][None, None]
+    # low-rank data-dependent adjustment
+    lora = jnp.tanh(x @ p["ddlerp_a"])                     # [B,S,5*rank]
+    b_, s_, _ = lora.shape
+    lora = lora.reshape(b_, s_, 5, _DDLERP_RANK)
+    adj = jnp.einsum("bsfr,frd->bsfd", lora, p["ddlerp_b"])
+    mixed = base + dx[:, :, None, :] * adj                 # [B,S,5,d]
+    return [mixed[:, :, j] for j in range(5)]
+
+
+def rwkv_recurrence(r, k, v, w, u, s0: Optional[jax.Array] = None):
+    """RWKV-6 linear recurrence, per head.
+
+    r,k,v: [B,S,H,D]; w: [B,S,H,D] decay in (0,1); u: [H,D] bonus.
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t         (S: [D_k, D_v])
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    Returns o [B,S,H,D], final state [B,H,D,D].
+    """
+    b, s, h, dd = r.shape
+    s_init = jnp.zeros((b, h, dd, dd), jnp.float32) if s0 is None else s0
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs  # each [B,H,D]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,Dk,Dv]
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv
+        )
+        new_state = wt[..., :, None] * state + kv
+        return new_state, out
+
+    xs = tuple(
+        t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, w)
+    )
+    final, outs = jax.lax.scan(step, s_init, xs)
+    return outs.transpose(1, 0, 2, 3), final  # [B,S,H,D]
+
+
+def apply_rwkv_timemix(
+    p: Dict,
+    x: jax.Array,
+    *,
+    cfg,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    from repro.kernels.rwkv6 import rwkv6_mix  # dispatcher (pallas/ref)
+
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    prev = _token_shift(x, state["shift_tm"] if state else None)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, prev)
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, s, h, hd)
+    r = constrain(r, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    s0 = state["s"] if state else None
+    o, s_final = rwkv6_mix(r, k, v, w, p["u"].astype(jnp.float32), s0)
+    # per-head group norm
+    o = o.reshape(b, s, h, hd)
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(b, s, d) * p["ln_scale"].astype(jnp.float32) + p[
+        "ln_bias"
+    ].astype(jnp.float32)
+    out = (o.astype(x.dtype) * g) @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["s"] = s_final
+        new_state["shift_tm"] = x[:, -1, :]
+    return constrain(out, ("batch", None, "embed")), new_state
+
+
+def init_rwkv_channelmix(key, cfg, dtype=jnp.float32) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(keys[0], (d,)) * 0.5).astype(dtype),
+        "wk": dense_init(keys[1], d, f, dtype),
+        "wv": dense_init(keys[2], f, d, dtype),
+    }
+
+
+def apply_rwkv_channelmix(
+    p: Dict,
+    x: jax.Array,
+    *,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    prev = _token_shift(x, state["shift_cm"] if state else None)
+    xk = x + (prev - x) * p["mu_k"][None, None]
+    k = jnp.square(jax.nn.relu(constrain(xk @ p["wk"], ("batch", None, "ff"))))
+    out = constrain(k @ p["wv"], ("batch", None, "embed"))
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["shift_cm"] = x[:, -1, :]
+    return out, new_state

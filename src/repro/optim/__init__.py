@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    OptimizerSpec,
+    adamw,
+    apply_updates,
+    init_opt_state,
+    sgd_momentum,
+)
+
+__all__ = [
+    "OptimizerSpec",
+    "adamw",
+    "sgd_momentum",
+    "init_opt_state",
+    "apply_updates",
+]

@@ -1,0 +1,118 @@
+"""Optimizers in pure JAX (pytree in, pytree out) with first-class support
+for DeFT's delayed updates.
+
+DeFT's update with a merged gradient of k batches is *identical math* to
+gradient accumulation: the accumulated gradient sum is divided by k before
+the optimizer transform (see ``apply_updates(..., grad_scale=1/k)``).  The
+optimizer step counter advances once per applied update, not per data
+batch — exactly how PyTorch-side gradient accumulation behaves, which is
+the equivalence Preserver reasons about.
+
+State is a pytree mirroring params, suitable for ZeRO-1-style sharding of
+(m, v) over the DP axis via PartitionSpecs from sharding/specs.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    name: str                       # 'adamw' | 'sgd'
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9           # sgd only
+    grad_clip: float = 1.0          # global-norm clip; 0 disables
+
+
+def adamw(lr: float = 1e-3, **kw) -> OptimizerSpec:
+    return OptimizerSpec("adamw", lr=lr, **kw)
+
+
+def sgd_momentum(lr: float = 1e-2, momentum: float = 0.9, **kw) -> OptimizerSpec:
+    return OptimizerSpec("sgd", lr=lr, momentum=momentum, **kw)
+
+
+def init_opt_state(spec: OptimizerSpec, params, dtype=jnp.float32) -> Dict[str, Any]:
+    """Moment buffers default to f32; giant models may pass bf16 (the
+    dry-run does for the 236B/400B MoEs) — apply_updates computes in f32
+    and casts back to the stored dtype."""
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype), params)
+    if spec.name == "adamw":
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros(), "v": zeros()}
+    if spec.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros()}
+    raise ValueError(spec.name)
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(
+    spec: OptimizerSpec,
+    params,
+    grads,
+    state: Dict[str, Any],
+    *,
+    grad_scale: float | jax.Array = 1.0,
+    lr_scale: float | jax.Array = 1.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    """One optimizer step.  grad_scale multiplies the raw gradient first
+    (DeFT: 1/(dp_size * k) for a k-merged, psum'd gradient)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * grad_scale, grads)
+    if spec.grad_clip:
+        gn = _global_norm(grads)
+        clip = jnp.minimum(1.0, spec.grad_clip / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * clip, grads)
+
+    step = state["step"] + 1
+    lr = spec.lr * lr_scale
+
+    if spec.name == "adamw":
+        b1, b2 = spec.beta1, spec.beta2
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_.astype(jnp.float32) + (1 - b1) * g).astype(m_.dtype),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_.astype(jnp.float32) + (1 - b2) * g * g).astype(v_.dtype),
+            state["v"], grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            m_ = m_.astype(jnp.float32)
+            v_ = v_.astype(jnp.float32)
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + spec.eps)
+            if spec.weight_decay:
+                u = u + spec.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    if spec.name == "sgd":
+        m = jax.tree.map(
+            lambda m_, g: (spec.momentum * m_.astype(jnp.float32) + g).astype(m_.dtype),
+            state["m"], grads,
+        )
+
+        def upd(p, m_):
+            u = m_
+            if spec.weight_decay:
+                u = u + spec.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m), {"step": step, "m": m}
+
+    raise ValueError(spec.name)

@@ -1,0 +1,14 @@
+"""Serving substrate: prefill / decode steps and the batched engine."""
+from repro.serve.steps import (
+    decode_serve_step,
+    make_serve_cache,
+    prefill_serve_step,
+    cache_shardings,
+)
+
+__all__ = [
+    "make_serve_cache",
+    "prefill_serve_step",
+    "decode_serve_step",
+    "cache_shardings",
+]

@@ -1,0 +1,135 @@
+"""Prefill / decode steps for the inference shapes.
+
+``decode_32k`` and ``long_500k`` lower :func:`decode_serve_step` — ONE new
+token against a cache of ``seq_len`` — while ``prefill_32k`` lowers the
+batched :func:`prefill_serve_step`.
+
+KV-cache sharding: the cache dominates decode memory (e.g.
+llama-3.2-vision-90b at decode_32k holds ~1.7 TB of global KV), so full-
+attention caches shard their *sequence* dimension over the 'model' axis
+in addition to batch over DP — decode attention is a cache-bandwidth
+problem and sequence sharding parallelizes exactly the cache reads (XLA
+inserts the cross-shard softmax reductions).  Ring-buffer (sliding-
+window) caches and recurrent states are O(window)/O(1) and stay
+batch-sharded only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.model import decode_step, init_cache, prefill
+from repro.sharding import logical_rules, rules_pjit
+
+
+def make_serve_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    *,
+    dtype=jnp.bfloat16,
+    prefill_chunk: int = 1,
+):
+    return init_cache(cfg, batch, max_len, dtype=dtype, prefill_chunk=prefill_chunk)
+
+
+def prefill_serve_step(
+    params,
+    tokens: jax.Array,
+    cache,
+    *,
+    cfg: ArchConfig,
+    memory: Optional[jax.Array] = None,
+    multi_pod: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """Batched prompt ingestion; returns (last-position logits, cache)."""
+    with logical_rules(rules_pjit(multi_pod, fsdp=False)):
+        return prefill(params, cfg, tokens, cache, memory=memory, unroll=unroll)
+
+
+def decode_serve_step(
+    params,
+    token: jax.Array,          # [B] int32
+    cache,
+    pos,                       # scalar int32 — absolute position
+    *,
+    cfg: ArchConfig,
+    kv_length: Optional[jax.Array] = None,
+    multi_pod: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """One decode step: [B] token ids in, [B, V] logits + new cache out."""
+    with logical_rules(rules_pjit(multi_pod, fsdp=False)):
+        return decode_step(params, cfg, token, cache, pos, kv_length=kv_length,
+                           unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (for jit in_shardings / dry-run specs)
+# ---------------------------------------------------------------------------
+def _cache_leaf_spec(path_keys, shape, dp, model_axis: str, mesh) -> P:
+    """Batch over DP; full-attention cache *sequence* over 'model' when it
+    tiles (decode is cache-bandwidth-bound; sequence sharding parallelizes
+    the cache reads); everything else replicated.
+
+    Scan-stacked cache leaves (under the 'stack' subtree) carry a leading
+    period dim, shifting batch to dim 1 and sequence to dim 2.
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh_shape.get(a, 1)
+    specs = [None] * len(shape)
+    bdim = 1 if "stack" in path_keys else 0
+    if (
+        len(shape) > bdim
+        and shape[bdim] % max(dp_size, 1) == 0
+        and shape[bdim] >= dp_size
+    ):
+        specs[bdim] = dp
+    name = path_keys[-1] if path_keys else ""
+    seq_sharded_names = ("k", "v", "ckv", "krope")
+    sdim = bdim + 1
+    msize = mesh_shape.get(model_axis, 1)
+    if (
+        name in seq_sharded_names
+        and "cross" not in name
+        and len(shape) > sdim
+        and shape[sdim] % msize == 0
+        and shape[sdim] >= msize
+    ):
+        specs[sdim] = model_axis
+    return P(*specs)
+
+
+def _path_keys(path):
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        else:
+            keys.append(str(p))
+    return tuple(keys)
+
+
+def cache_specs(cache, mesh, multi_pod: bool = False):
+    dp = ("pod", "data") if multi_pod else "data"
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(
+            _path_keys(path), tuple(leaf.shape), dp, "model", mesh
+        ),
+        cache,
+    )
+
+
+def cache_shardings(cache, mesh, multi_pod: bool = False):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), cache_specs(cache, mesh, multi_pod)
+    )

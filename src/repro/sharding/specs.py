@@ -1,0 +1,198 @@
+"""Parameter / optimizer / batch PartitionSpecs per architecture and mode.
+
+Every parameter leaf gets *logical* axis names from its key path (the
+naming convention of repro.models); ``spec_tree`` resolves them through a
+rule table against a concrete mesh, silently dropping any axis whose
+dimension does not divide the mesh axis product (e.g. 36 heads over a
+16-way 'model' axis -> replicated heads, sharded FFN; seamless's 256206
+vocab -> replicated embedding).  Divisibility-driven fallback keeps every
+(arch x mesh) combination compiling without per-arch special cases, and
+the dropped axes are visible in the roofline discussion.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding import AxisVal
+
+
+# --------------------------------------------------------------------------
+# Logical axes per parameter leaf
+# --------------------------------------------------------------------------
+def _base_axes(path: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical dim names for a leaf, from its path (innermost name +
+    context), EXCLUDING any stacked leading period dim."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    in_ffn = "ffn" in path or "shared" in path
+    axes: Tuple[Optional[str], ...]
+
+    if name == "table":
+        axes = ("vocab", "embed")
+    elif parent == "head" and name == "w":
+        axes = ("embed", "vocab")
+    elif parent == "experts" and name in ("gate", "up"):  # MoE [E, d, de]
+        axes = ("experts", "embed", None)
+    elif parent == "experts" and name == "down":
+        axes = ("experts", None, "embed")
+    elif name in ("gate", "up"):
+        axes = ("embed", "ff")
+    elif name == "down":
+        axes = ("ff", "embed")
+    elif name == "router":
+        axes = ("embed", None)
+    elif name == "wq":
+        axes = ("embed", "heads")
+    elif name in ("wk", "wv") and in_ffn:             # rwkv channel-mix
+        axes = ("embed", "ff") if name == "wk" else ("ff", "embed")
+    elif name in ("wk", "wv"):
+        axes = ("embed", "kv")
+    elif name in ("wr", "wg"):                         # rwkv projections
+        axes = ("embed", "heads")
+    elif name == "wo":
+        axes = ("heads", "embed")
+    elif name in ("wx", "wgate"):                      # rglru in-projections
+        axes = ("embed", "lru")
+    elif name in ("wdq", "wdkv"):                      # MLA down-projections
+        axes = ("embed", None)
+    elif name in ("wuq", "wuk", "wuv"):                # MLA up-projections
+        axes = (None, "heads")
+    elif name == "conv_w":
+        axes = (None, "lru")
+    elif name in ("conv_b", "a_param"):
+        axes = ("lru",)
+    elif name in ("w_rgate", "w_igate"):
+        axes = ("heads", None, None)
+    elif name == "ddlerp_a":
+        axes = ("embed", None)
+    elif name == "ddlerp_b":
+        axes = (None, None, "embed")
+    elif name == "w_lora_a":
+        axes = ("embed", None)
+    elif name == "w_lora_b":
+        axes = (None, "embed")
+    elif name == "u":
+        axes = ("heads", None)
+    elif name == "mu_base":
+        axes = (None, "embed")
+    elif name == "w0":
+        axes = ("embed",)
+    else:
+        axes = tuple([None] * ndim)  # norms, gates, scalars
+
+    # stacked scan leaves carry a leading period dim
+    if len(axes) == ndim - 1:
+        axes = (None,) + axes
+    if len(axes) != ndim:
+        axes = tuple([None] * ndim)
+    return axes
+
+
+def _mesh_axis_size(mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    names = (axis,) if isinstance(axis, str) else axis
+    # mesh.shape works for both Mesh and AbstractMesh
+    shape = dict(mesh.shape)
+    return int(np.prod([shape[n] for n in names]))
+
+
+def leaf_spec(
+    path: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    rules: Dict[str, AxisVal],
+    mesh,
+) -> P:
+    axes = _base_axes(path, len(shape))
+    out = []
+    for dim, name in zip(shape, axes):
+        mapped = rules.get(name) if name else None
+        if mapped is not None and dim % _mesh_axis_size(mesh, mapped) != 0:
+            mapped = None  # divisibility fallback -> replicate this dim
+        out.append(mapped)
+    return P(*out)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        else:
+            keys.append(str(p))
+    return tuple(keys)
+
+
+def spec_tree(tree, rules: Dict[str, AxisVal], mesh):
+    """PartitionSpec pytree for a parameter (or optimizer-state) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf_spec(
+            _path_keys(path), tuple(leaf.shape), rules, mesh
+        ),
+        tree,
+    )
+
+
+def sharding_tree(tree, rules: Dict[str, AxisVal], mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), spec_tree(tree, rules, mesh)
+    )
+
+
+# --------------------------------------------------------------------------
+# Per-arch distribution policy
+# --------------------------------------------------------------------------
+# Archs whose parameters cannot replicate across the DP axis on a 16 GB
+# v5e chip (bf16 params / 16-way TP > ~4 GB) use FSDP ('embed' dim sharded
+# over 'data'); DeFT's explicit-DP masked-psum path needs DP-replicated
+# params, so FSDP archs take the hierarchical DeFT-RS path instead
+# (explicit psums over 'pod' only, multi-pod meshes).
+FSDP_ARCHS = frozenset(
+    {"deepseek-v2-236b", "llama4-maverick-400b-a17b", "llama-3.2-vision-90b"}
+)
+
+
+def needs_fsdp(arch_name: str) -> bool:
+    return arch_name.split("-smoke")[0] in FSDP_ARCHS
+
+
+def param_rules(
+    arch_name: str, multi_pod: bool, layout: str = "tp"
+) -> Dict[str, AxisVal]:
+    """Rules used for *parameter storage* shardings (pjit boundary).
+
+    layout='tp'  — tensor-parallel over 'model' (default; FSDP over 'data'
+                   for the three giant archs).
+    layout='dp'  — pure data parallelism: weights fully replicated, batch
+                   over every mesh axis.  A beyond-paper optimization for
+                   small archs whose TP activation all-reduces dominate
+                   the collective term (see EXPERIMENTS.md §Perf); also
+                   the layout closest to the paper's own DP-only setting.
+    """
+    if layout == "dp":
+        assert not needs_fsdp(arch_name), "dp layout cannot replicate >90B"
+        return {k: None for k in
+                ("embed", "heads", "kv", "ff", "vocab", "experts", "lru")}
+    fsdp = needs_fsdp(arch_name)
+    return {
+        "embed": ("data",) if fsdp else None,
+        "heads": "model",
+        "kv": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "lru": "model",
+    }
+
+
+def batch_axes(multi_pod: bool, layout: str = "tp") -> Tuple[str, ...]:
+    if layout == "dp":
+        return ("pod", "data", "model") if multi_pod else ("data", "model")
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,27 @@
+"""Training substrate: gradient bucketing over real parameter leaves and
+the compiled train steps (baseline DDP and DeFT per-phase executables)."""
+from repro.train.bucketing import (
+    assign_buckets,
+    leaf_bucket_times,
+    ordered_leaf_indices,
+)
+from repro.train.steps import (
+    TrainState,
+    ddp_train_step,
+    deft_phase_step,
+    deft_rs_phase_step,
+    init_train_state,
+    make_deft_step_fns,
+)
+
+__all__ = [
+    "assign_buckets",
+    "leaf_bucket_times",
+    "ordered_leaf_indices",
+    "TrainState",
+    "init_train_state",
+    "ddp_train_step",
+    "deft_phase_step",
+    "deft_rs_phase_step",
+    "make_deft_step_fns",
+]

@@ -1,0 +1,128 @@
+"""Gradient bucketing over actual parameter-tree leaves.
+
+The analytical profiler (core/profiler.py) buckets by *layer* for the
+paper-figure studies; the JAX train step needs buckets over the real
+pytree leaves (scan-stacked weights), ordered input->output the way DDP's
+reverse-registration order would see them:
+
+    embed -> encoder -> prefix blocks -> stack (pattern positions) ->
+    tail blocks -> final_norm -> head
+
+One stacked leaf covers every period of that weight, so leaf-bucket
+counts land in the paper's "< 20 items" knapsack regime naturally.
+``assign_buckets`` greedily fills buckets to ``partition_elems``;
+``leaf_bucket_times`` derives each bucket's fwd/bwd/comm seconds from the
+same HardwareModel the Solver uses, with MoE leaves weighted by their
+active fraction (top-k / n_experts).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.bucket import BucketTimes
+from repro.core.profiler import HardwareModel
+
+_GROUP_ORDER = {
+    "embed": 0,
+    "encoder": 1,
+    "prefix": 2,
+    "stack": 3,
+    "tail": 4,
+    "final_norm": 5,
+    "head": 6,
+}
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        else:
+            keys.append(str(p))
+    return tuple(keys)
+
+
+def ordered_leaf_indices(params) -> List[int]:
+    """Indices into tree_flatten(params) leaf order, re-ordered to model
+    input->output traversal."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    keyed = []
+    for i, (path, leaf) in enumerate(flat):
+        keys = _path_keys(path)
+        group = _GROUP_ORDER.get(keys[0], 9)
+        sub = 0
+        if keys[0] in ("prefix", "stack", "tail") and len(keys) > 1:
+            try:
+                sub = int(keys[1])
+            except ValueError:
+                sub = 0
+        keyed.append((group, sub, i))
+    keyed.sort(key=lambda t: (t[0], t[1]))
+    return [i for (_, _, i) in keyed]
+
+
+def leaf_active_fraction(cfg: ArchConfig, keys: Tuple[str, ...]) -> float:
+    """Fraction of a leaf's elements doing matmul work per token (MoE
+    routed experts: top-k of E)."""
+    if cfg.moe and "experts" in keys and keys[-1] in ("gate", "up", "down"):
+        return cfg.moe.experts_per_token / cfg.moe.n_experts
+    return 1.0
+
+
+def assign_buckets(
+    params,
+    cfg: ArchConfig,
+    partition_elems: int = 50_000_000,
+) -> Tuple[Tuple[int, ...], int]:
+    """Greedy fill in model order.  Returns (bucket_of_leaf aligned with
+    tree_flatten leaf order, n_buckets); bucket 0 is input-most."""
+    leaves = jax.tree_util.tree_flatten(params)[0]
+    order = ordered_leaf_indices(params)
+    bucket_of = [0] * len(leaves)
+    b, acc = 0, 0
+    for idx in order:
+        n = int(np.prod(leaves[idx].shape))
+        bucket_of[idx] = b
+        acc += n
+        if acc >= partition_elems:
+            b += 1
+            acc = 0
+    n_buckets = b + (1 if acc > 0 else 0)
+    n_buckets = max(n_buckets, 1)
+    # if the last bucket ended exactly on a boundary, b overshoots by one
+    n_buckets = max(set(bucket_of)) + 1
+    return tuple(bucket_of), n_buckets
+
+
+def leaf_bucket_times(
+    params,
+    cfg: ArchConfig,
+    bucket_of_leaf: Sequence[int],
+    n_buckets: int,
+    hw: HardwareModel,
+    seq_len: int,
+    per_device_batch: int,
+) -> BucketTimes:
+    """Analytical fwd/bwd/comm seconds per leaf-bucket."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    tokens = per_device_batch * seq_len
+    fwd = [0.0] * n_buckets
+    comm_elems = [0] * n_buckets
+    for i, (path, leaf) in enumerate(flat):
+        keys = _path_keys(path)
+        b = bucket_of_leaf[i]
+        elems = int(np.prod(leaf.shape))
+        active = leaf_active_fraction(cfg, keys)
+        flops = 2.0 * elems * active * tokens if leaf.ndim >= 2 else 0.0
+        fwd[b] += hw.compute_time(flops)
+        comm_elems[b] += elems
+    bwd = [2.0 * f for f in fwd]
+    comm = [hw.allreduce_time(e) for e in comm_elems]
+    return BucketTimes(tuple(fwd), tuple(bwd), tuple(comm))

@@ -1,0 +1,4 @@
+"""Small shared utilities."""
+from repro.util.flags import scan_unroll_enabled, unroll_scans
+
+__all__ = ["unroll_scans", "scan_unroll_enabled"]

