@@ -13,6 +13,7 @@ def main() -> None:
         fig15_bandwidth,
         fig16_partition_size,
         roofline,
+        runtime_bench,
         table1_coverage_rates,
         table2_bucket_times,
         table4_multilink,
@@ -27,6 +28,8 @@ def main() -> None:
         ("fig15 (bandwidth)", fig15_bandwidth.run),
         ("fig16 (partition size)", fig16_partition_size.run),
         ("roofline (dry-run)", roofline.run),
+        ("runtime (fused DeftRuntime + solver, BENCH_runtime.json)",
+         runtime_bench.run),
     ]
     t0 = time.time()
     failures = 0

@@ -1,0 +1,233 @@
+"""DeftRuntime perf benchmark: fused-bucket runtime vs the seed per-leaf
+implementation, plus solver planning time with/without memoization.
+
+Emits machine-readable ``BENCH_runtime.json`` (steps/s, compile time,
+solver planning time, collectives-per-phase) so the perf trajectory is
+tracked across PRs.  Two train-loop scenarios, each in its own
+subprocess:
+
+* ``smoke`` — the smoke DeFT train loop exactly as ``repro.launch.train
+  --smoke --scheduler deft`` runs it on this host (single device).  The
+  fused runtime wins on graph leanness (per-bucket buffers instead of
+  per-leaf accumulator ops) and buffer donation (params/opt/accumulators
+  update in place instead of being copied every step).
+* ``dp4`` — 4 forced host devices so the per-bucket vs per-leaf gradient
+  collectives are real inter-device operations.
+
+The solver benchmark runs in-process on a paper-scale bucket profile
+(comm times in the 10..300 ms range — the regime the production planner
+faces; microsecond toy instances make the DP trivially cheap and would
+understate the memoization win).
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import subprocess
+import sys
+import time
+
+_STEPS = int(os.environ.get("BENCH_RUNTIME_STEPS", "30"))
+_OUT = os.environ.get("BENCH_RUNTIME_OUT", "BENCH_runtime.json")
+
+
+def _inner(devices: int) -> dict:
+    if devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}"
+        )
+    import jax
+
+    import repro  # noqa: F401  (jax compat shims)
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core.bucket import BucketTimes
+    from repro.core.deft import solve_schedule
+    from repro.core.profiler import HardwareModel
+    from repro.core.scheduler import SchedulerConfig
+    from repro.data.pipeline import make_batch
+    from repro.optim.optimizers import adamw
+    from repro.train import (
+        DeftRuntime,
+        assign_buckets,
+        build_bucket_layout,
+        init_train_state,
+        leaf_bucket_times,
+        make_deft_step_fns,
+    )
+
+    cfg = reduce_for_smoke(get_config("qwen3-4b"))
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    dp = jax.device_count()
+    mesh = jax.make_mesh((dp, 1), ("data", "model"))
+    B, S = max(4, dp), 32
+
+    probe = init_train_state(key, cfg, opt)
+    bucket_of, nb = assign_buckets(probe["params"], cfg,
+                                   partition_elems=150_000)
+    times = leaf_bucket_times(probe["params"], cfg, bucket_of, nb,
+                              HardwareModel(dp_degree=max(dp, 2)), S,
+                              max(B // dp, 1))
+    scale = 1.8 * (times.fwd_total + times.bwd_total) / max(
+        times.comm_total, 1e-12
+    )
+    times = BucketTimes(times.fwd, times.bwd,
+                        tuple(c * scale for c in times.comm))
+    sched = solve_schedule(times, SchedulerConfig())
+    layout = build_bucket_layout(probe["params"], bucket_of, nb)
+    batch = make_batch(cfg, 0, 0, B, S)
+
+    def bench_loop(step_of, state, n):
+        for i in range(sched.period):        # warmup one full period
+            state, m = step_of(i, state, batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for i in range(n):
+            state, m = step_of(i, state, batch)
+        jax.block_until_ready(m["loss"])
+        return n / (time.perf_counter() - t0)
+
+    with mesh:
+        # ---- seed implementation: per-leaf psums, tree accumulators,
+        # no donation, compile-on-first-dispatch ------------------------
+        t0 = time.perf_counter()
+        fns = make_deft_step_fns(cfg, opt, sched, bucket_of, mesh)
+        state_l = init_train_state(key, cfg, opt, deft=True,
+                                   accum_devices=dp)
+        sps_legacy = bench_loop(
+            lambda i, s, b: fns[i % sched.period](s, b), state_l, _STEPS
+        )
+        legacy_wall = time.perf_counter() - t0
+
+        # ---- fused runtime: bucket collectives + donation + AOT cache -
+        t0 = time.perf_counter()
+        rt = DeftRuntime(cfg, opt, sched, layout, mesh)
+        state_f = rt.init_state(key)
+        compile_s = sum(rt.compile(state_f, batch).values())
+        sps_fused = bench_loop(rt.step, state_f, _STEPS)
+        fused_wall = time.perf_counter() - t0
+
+    coll = rt.collectives_per_phase()
+    per_leaf = [
+        sum(
+            len(layout.leaves[b]) for b in range(nb)
+            if (ph.route_new[b] == "sync" and ph.rotate) or ph.sync_cur[b]
+        )
+        for ph in sched.phases
+    ]
+    return {
+        "host_devices": dp,
+        "model": {"name": cfg.name, "params": int(cfg.total_params()),
+                  "n_leaves": layout.n_leaves, "n_buckets": nb},
+        "schedule": {"period": sched.period,
+                     "updates_per_period": sched.updates_per_period},
+        "steps_timed": _STEPS,
+        "steps_per_s_fused": sps_fused,
+        "steps_per_s_legacy": sps_legacy,
+        "speedup_fused_vs_legacy": sps_fused / sps_legacy,
+        "compile_s_fused_aot": compile_s,
+        "wall_s_fused_total": fused_wall,
+        "wall_s_legacy_total": legacy_wall,
+        "collectives_per_phase_fused": [
+            c["primary"] + c["secondary"] for c in coll
+        ],
+        "collectives_per_phase_legacy_per_leaf": per_leaf,
+    }
+
+
+def _bench_solver() -> dict:
+    """Planning time of the two-stage Solver over the 96-iteration
+    horizon, memoized vs unmemoized, on a paper-scale profile."""
+    from repro.core.bucket import BucketTimes
+    from repro.core.deft import solve_schedule
+    from repro.core.knapsack import (
+        clear_knapsack_caches,
+        knapsack_cache_info,
+        set_knapsack_memoization,
+    )
+    from repro.core.scheduler import SchedulerConfig
+
+    rng = random.Random(0)
+    n = 12
+    fwd = tuple(rng.uniform(0.001, 0.05) for _ in range(n))
+    bwd = tuple(2 * f for f in fwd)
+    comm = tuple(rng.uniform(0.01, 0.3) for _ in range(n))
+    times = BucketTimes(fwd, bwd, comm)
+    scfg = SchedulerConfig()
+    reps = 5
+
+    prev = set_knapsack_memoization(False)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        solve_schedule(times, scfg)
+    plan_unmemo = (time.perf_counter() - t0) / reps
+
+    set_knapsack_memoization(True)
+    clear_knapsack_caches()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        solve_schedule(times, scfg)
+    plan_memo = (time.perf_counter() - t0) / reps
+    cache = knapsack_cache_info()
+    set_knapsack_memoization(prev)
+    return {
+        "n_buckets": n,
+        "horizon_reps": reps,
+        "plan_s_unmemoized": plan_unmemo,
+        "plan_s_memoized": plan_memo,
+        "speedup": plan_unmemo / max(plan_memo, 1e-12),
+        "cache_hits": cache.hits,
+        "cache_misses": cache.misses,
+    }
+
+
+def run() -> None:
+    """Benchmark section entry point (benchmarks/run.py)."""
+    t0 = time.time()
+    results: dict = {"solver": _bench_solver()}
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    for name, devices in (("smoke", 1), ("dp4", 4)):
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--inner",
+             str(devices)],
+            env=env, capture_output=True, text=True, timeout=1800,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"runtime bench ({name}) failed:\n{proc.stderr[-2000:]}"
+            )
+        results[name] = json.loads(proc.stdout.splitlines()[-1])
+
+    tmp = _OUT + ".tmp"
+    json.dump(results, open(tmp, "w"), indent=1)
+    os.replace(tmp, _OUT)
+
+    for name in ("smoke", "dp4"):
+        r = results[name]
+        print(f"runtime_{name}_steps_per_s_fused,"
+              f"{1e6 / r['steps_per_s_fused']:.0f},"
+              f"{r['steps_per_s_fused']:.3f} steps/s")
+        print(f"runtime_{name}_steps_per_s_legacy,"
+              f"{1e6 / r['steps_per_s_legacy']:.0f},"
+              f"{r['steps_per_s_legacy']:.3f} steps/s")
+        print(f"runtime_{name}_speedup,{r['speedup_fused_vs_legacy']:.2f},"
+              f"fused vs per-leaf on {r['host_devices']} device(s)")
+        print(f"runtime_{name}_collectives_per_phase,"
+              f"{max(r['collectives_per_phase_fused'])},"
+              f"legacy per-leaf "
+              f"{max(r['collectives_per_phase_legacy_per_leaf'])}")
+    s = results["solver"]
+    print(f"solver_plan_us_memoized,{s['plan_s_memoized'] * 1e6:.0f},"
+          f"{s['speedup']:.1f}x vs unmemoized "
+          f"({s['plan_s_unmemoized'] * 1e3:.0f} ms)")
+    print(f"# BENCH_runtime.json written in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--inner":
+        json.dump(_inner(int(sys.argv[2])), sys.stdout)
+        print()
+    else:
+        run()

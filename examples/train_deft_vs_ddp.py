@@ -33,12 +33,13 @@ from repro.core.policies import pytorch_ddp
 from repro.data.pipeline import SyntheticDataset
 from repro.optim.optimizers import adamw, init_opt_state
 from repro.train import (
+    DeftRuntime,
     assign_buckets,
+    build_bucket_layout,
     init_train_state,
     leaf_bucket_times,
-    make_deft_step_fns,
+    make_ddp_step,
 )
-from repro.train.steps import ddp_train_step
 
 
 def main() -> None:
@@ -71,7 +72,7 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
 
     # ---- DeFT schedule at the requested coverage rate ----
-    state_d = init_train_state(key, cfg, opt, deft=True, accum_devices=dp)
+    state_d = init_train_state(key, cfg, opt)
     bucket_of, nb = assign_buckets(state_d["params"], cfg,
                                    partition_elems=1_000_000)
     hw = HardwareModel(dp_degree=max(dp, 2))
@@ -106,11 +107,17 @@ def main() -> None:
           f"(speedup {r_ddp.iteration_time/r_deft.iteration_time:.2f}x)")
 
     # ---- real training, same data order ----
+    # Both paths run through the donated production executables (runtime
+    # fused phases / donated DDP step), so params and optimizer state
+    # update in place; the two states must NOT share arrays (a donated
+    # buffer is consumed), hence separate init_state/init_opt_state calls.
+    layout = build_bucket_layout(state_d["params"], bucket_of, nb)
+    runtime = DeftRuntime(cfg, opt, schedule, layout, mesh)
     state_r = {"params": state_d["params"],
                "opt": init_opt_state(opt, state_d["params"])}
-    ddp_fn = jax.jit(lambda s, b: ddp_train_step(s, b, cfg=cfg, opt_spec=opt))
+    state_d = runtime.init_state(key)
+    ddp_fn = make_ddp_step(cfg, opt)
     with jax.set_mesh(mesh):
-        fns = make_deft_step_fns(cfg, opt, schedule, bucket_of, mesh)
         ds_d = SyntheticDataset(cfg, args.seed, args.batch, args.seq)
         ds_r = SyntheticDataset(cfg, args.seed, args.batch, args.seq)
         log_every = max(args.steps // 15, 1)
@@ -121,7 +128,7 @@ def main() -> None:
         for step in range(args.steps):
             bd = next(ds_d)
             br = next(ds_r)
-            state_d, md = fns[step % schedule.period](state_d, bd)
+            state_d, md = runtime.step(step, state_d, bd)
             state_r, mr = ddp_fn(state_r, br)
             ddp_hist.append(float(mr["loss"]))
             deft_hist.append(float(md["loss"]))

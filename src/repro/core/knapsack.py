@@ -19,6 +19,7 @@ weight), the knapsack capacity is merged *computation time*.  Three solvers:
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -30,35 +31,45 @@ _SCALE = 1e6  # seconds -> integer microseconds for exact DP
 # at the paper's scales (ms..s bucket times).
 _MAX_DP_CELLS = 1_000_000
 
+# The Solver re-solves near-identical knapsack instances every iteration
+# of its 96-step horizon (same bucket times, a handful of distinct
+# capacities), and plan_deft's Preserver feedback loop repeats the whole
+# horizon up to 10 times.  Memoizing the integer-domain DP short-circuits
+# all of that; results are EXACT cache hits (keys are the already-scaled
+# integer weights + capacity, so there is no float-tolerance issue).
+_MEMO_ENABLED = True
+_MEMO_SIZE = 1 << 14
+
+
+def set_knapsack_memoization(enabled: bool) -> bool:
+    """Toggle the DP memo caches (benchmarks/tests); returns prior state."""
+    global _MEMO_ENABLED
+    prev = _MEMO_ENABLED
+    _MEMO_ENABLED = bool(enabled)
+    return prev
+
+
+def clear_knapsack_caches() -> None:
+    _naive_knapsack_int.cache_clear()
+
+
+def knapsack_cache_info():
+    """functools cache stats of the memoized DP core."""
+    return _naive_knapsack_int.cache_info()
+
 
 def _to_int(xs: Sequence[float]) -> List[int]:
     return [max(0, int(round(x * _SCALE))) for x in xs]
 
 
-def naive_knapsack(times: Sequence[float], capacity: float) -> List[int]:
-    """Exact 0/1 knapsack (value == weight). Returns selected item indices.
+@functools.lru_cache(maxsize=_MEMO_SIZE)
+def _naive_knapsack_int(w: Tuple[int, ...], cap: int) -> Tuple[int, ...]:
+    """Exact 0/1 DP over integer weights (value == weight); memoized.
 
-    Falls back to a density-greedy if the DP table would be unreasonably
-    large (never happens at paper scale: <20 items, <1 s capacities)."""
-    n = len(times)
-    if n == 0 or capacity <= 0:
-        return []
-    w = _to_int(times)
-    # round (not truncate) so an exactly-fitting item is not rejected by
-    # float noise; weights above use the same rounding
-    cap = int(round(capacity * _SCALE))
-    if cap <= 0:
-        return []
-    # Rescale to keep the DP table bounded (profiled capacities are
-    # hundreds of ms = ~1e6 integer cells; the table stays a few MB).
-    # Nonzero items stay >= 1 after rescaling — a coarsened-to-zero item
-    # is NOT free and must still compete for capacity.
-    while n * cap > _MAX_DP_CELLS and cap > 1:
-        w = [max(x // 10, 1) if x > 0 else 0 for x in w]
-        cap //= 10
-    # vectorized classic 0/1 DP: `cand` reads the pre-update row, so each
-    # item is used at most once; `choice` records per-item improvements
-    # for the backtrack.
+    vectorized classic 0/1 DP: `cand` reads the pre-update row, so each
+    item is used at most once; `choice` records per-item improvements
+    for the backtrack."""
+    n = len(w)
     dp = np.zeros(cap + 1, np.int64)
     choice = np.zeros((n, cap + 1), bool)
     for i in range(n):
@@ -82,6 +93,35 @@ def naive_knapsack(times: Sequence[float], capacity: float) -> List[int]:
             if c < 0:
                 c = 0
     sel.reverse()
+    return tuple(sel)
+
+
+def naive_knapsack(times: Sequence[float], capacity: float) -> List[int]:
+    """Exact 0/1 knapsack (value == weight). Returns selected item indices.
+
+    The DP runs on microsecond-scaled integers and is memoized across
+    calls (the scheduler solves near-identical instances every horizon
+    iteration — see ``set_knapsack_memoization``)."""
+    n = len(times)
+    if n == 0 or capacity <= 0:
+        return []
+    w = _to_int(times)
+    # round (not truncate) so an exactly-fitting item is not rejected by
+    # float noise; weights above use the same rounding
+    cap = int(round(capacity * _SCALE))
+    if cap <= 0:
+        return []
+    # Rescale to keep the DP table bounded (profiled capacities are
+    # hundreds of ms = ~1e6 integer cells; the table stays a few MB).
+    # Nonzero items stay >= 1 after rescaling — a coarsened-to-zero item
+    # is NOT free and must still compete for capacity.
+    while n * cap > _MAX_DP_CELLS and cap > 1:
+        w = [max(x // 10, 1) if x > 0 else 0 for x in w]
+        cap //= 10
+    if _MEMO_ENABLED:
+        sel = list(_naive_knapsack_int(tuple(w), cap))
+    else:
+        sel = list(_naive_knapsack_int.__wrapped__(tuple(w), cap))
     # rounding error is bounded by one (possibly rescaled) integer unit
     # per item; keep the matching tolerance
     unit = max(round(capacity * _SCALE), 1) / max(cap, 1) / _SCALE
@@ -115,10 +155,16 @@ def recursive_knapsack(
     if n == 1 or _depth > 30:
         return order1
     shrink = bwd_times[n - 2] if n - 2 < len(bwd_times) else 0.0
+    s1 = sum(comm_times[i] for i in order1)
+    # Fast path: the recursive branch solves with capacity shrunk by the
+    # predecessor's backward time, so its total can never exceed
+    # remain_time - shrink.  If the plain solve already saturates that,
+    # recursing cannot win — skip the whole subtree.
+    if s1 >= remain_time - shrink:
+        return order1
     order2 = recursive_knapsack(
         comm_times[: n - 1], remain_time - shrink, bwd_times, _depth + 1
     )
-    s1 = sum(comm_times[i] for i in order1)
     s2 = sum(comm_times[i] for i in order2)
     return order1 if s1 >= s2 else order2
 

@@ -43,9 +43,14 @@ def sharded_flash_decode(
     s_loc = s_total // n_shards
     length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
 
-    def body(qb, kb, vb, lenb):
-        shard = jax.lax.axis_index(axis)
-        kpos = shard * s_loc + jnp.arange(s_loc)            # global positions
+    # Global KV positions enter as an operand sharded like the cache
+    # instead of being derived from jax.lax.axis_index: axis_index lowers
+    # to a PartitionId instruction that the SPMD partitioner rejects
+    # inside partial-manual regions (jaxlib < 0.5), and an explicit iota
+    # operand partitions fine everywhere.
+    positions = jnp.arange(s_total, dtype=jnp.int32)
+
+    def body(qb, kb, vb, lenb, kpos):
         q5 = qb.reshape(b, sq, kvh, h // kvh, d).astype(jnp.float32)
         q5 = q5 / jnp.sqrt(d)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kb.astype(jnp.float32))
@@ -68,9 +73,9 @@ def sharded_flash_decode(
         body,
         mesh=mesh,
         in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
-                  P()),
+                  P(), P(axis)),
         out_specs=P(),
         axis_names={axis},
         check_vma=False,
-    )(q, k, v, length)
+    )(q, k, v, length, positions)
     return out.astype(q.dtype)

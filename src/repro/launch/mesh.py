@@ -7,14 +7,26 @@ from __future__ import annotations
 
 import jax
 
+from repro.util.jax_compat import install as _install_jax_compat
+
+_install_jax_compat()
+
+
+def _auto_axis_types(n: int):
+    """axis_types kwarg value across jax versions.
+
+    Newer jax exposes ``jax.sharding.AxisType`` natively; on older jax the
+    compat shim provides a stand-in and ``jax.make_mesh`` ignores the
+    kwarg (0.4.x meshes are implicitly all-Auto).
+    """
+    return (jax.sharding.AxisType.Auto,) * n
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single v5e pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, axis_types=_auto_axis_types(len(axes)))
 
 
 def make_debug_mesh(data: int = 4, model: int = 2, pod: int = 0):
@@ -23,9 +35,8 @@ def make_debug_mesh(data: int = 4, model: int = 2, pod: int = 0):
         return jax.make_mesh(
             (pod, data, model),
             ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+            axis_types=_auto_axis_types(3),
         )
     return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        (data, model), ("data", "model"), axis_types=_auto_axis_types(2)
     )

@@ -24,16 +24,18 @@ from repro.core.deft import plan_deft, solve_schedule
 from repro.core.preserver import WalkParams, check_schedule
 from repro.core.profiler import HardwareModel
 from repro.core.scheduler import SchedulerConfig
-from repro.data.pipeline import SyntheticDataset
+from repro.data.pipeline import SyntheticDataset, batch_spec
+from repro.models.model import init_params
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.optim.optimizers import adamw
 from repro.sharding.specs import needs_fsdp
-from repro.train.bucketing import assign_buckets, leaf_bucket_times
-from repro.train.steps import (
-    ddp_train_step,
-    init_train_state,
-    make_deft_step_fns,
+from repro.train.bucketing import (
+    assign_buckets,
+    build_bucket_layout,
+    leaf_bucket_times,
 )
+from repro.train.runtime import DeftRuntime, make_ddp_step
+from repro.train.steps import init_train_state
 
 
 def build_schedule(
@@ -118,18 +120,19 @@ def main() -> None:
     ds = SyntheticDataset(cfg, args.seed, args.batch, args.seq)
 
     with jax.set_mesh(mesh):
+        runtime = None
         if args.scheduler == "ddp":
             state = init_train_state(key, cfg, opt)
-            step_fn = jax.jit(
-                lambda s, b: ddp_train_step(s, b, cfg=cfg, opt_spec=opt,
-                                            fsdp=fsdp)
-            )
-            fns, period = None, 1
+            # donated: params/opt update in place instead of copying
+            step_fn = make_ddp_step(cfg, opt, fsdp=fsdp)
         else:
-            state = init_train_state(key, cfg, opt, deft=True,
-                                     accum_devices=dp)
+            # shape-only probe: bucketing/layout never read values, so an
+            # eval_shape tree avoids materializing a throwaway full state
+            params_abs = jax.eval_shape(
+                lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+            )
             bucket_of, nb, times, schedule, verdict, factor = build_schedule(
-                state["params"], cfg, dp=dp, seq_len=args.seq,
+                params_abs, cfg, dp=dp, seq_len=args.seq,
                 per_device_batch=max(args.batch // dp, 1),
                 partition_elems=args.partition_elems,
                 coverage_rate=args.coverage_rate,
@@ -140,17 +143,26 @@ def main() -> None:
                   f"batch-size seq={schedule.batch_size_sequence}, "
                   f"preserver ratio={verdict.ratio:.4f} "
                   f"(capacity x{factor:.2f})")
-            fns = make_deft_step_fns(cfg, opt, schedule, bucket_of, mesh,
-                                     fsdp=fsdp)
-            period = schedule.period
+            layout = build_bucket_layout(params_abs, bucket_of, nb)
+            runtime = DeftRuntime(cfg, opt, schedule, layout, mesh, fsdp=fsdp)
+            state = runtime.init_state(key)
+            t_c = time.time()
+            # AOT phase cache against abstract batch specs: no data batch
+            # is consumed, so step 0 still trains on the stream's batch 0
+            runtime.compile(state, batch_spec(cfg, args.batch, args.seq))
+            print(f"compiled {runtime.n_unique_phases} unique phases "
+                  f"(period {runtime.period}) in {time.time() - t_c:.1f}s; "
+                  f"max collectives in a phase: "
+                  f"{runtime.stats()['max_collectives_in_a_phase']} "
+                  f"(vs {layout.n_leaves} per-leaf)")
 
         t0 = time.time()
         for step in range(args.steps):
             batch = next(ds)
-            if args.scheduler == "ddp":
+            if runtime is None:
                 state, m = step_fn(state, batch)
             else:
-                state, m = fns[step % period](state, batch)
+                state, m = runtime.step(step, state, batch)
             if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
                 print(f"step {step:4d} loss={float(m['loss']):.4f} "
                       f"updated={bool(m['updated'])}")

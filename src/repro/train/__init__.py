@@ -1,9 +1,22 @@
-"""Training substrate: gradient bucketing over real parameter leaves and
-the compiled train steps (baseline DDP and DeFT per-phase executables)."""
+"""Training substrate: gradient bucketing over real parameter leaves, the
+fused-bucket DeftRuntime execution engine, and the legacy per-leaf
+compiled train steps (baseline DDP and DeFT per-phase executables)."""
 from repro.train.bucketing import (
+    BucketLayout,
     assign_buckets,
+    build_bucket_layout,
+    flatten_buckets,
     leaf_bucket_times,
     ordered_leaf_indices,
+    unflatten_buckets,
+)
+from repro.train.runtime import (
+    DeftRuntime,
+    deft_phase_step_fused,
+    deft_rs_phase_step_fused,
+    init_fused_accumulators,
+    make_ddp_step,
+    phase_collectives,
 )
 from repro.train.steps import (
     TrainState,
@@ -15,13 +28,23 @@ from repro.train.steps import (
 )
 
 __all__ = [
+    "BucketLayout",
     "assign_buckets",
+    "build_bucket_layout",
+    "flatten_buckets",
+    "unflatten_buckets",
     "leaf_bucket_times",
     "ordered_leaf_indices",
     "TrainState",
     "init_train_state",
+    "init_fused_accumulators",
     "ddp_train_step",
     "deft_phase_step",
     "deft_rs_phase_step",
+    "deft_phase_step_fused",
+    "deft_rs_phase_step_fused",
     "make_deft_step_fns",
+    "make_ddp_step",
+    "phase_collectives",
+    "DeftRuntime",
 ]

@@ -17,9 +17,11 @@ active fraction (top-k / n_experts).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -99,6 +101,101 @@ def assign_buckets(
     # if the last bucket ended exactly on a boundary, b overshoots by one
     n_buckets = max(set(bucket_of)) + 1
     return tuple(bucket_of), n_buckets
+
+
+# ---------------------------------------------------------------------------
+# Static leaf -> flat-buffer layout (fused-bucket collectives)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static mapping between parameter-tree leaves and per-bucket flat
+    f32 buffers (DESIGN.md §Fused buffers).
+
+    Each bucket owns one contiguous buffer holding every leaf assigned to
+    it, in ``tree_flatten`` leaf order.  All offsets/sizes are Python ints
+    computed once at plan time, so flatten/unflatten trace to static
+    concatenate/slice/reshape ops and each bucket syncs as ONE collective.
+
+    bucket_of_leaf: leaf index (tree_flatten order) -> bucket id.
+    n_buckets:      number of buckets (== number of flat buffers).
+    leaves:         per bucket, the leaf indices it holds (ascending).
+    offsets:        per bucket, the start offset of each leaf's span.
+    sizes:          per bucket, total element count of its buffer.
+    shapes:         per leaf (tree_flatten order), the original shape.
+    """
+
+    bucket_of_leaf: Tuple[int, ...]
+    n_buckets: int
+    leaves: Tuple[Tuple[int, ...], ...]
+    offsets: Tuple[Tuple[int, ...], ...]
+    sizes: Tuple[int, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.bucket_of_leaf)
+
+    @property
+    def total_elems(self) -> int:
+        return sum(self.sizes)
+
+
+def build_bucket_layout(
+    params, bucket_of_leaf: Sequence[int], n_buckets: int
+) -> BucketLayout:
+    """Precompute the per-bucket flat-buffer layout for a parameter tree."""
+    flat = jax.tree_util.tree_flatten(params)[0]
+    assert len(flat) == len(bucket_of_leaf)
+    shapes = tuple(tuple(l.shape) for l in flat)
+    leaves: List[List[int]] = [[] for _ in range(n_buckets)]
+    for i, b in enumerate(bucket_of_leaf):
+        leaves[b].append(i)
+    offsets: List[Tuple[int, ...]] = []
+    sizes: List[int] = []
+    for b in range(n_buckets):
+        offs, acc = [], 0
+        for i in leaves[b]:
+            offs.append(acc)
+            acc += int(np.prod(shapes[i], dtype=np.int64)) if shapes[i] else 1
+        offsets.append(tuple(offs))
+        sizes.append(acc)
+    return BucketLayout(
+        bucket_of_leaf=tuple(bucket_of_leaf),
+        n_buckets=n_buckets,
+        leaves=tuple(tuple(g) for g in leaves),
+        offsets=tuple(offsets),
+        sizes=tuple(sizes),
+        shapes=shapes,
+    )
+
+
+def flatten_buckets(layout: BucketLayout, leaf_vals) -> List[jax.Array]:
+    """Pack leaf values (tree_flatten order) into per-bucket flat f32
+    buffers.  Traced: static concatenation, no data-dependent shapes."""
+    out = []
+    for b in range(layout.n_buckets):
+        parts = [
+            leaf_vals[i].astype(jnp.float32).reshape(-1)
+            for i in layout.leaves[b]
+        ]
+        out.append(
+            parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        )
+    return out
+
+
+def unflatten_buckets(layout: BucketLayout, flats) -> List[jax.Array]:
+    """Inverse of :func:`flatten_buckets`: per-bucket flat buffers back to
+    leaf values (tree_flatten order, f32)."""
+    leaf_vals: List[jax.Array] = [None] * layout.n_leaves  # type: ignore
+    for b in range(layout.n_buckets):
+        flat = flats[b]
+        for i, off in zip(layout.leaves[b], layout.offsets[b]):
+            shape = layout.shapes[i]
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            leaf_vals[i] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+    assert all(v is not None for v in leaf_vals)
+    return leaf_vals
 
 
 def leaf_bucket_times(

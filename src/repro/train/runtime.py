@@ -1,0 +1,505 @@
+"""DeftRuntime: the production DeFT execution engine.
+
+Replaces the ad-hoc per-phase step-fn list of ``train/steps.py`` with a
+runtime that owns the whole compiled-phase lifecycle (see DESIGN.md):
+
+* **Bucket-fused collectives** — gradients are packed per bucket into one
+  contiguous f32 buffer using the static :class:`BucketLayout` (offsets /
+  sizes precomputed at plan time), so each phase issues exactly ONE
+  ``psum`` (or one hierarchical reduce-scatter chain on the secondary
+  link) per *synced bucket* instead of one per parameter leaf.  The
+  ``cur``/``fut`` gradient-generation accumulators are per-bucket flat
+  buffers; accumulate / zero / rotate act on whole buffers and the
+  leaf tree is only reassembled in update phases.
+* **Buffer donation** — every phase executable (and the DDP baseline via
+  :func:`make_ddp_step`) donates the train state, so params, optimizer
+  moments and both accumulators update in place instead of being copied
+  each step.
+* **AOT phase cache** — phases are deduped by ``PhaseSpec`` signature and
+  lowered + compiled ahead of the first step; ``step(i)`` dispatches the
+  cached executable for ``i % period`` and the runtime exposes compile /
+  dispatch timing stats.
+
+The per-leaf path in ``train/steps.py`` is kept as the semantic
+reference (tests prove fused == per-leaf == the gradient-accumulation
+reference) and as the benchmark baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.scheduler import DeftSchedule, PhaseSpec
+from repro.models.model import init_params, loss_fn
+from repro.optim.optimizers import OptimizerSpec, apply_updates, init_opt_state
+from repro.sharding import (
+    logical_rules,
+    rules_deft_manual_dp,
+    rules_deft_rs_manual_pod,
+)
+from repro.train.bucketing import (
+    BucketLayout,
+    flatten_buckets,
+    unflatten_buckets,
+)
+from repro.train.steps import (
+    TrainState,
+    _batch_specs,
+    _dp_sizes,
+    _state_specs,
+    _sync_primary,
+    _sync_secondary,
+    ddp_train_step,
+)
+
+
+def init_fused_accumulators(
+    layout: BucketLayout, accum_devices: int
+) -> Dict[str, Tuple[jax.Array, ...]]:
+    """Per-bucket flat f32 accumulators with a leading device axis."""
+    zeros = lambda: tuple(
+        jnp.zeros((accum_devices, s), jnp.float32) for s in layout.sizes
+    )
+    return {"cur": zeros(), "fut": zeros()}
+
+
+# ---------------------------------------------------------------------------
+# Fused DeFT phase body
+# ---------------------------------------------------------------------------
+def _deft_body_fused(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    dp_axes: Tuple[str, ...],
+    dp_sizes: Dict[str, int],
+    rules: Dict,
+    remat: bool,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One DeFT phase over per-bucket flat buffers, inside shard_map.
+
+    ``cur``/``fut`` arrive with the leading device axis stripped to 1 by
+    the manual mapping; we work on index [0] and re-add it on return.
+    Every tensor this body syncs is a whole bucket buffer — there is no
+    per-leaf collective and no tree flatten/unflatten outside the update
+    branch.
+    """
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= dp_sizes[a]
+    params, opt = state["params"], state["opt"]
+    with logical_rules(rules):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat,
+                              loss_chunk=loss_chunk, unroll=unroll),
+            has_aux=True,
+        )(params)
+
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    g_flat = flatten_buckets(layout, g_leaves)         # one buffer per bucket
+    cur = [c[0] for c in state["cur"]]
+    fut = [f[0] for f in state["fut"]]
+
+    def sync(x: jax.Array, b: int) -> jax.Array:
+        if phase.secondary[b]:
+            return _sync_secondary(x, dp_axes, dp_sizes)
+        return _sync_primary(x, dp_axes)
+
+    if phase.rotate:
+        # fresh generation merges with the future accumulator (Cases 3/4)
+        gen = [g + f for g, f in zip(g_flat, fut)]
+        gen = [
+            sync(x, b) if phase.route_new[b] == "sync" else x
+            for b, x in enumerate(gen)
+        ]
+        new_fut = [jnp.zeros_like(f) for f in fut]
+    else:
+        # Cases 1/2: fresh gradients accumulate locally
+        gen = None
+        new_fut = [f + g for f, g in zip(fut, g_flat)]
+
+    # older generation buckets scheduled this phase (fwd Case 1 + bwd 2/3)
+    cur_synced = [
+        sync(c, b) if phase.sync_cur[b] else c for b, c in enumerate(cur)
+    ]
+
+    updated = jnp.asarray(phase.do_update)
+    if phase.do_update:
+        src = cur_synced if phase.update_source == "cur" else gen
+        grad_tree = jax.tree_util.tree_unflatten(
+            treedef, unflatten_buckets(layout, src)
+        )
+        scale = 1.0 / (n_dp * phase.update_k)
+        params, opt = apply_updates(opt_spec, params, grad_tree, opt,
+                                    grad_scale=scale)
+        if phase.update_source == "cur":
+            new_cur = gen if gen is not None else [
+                jnp.zeros_like(c) for c in cur_synced
+            ]
+        else:
+            new_cur = [jnp.zeros_like(c) for c in cur_synced]
+    elif phase.rotate:
+        new_cur = gen
+    else:
+        new_cur = cur_synced
+
+    # metrics ride ONE fused psum: loss and aux parts stacked to a vector
+    part_keys = sorted(parts)
+    stacked = jnp.stack([loss] + [parts[k] for k in part_keys])
+    stacked = jax.lax.psum(stacked, dp_axes) / n_dp
+    metrics = {
+        "loss": stacked[0],
+        **{k: stacked[1 + j] for j, k in enumerate(part_keys)},
+        "updated": updated,
+        "k": jnp.asarray(phase.update_k, jnp.int32),
+    }
+    new_state = {
+        "params": params,
+        "opt": opt,
+        "cur": tuple(c[None] for c in new_cur),
+        "fut": tuple(f[None] for f in new_fut),
+    }
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers (fused variants of steps.deft_phase_step / _rs_)
+# ---------------------------------------------------------------------------
+# steps._state_specs is layout-agnostic (params/opt replicated, cur/fut
+# split on the leading device axis) and works unchanged on the fused
+# tuple-shaped accumulators.
+_fused_state_specs = _state_specs
+
+_METRIC_SPECS = {"loss": P(), "ce": P(), "aux": P(), "updated": P(), "k": P()}
+
+
+def deft_phase_step_fused(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    mesh,
+    multi_pod: bool = False,
+    remat: bool = True,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """Fused DeFT phase with explicit DP (params replicated over DP)."""
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp_sizes = _dp_sizes(mesh, dp_axes)
+    body = functools.partial(
+        _deft_body_fused,
+        cfg=cfg,
+        opt_spec=opt_spec,
+        phase=phase,
+        layout=layout,
+        dp_axes=dp_axes,
+        dp_sizes=dp_sizes,
+        rules=rules_deft_manual_dp(),
+        remat=remat,
+        loss_chunk=loss_chunk,
+        unroll=unroll,
+    )
+    in_specs = (_fused_state_specs(state, dp_axes),
+                _batch_specs(batch, dp_axes))
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(_fused_state_specs(state, dp_axes), _METRIC_SPECS),
+        axis_names=set(dp_axes),
+        check_vma=False,
+    )(state, batch)
+
+
+def deft_rs_phase_step_fused(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    mesh,
+    remat: bool = True,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """Fused DeFT hierarchical path (FSDP archs): manual over 'pod' only."""
+    assert "pod" in mesh.axis_names, "DeFT-RS needs the multi-pod mesh"
+    dp_axes = ("pod",)
+    dp_sizes = _dp_sizes(mesh, dp_axes)
+    body = functools.partial(
+        _deft_body_fused,
+        cfg=cfg,
+        opt_spec=opt_spec,
+        phase=phase,
+        layout=layout,
+        dp_axes=dp_axes,
+        dp_sizes=dp_sizes,
+        rules=rules_deft_rs_manual_pod(),
+        remat=remat,
+        loss_chunk=loss_chunk,
+        unroll=unroll,
+    )
+    in_specs = (_fused_state_specs(state, dp_axes),
+                _batch_specs(batch, dp_axes))
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(_fused_state_specs(state, dp_axes), _METRIC_SPECS),
+        axis_names=set(dp_axes),
+        check_vma=False,
+    )(state, batch)
+
+
+# ---------------------------------------------------------------------------
+# Collective accounting (static, from the phase spec)
+# ---------------------------------------------------------------------------
+def phase_collectives(phase: PhaseSpec) -> Dict[str, int]:
+    """Collectives one fused phase issues, by construction: one primary
+    psum per primary-synced bucket, one reduce-scatter chain per
+    secondary-synced bucket, plus the single fused metrics psum."""
+    n = len(phase.route_new)
+    synced = [
+        (phase.route_new[b] == "sync" and phase.rotate) or phase.sync_cur[b]
+        for b in range(n)
+    ]
+    primary = sum(1 for b in range(n) if synced[b] and not phase.secondary[b])
+    secondary = sum(1 for b in range(n) if synced[b] and phase.secondary[b])
+    return {"primary": primary, "secondary": secondary, "metrics": 1}
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PhaseStats:
+    """Per-unique-phase lifecycle stats."""
+
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    dispatches: int = 0
+    dispatch_s: float = 0.0
+
+
+class DeftRuntime:
+    """Owns the per-phase executables of one DeFT schedule.
+
+    Lifecycle (DESIGN.md §Phase cache):
+
+    1. construction dedupes ``schedule.phases`` by spec signature and
+       builds one donated jitted callable per *unique* phase;
+    2. :meth:`compile` lowers + compiles each unique phase ahead of time
+       against concrete (or abstract) state/batch, recording timings;
+    3. :meth:`step` dispatches ``i % period`` through the AOT cache
+       (falling back to the jitted callable if :meth:`compile` was
+       skipped — first dispatch then pays the compile).
+
+    All phase executables donate the train state: callers MUST treat the
+    state passed to :meth:`step` as consumed and continue with the
+    returned one.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        opt_spec: OptimizerSpec,
+        schedule: DeftSchedule,
+        layout: BucketLayout,
+        mesh,
+        *,
+        multi_pod: bool = False,
+        fsdp: bool = False,
+        remat: bool = True,
+        loss_chunk: int = 0,
+        unroll: bool = False,
+        donate: bool = True,
+    ):
+        self.cfg = cfg
+        self.opt_spec = opt_spec
+        self.schedule = schedule
+        self.layout = layout
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.multi_pod = multi_pod
+        self.donate = donate
+        if fsdp:
+            self.dp_axes: Tuple[str, ...] = ("pod",)
+        else:
+            self.dp_axes = ("pod", "data") if multi_pod else ("data",)
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.accum_devices = 1
+        for a in self.dp_axes:
+            self.accum_devices *= int(shape[a])
+
+        step_impl = deft_rs_phase_step_fused if fsdp else deft_phase_step_fused
+        self._unique: List[PhaseSpec] = []
+        self._index_of: Dict[PhaseSpec, int] = {}
+        for phase in schedule.phases:
+            if phase not in self._index_of:
+                self._index_of[phase] = len(self._unique)
+                self._unique.append(phase)
+        self.phase_of_step: Tuple[int, ...] = tuple(
+            self._index_of[p] for p in schedule.phases
+        )
+
+        self._jitted: List[Callable] = []
+        for phase in self._unique:
+            kw = dict(
+                cfg=cfg,
+                opt_spec=opt_spec,
+                phase=phase,
+                layout=layout,
+                mesh=mesh,
+                remat=remat,
+                loss_chunk=loss_chunk,
+                unroll=unroll,
+            )
+            if not fsdp:
+                kw["multi_pod"] = multi_pod
+            self._jitted.append(
+                jax.jit(
+                    functools.partial(step_impl, **kw),
+                    donate_argnums=(0,) if donate else (),
+                )
+            )
+        self._compiled: List[Optional[Callable]] = [None] * len(self._unique)
+        self._stats: List[PhaseStats] = [PhaseStats() for _ in self._unique]
+
+    # ---- state ----------------------------------------------------------
+    @property
+    def period(self) -> int:
+        return self.schedule.period
+
+    @property
+    def n_unique_phases(self) -> int:
+        return len(self._unique)
+
+    def init_state(self, key, dtype=jnp.float32) -> TrainState:
+        """Fresh train state, committed to the shardings the phase
+        executables expect — params/opt replicated, accumulators split on
+        their leading device axis.  Committed placement is what lets XLA
+        alias the donated input buffers (an uncommitted array would be
+        resharded at dispatch and could not be updated in place)."""
+        from jax.sharding import NamedSharding
+
+        params = init_params(key, self.cfg, dtype=dtype)
+        state: TrainState = {
+            "params": params,
+            "opt": init_opt_state(self.opt_spec, params),
+        }
+        state.update(init_fused_accumulators(self.layout, self.accum_devices))
+        dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        rep = NamedSharding(self.mesh, P())
+        split = NamedSharding(self.mesh, P(dp))
+        return {
+            "params": jax.device_put(state["params"], rep),
+            "opt": jax.device_put(state["opt"], rep),
+            "cur": jax.device_put(state["cur"], split),
+            "fut": jax.device_put(state["fut"], split),
+        }
+
+    # ---- AOT phase cache ------------------------------------------------
+    def compile(self, state: TrainState, batch) -> Dict[str, float]:
+        """Lower + compile every unique phase ahead of the first step.
+
+        ``state``/``batch`` may be concrete arrays or ShapeDtypeStructs.
+        Returns {phase_index: seconds} wall-clock compile times.
+        """
+        out: Dict[str, float] = {}
+        with jax.set_mesh(self.mesh):
+            for i, fn in enumerate(self._jitted):
+                t0 = time.perf_counter()
+                lowered = fn.lower(state, batch)
+                t1 = time.perf_counter()
+                self._compiled[i] = lowered.compile()
+                t2 = time.perf_counter()
+                self._stats[i].lower_s = t1 - t0
+                self._stats[i].compile_s = t2 - t1
+                out[f"phase{i}"] = t2 - t0
+        return out
+
+    # ---- dispatch -------------------------------------------------------
+    def step(
+        self, i: int, state: TrainState, batch
+    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        """Run training step ``i`` (phase ``i % period``).  Consumes
+        ``state`` when donation is on."""
+        u = self.phase_of_step[i % self.period]
+        fn = self._compiled[u]
+        t0 = time.perf_counter()
+        if fn is not None:
+            out = fn(state, batch)
+        else:  # compile() skipped — trace under the mesh on first hit
+            with jax.set_mesh(self.mesh):
+                out = self._jitted[u](state, batch)
+        st = self._stats[u]
+        st.dispatches += 1
+        st.dispatch_s += time.perf_counter() - t0
+        return out
+
+    # ---- reporting ------------------------------------------------------
+    def collectives_per_phase(self) -> List[Dict[str, int]]:
+        """Static per-schedule-phase collective counts (fused path)."""
+        return [phase_collectives(p) for p in self.schedule.phases]
+
+    def stats(self) -> Dict[str, Any]:
+        per_phase = [dataclasses.asdict(s) for s in self._stats]
+        total_compile = sum(s.lower_s + s.compile_s for s in self._stats)
+        total_dispatch = sum(s.dispatch_s for s in self._stats)
+        n = sum(s.dispatches for s in self._stats)
+        coll = self.collectives_per_phase()
+        return {
+            "period": self.period,
+            "unique_phases": self.n_unique_phases,
+            "accum_devices": self.accum_devices,
+            "n_buckets": self.layout.n_buckets,
+            "n_leaves": self.layout.n_leaves,
+            "compile_s_total": total_compile,
+            "steps_dispatched": n,
+            "dispatch_s_total": total_dispatch,
+            "collectives_per_phase": coll,
+            "max_collectives_in_a_phase": max(
+                (c["primary"] + c["secondary"] for c in coll), default=0
+            ),
+            "phases": per_phase,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors
+# ---------------------------------------------------------------------------
+def make_ddp_step(
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    *,
+    fsdp: bool = False,
+    multi_pod: bool = False,
+    donate: bool = True,
+    **kw,
+) -> Callable:
+    """Donated jitted DDP baseline step (params/opt update in place)."""
+    return jax.jit(
+        functools.partial(
+            ddp_train_step, cfg=cfg, opt_spec=opt_spec,
+            fsdp=fsdp, multi_pod=multi_pod, **kw,
+        ),
+        donate_argnums=(0,) if donate else (),
+    )

@@ -70,10 +70,22 @@ def init_train_state(
     deft: bool = False,
     accum_devices: int = 1,
     dtype=jnp.float32,
+    layout=None,
 ) -> TrainState:
+    """Fresh train state.
+
+    ``deft=True`` adds the cur/fut gradient-generation accumulators:
+    per-bucket flat f32 buffers when a :class:`~repro.train.bucketing.
+    BucketLayout` is given (the fused runtime layout, DESIGN.md §Fused
+    buffers), else one buffer per parameter leaf (the legacy per-leaf
+    path kept as semantic reference)."""
     params = init_params(key, cfg, dtype=dtype)
     state: TrainState = {"params": params, "opt": init_opt_state(opt_spec, params)}
-    if deft:
+    if deft and layout is not None:
+        from repro.train.runtime import init_fused_accumulators
+
+        state.update(init_fused_accumulators(layout, accum_devices))
+    elif deft:
         zeros = lambda: jax.tree.map(
             lambda p: jnp.zeros((accum_devices,) + p.shape, jnp.float32), params
         )
@@ -181,10 +193,17 @@ def _sync_secondary(
 ) -> jax.Array:
     """Hierarchical slow-link sync: reduce-scatter over the innermost DP
     axis, all-reduce over the outer (pod/DCN) axes, then all-gather.  Falls
-    back to a plain psum when the leading dim does not tile."""
+    back to a plain psum when the leading dim does not tile, or when the
+    installed jaxlib cannot partition tiled collectives inside a
+    partial-manual region (see jax_compat.HIERARCHICAL_COLLECTIVES_OK —
+    the all-reduce is numerically identical, only the link shaping is
+    lost)."""
+    from repro.util.jax_compat import HIERARCHICAL_COLLECTIVES_OK
+
     fast = dp_axes[-1]
     size = dp_sizes[fast]
-    if x.ndim >= 1 and x.shape[0] % size == 0 and x.shape[0] >= size:
+    if (HIERARCHICAL_COLLECTIVES_OK and x.ndim >= 1
+            and x.shape[0] % size == 0 and x.shape[0] >= size):
         y = jax.lax.psum_scatter(x, fast, scatter_dimension=0, tiled=True)
         if len(dp_axes) > 1:
             y = jax.lax.psum(y, dp_axes[:-1])
@@ -427,9 +446,12 @@ def make_deft_step_fns(
     remat: bool = True,
     loss_chunk: int = 0,
 ) -> List[Callable]:
-    """One jitted executable per distinct phase of the periodic schedule
-    (paper: one compiled graph per knapsack outcome).  ``fns[i % period]``
-    drives step i."""
+    """LEGACY per-leaf path: one jitted executable per distinct phase,
+    one psum per parameter leaf, tree-shaped accumulators, no donation.
+
+    Kept as the semantic reference and benchmark baseline; production
+    code uses :class:`repro.train.runtime.DeftRuntime` (bucket-fused
+    collectives, donated buffers, AOT phase cache)."""
     step_impl = deft_rs_phase_step if fsdp else deft_phase_step
     fns: List[Callable] = []
     seen: Dict[PhaseSpec, Callable] = {}

@@ -1,0 +1,164 @@
+"""Run the new-jax (>= 0.6) API surface this codebase uses on older jax.
+
+The container pins jax 0.4.37, which predates several names the runtime
+and tests rely on:
+
+* ``jax.sharding.AxisType`` and the ``axis_types=`` kwarg of
+  ``jax.make_mesh`` / ``jax.sharding.AbstractMesh``
+* ``jax.set_mesh`` (context manager form)
+* ``jax.sharding.get_abstract_mesh`` / ``use_abstract_mesh``
+* ``jax.shard_map`` (top-level, with ``axis_names=``/``check_vma=``)
+
+``install()`` backfills those names onto the jax namespace with thin
+adapters over the 0.4.x equivalents (``Mesh`` context manager,
+``jax.experimental.shard_map`` with ``auto=``/``check_rep=``).  On a jax
+that already provides a name natively the shim leaves it untouched, so
+the same code runs on both versions.  ``repro/__init__.py`` calls
+``install()``, which makes every ``import repro.<anything>`` sufficient
+to activate the shims — including for test modules and subprocess
+scripts that touch ``jax.sharding.AxisType`` directly.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+import threading
+
+import jax
+
+_state = threading.local()
+
+# jaxlib < 0.5 hard-CHECKs in the SPMD partitioner (hlo_sharding_util /
+# spmd_partitioner ``IsManualSubgroup``) when a *partial-manual*
+# shard_map region (auto axes present) contains tiled psum_scatter /
+# all_gather collectives on a real multi-device mesh; plain psum is
+# fine.  Callers gate the hierarchical reduce-scatter -> all-gather
+# secondary-link sync on this and fall back to a numerically identical
+# all-reduce (the hierarchy is a perf shaping, not semantics).
+_V = tuple(int(x) for x in jax.__version__.split(".")[:2])
+HIERARCHICAL_COLLECTIVES_OK = _V >= (0, 5)
+
+
+def _ambient_abstract():
+    return getattr(_state, "abstract_mesh", None)
+
+
+def _physical_mesh():
+    """The mesh of an enclosing ``with mesh:`` / ``jax.set_mesh(mesh)``."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - private-API drift
+        return None
+
+
+def install() -> None:
+    """Idempotently backfill new-jax names onto the jax namespace."""
+    if getattr(jax, "_repro_compat_installed", False):
+        return
+    jax._repro_compat_installed = True
+
+    # ---- jax.sharding.AxisType ------------------------------------------
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # ---- jax.make_mesh(..., axis_types=...) -----------------------------
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            del axis_types  # 0.4.x meshes are implicitly all-Auto
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # ---- jax.sharding.AbstractMesh(sizes, names, axis_types=...) --------
+    try:
+        jax.sharding.AbstractMesh((1,), ("x",))
+        new_style_abstract = True
+    except Exception:
+        new_style_abstract = False
+    if not new_style_abstract:
+        _OldAbstract = jax.sharding.AbstractMesh
+
+        def AbstractMesh(axis_sizes, axis_names=None, *, axis_types=None):
+            del axis_types
+            if axis_names is None:  # old-style (('name', size), ...) call
+                return _OldAbstract(tuple(axis_sizes))
+            return _OldAbstract(tuple(zip(axis_names, axis_sizes)))
+
+        jax.sharding.AbstractMesh = AbstractMesh
+
+    # ---- ambient mesh: set_mesh / get_abstract_mesh / use_abstract_mesh -
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+
+        def get_abstract_mesh():
+            return _ambient_abstract() or _physical_mesh()
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    if not hasattr(jax.sharding, "use_abstract_mesh"):
+
+        @contextlib.contextmanager
+        def use_abstract_mesh(mesh):
+            prev = _ambient_abstract()
+            _state.abstract_mesh = mesh
+            try:
+                yield mesh
+            finally:
+                _state.abstract_mesh = prev
+
+        jax.sharding.use_abstract_mesh = use_abstract_mesh
+
+    if not hasattr(jax, "set_mesh"):
+
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            # The Mesh context manager provides what set_mesh gives newer
+            # jax: bare-PartitionSpec with_sharding_constraint resolution
+            # and an ambient mesh for get_abstract_mesh().
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    # ---- jax.shard_map --------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(
+            f,
+            *,
+            mesh=None,
+            in_specs=None,
+            out_specs=None,
+            axis_names=None,
+            check_vma=True,
+        ):
+            if mesh is None:
+                mesh = jax.sharding.get_abstract_mesh()
+            if axis_names is None:
+                auto = frozenset()
+            else:
+                auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            return _shard_map(
+                f,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                check_rep=bool(check_vma),
+                auto=auto,
+            )
+
+        jax.shard_map = shard_map

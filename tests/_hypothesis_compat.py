@@ -1,0 +1,100 @@
+"""Property-testing shim: real hypothesis when installed, else a tiny
+deterministic fallback.
+
+The fallback implements exactly the strategy subset the repo's property
+tests use — ``integers``, ``floats``, ``booleans``, ``lists``, ``tuples``
+and ``.flatmap``/``.map`` — and a ``given``/``settings`` pair that draws
+``max_examples`` pseudo-random examples from a seed derived from the test
+name (stable across runs, so failures reproduce).  It trades hypothesis'
+shrinking and edge-case heuristics for zero dependencies; with hypothesis
+installed the real library is used untouched.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on the CI container
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+        def flatmap(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 10
+
+            def draw(rng):
+                n = rng.randint(min_size, hi)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strategies)
+            )
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    st = _Strategies()
+
+    def settings(max_examples=50, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 25)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # hide the wrapped signature from pytest: the strategy-filled
+            # parameters must not be collected as fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,6 +1,6 @@
 """Bucket construction / partition strategies (paper §III.D, Table II)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.bucket import (

@@ -2,13 +2,16 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.knapsack import (
+    clear_knapsack_caches,
     greedy_multi_knapsack,
+    knapsack_cache_info,
     knapsack_two_link,
     naive_knapsack,
     recursive_knapsack,
+    set_knapsack_memoization,
 )
 
 times_strategy = st.lists(
@@ -86,6 +89,70 @@ def test_two_link_feasible(times, cap_p, cap_s):
     assert not set(prim) & set(sec)
     assert sum(times[i] for i in prim) <= cap_p * 1.001 + 1e-3
     assert sum(times[i] for i in sec) <= cap_s + 1e-9
+
+
+@given(times_strategy, cap_strategy)
+@settings(max_examples=40, deadline=None)
+def test_memoized_matches_unmemoized(times, capacity):
+    """The memo cache must be invisible: identical selections with the
+    cache hot, cold, and disabled."""
+    prev = set_knapsack_memoization(True)
+    try:
+        clear_knapsack_caches()
+        cold = naive_knapsack(times, capacity)
+        hot = naive_knapsack(times, capacity)   # cache hit path
+        set_knapsack_memoization(False)
+        off = naive_knapsack(times, capacity)
+    finally:
+        set_knapsack_memoization(prev)
+    assert cold == hot == off
+
+
+@given(
+    st.lists(st.integers(min_value=1, max_value=60), min_size=1, max_size=8),
+    st.integers(min_value=0, max_value=150),
+    st.lists(st.integers(min_value=0, max_value=40), min_size=1, max_size=8),
+)
+@settings(max_examples=40, deadline=None)
+def test_recursive_fast_path_matches_reference(wints, cap, bints):
+    """The saturation short-circuit must not change Algorithm 1's answer.
+    Integer-microsecond times make the DP exact, so the fast-path result
+    must equal a reference recursion without the short-circuit."""
+    comm = [w * 1e-6 for w in wints]
+    bwd = [b * 1e-6 for b in bints]
+    capacity = cap * 1e-6
+
+    def reference(comm_times, remain_time, bwd_times, _depth=0):
+        n = len(comm_times)
+        if n == 0 or remain_time <= 0:
+            return []
+        if sum(comm_times) <= remain_time:
+            return list(range(n))
+        order1 = naive_knapsack(comm_times, remain_time)
+        if n == 1 or _depth > 30:
+            return order1
+        shrink = bwd_times[n - 2] if n - 2 < len(bwd_times) else 0.0
+        order2 = reference(
+            comm_times[: n - 1], remain_time - shrink, bwd_times, _depth + 1
+        )
+        s1 = sum(comm_times[i] for i in order1)
+        s2 = sum(comm_times[i] for i in order2)
+        return order1 if s1 >= s2 else order2
+
+    got = recursive_knapsack(comm, capacity, bwd)
+    want = reference(comm, capacity, bwd)
+    s = lambda sel: sum(comm[i] for i in sel)
+    assert s(got) == pytest.approx(s(want), abs=1e-12)
+
+
+def test_memoization_caches_repeat_solves():
+    set_knapsack_memoization(True)
+    clear_knapsack_caches()
+    times = [0.01, 0.02, 0.03, 0.04]
+    for _ in range(5):
+        naive_knapsack(times, 0.05)
+    info = knapsack_cache_info()
+    assert info.hits >= 4 and info.misses >= 1
 
 
 def test_knapsack_zero_capacity():

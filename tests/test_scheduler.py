@@ -5,7 +5,7 @@ synchronized EXACTLY ONCE per bucket before the parameter update that
 consumes it, and no gradient is dropped.
 """
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bucket import BucketTimes
 from repro.core.scheduler import (

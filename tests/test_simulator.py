@@ -1,6 +1,6 @@
 """Discrete-event simulator invariants + paper-level behaviour checks."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bucket import BucketTimes
 from repro.core.policies import ALL_BASELINES, bytescheduler, pytorch_ddp, usbyte
