@@ -1,0 +1,158 @@
+"""Adaptive control plane benchmark: static plan vs online replanning
+under an injected mid-run bandwidth degradation.
+
+The scenario: a job planned at the nominal interconnect bandwidth loses
+``DROP_SCALE``x of it at step ``DROP_STEP`` (congestion, a flaky link, a
+mis-modeled HardwareModel).  The *static* run keeps executing the stale
+schedule; the *adaptive* run feeds per-phase telemetry to the
+``AdaptiveController``, which detects the drift, re-calibrates, replans
+under the Preserver gate and hot-swaps the schedule.
+
+Wall-clock per iteration comes from the same discrete-event timeline
+model the paper-figure benchmarks use (this container has no degradable
+link), so the whole benchmark is deterministic.  Emits
+``BENCH_adapt.json`` with steps/s before/after the drop for both runs,
+the replan-event trail, and the knapsack memo-cache hit counters across
+consecutive replans.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+_OUT = os.environ.get("BENCH_ADAPT_OUT", "BENCH_adapt.json")
+_STEPS = int(os.environ.get("BENCH_ADAPT_STEPS", "160"))
+DROP_STEP = 60
+DROP_SCALE = 3.0
+CR = 1.8
+
+
+def _profile():
+    """Paper-scale bucket profile (gemma2-2b leaf-free analytic)."""
+    from repro.configs import get_config
+    from repro.core.bucket import BucketTimes
+    from repro.core.profiler import HardwareModel, profile_arch
+
+    hw = HardwareModel(dp_degree=16)
+    prof = profile_arch(get_config("gemma2-2b"), hw=hw, seq_len=4096)
+    t = prof.times
+    scale = CR * (t.fwd_total + t.bwd_total) / max(t.comm_total, 1e-12)
+    return BucketTimes(t.fwd, t.bwd, tuple(c * scale for c in t.comm))
+
+
+def run() -> None:
+    """Benchmark section entry point (benchmarks/run.py)."""
+    from repro.adapt import (
+        AdaptiveController,
+        BandwidthDrop,
+        SyntheticTelemetrySource,
+        run_control_loop,
+        scale_times,
+        schedule_plans,
+        steady_phase_durations,
+    )
+    from repro.core.deft import feedback_solve
+    from repro.core.knapsack import (
+        clear_knapsack_caches,
+        knapsack_cache_info,
+    )
+    from repro.core.preserver import WalkParams
+
+    t0 = time.time()
+    times = _profile()
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    schedule, verdict, scfg, _ = feedback_solve(times, walk)
+    degraded = scale_times(times, 1.0, DROP_SCALE)
+
+    def steps_per_s(solve_times, sc, period, run_times):
+        durs = steady_phase_durations(
+            schedule_plans(solve_times, sc), run_times, period,
+            mu=sc.mu, heterogeneous=sc.heterogeneous,
+        )
+        return period / max(sum(durs), 1e-12)
+
+    # ---- static run: the stale schedule rides out the degradation ----
+    sps_before = steps_per_s(times, scfg, schedule.period, times)
+    sps_static_after = steps_per_s(times, scfg, schedule.period, degraded)
+
+    # ---- adaptive run: telemetry -> drift -> replan -> hot-swap ------
+    clear_knapsack_caches()
+    src = SyntheticTelemetrySource(
+        times, BandwidthDrop(step=DROP_STEP, comm_scale=DROP_SCALE)
+    )
+    ctrl = AdaptiveController(times, schedule, scfg, walk=walk)
+    events = []
+    cache_trail = []
+
+    def on_event(event):
+        info = knapsack_cache_info()
+        cache_trail.append(
+            {"step": event.step, "hits": info.hits, "misses": info.misses}
+        )
+        events.append(
+            {"step": event.step, "trigger": event.trigger,
+             "comp_scale": event.profile.comp_scale,
+             "comm_scale": event.profile.comm_scale,
+             "coverage_delta": event.coverage_delta,
+             "period": [event.old_period, event.new_period],
+             "batch_seq": [list(event.old_batch_seq),
+                           list(event.new_batch_seq)],
+             "preserver_ratio": event.verdict.ratio,
+             "preserver_ok": event.verdict.ok,
+             "changed": event.changed,
+             "replan_s": event.replan_s}
+        )
+
+    run_control_loop(ctrl, src, _STEPS, on_event=on_event)
+    replan_wall = sum(e["replan_s"] for e in events)
+    sps_adaptive_after = steps_per_s(
+        ctrl.times, ctrl.scheduler_cfg, ctrl.schedule.period, degraded
+    )
+
+    detection = next(
+        (e["step"] - DROP_STEP for e in events
+         if e["step"] >= DROP_STEP and e["trigger"] == "timing-drift"),
+        None,
+    )
+    result = {
+        "scenario": {"drop_step": DROP_STEP, "drop_scale": DROP_SCALE,
+                     "coverage_rate": CR, "steps": _STEPS},
+        "initial_plan": {
+            "period": schedule.period,
+            "updates_per_period": schedule.updates_per_period,
+            "batch_seq": list(schedule.batch_size_sequence),
+            "preserver_ratio": verdict.ratio,
+        },
+        "steps_per_s_before_drop": sps_before,
+        "steps_per_s_static_after_drop": sps_static_after,
+        "steps_per_s_adaptive_after_drop": sps_adaptive_after,
+        "adaptive_over_static_after_drop":
+            sps_adaptive_after / max(sps_static_after, 1e-12),
+        "detection_latency_steps": detection,
+        "replan_wall_s_total": replan_wall,
+        "replan_events": events,
+        "knapsack_cache_trail": cache_trail,
+    }
+    tmp = _OUT + ".tmp"
+    json.dump(result, open(tmp, "w"), indent=1)
+    os.replace(tmp, _OUT)
+
+    print(f"adapt_steps_per_s_before,{1e6 / max(sps_before, 1e-12):.0f},"
+          f"{sps_before:.3f} steps/s (planned bandwidth)")
+    print(f"adapt_steps_per_s_static_after,"
+          f"{1e6 / max(sps_static_after, 1e-12):.0f},"
+          f"{sps_static_after:.3f} steps/s (stale plan, degraded link)")
+    print(f"adapt_steps_per_s_adaptive_after,"
+          f"{1e6 / max(sps_adaptive_after, 1e-12):.0f},"
+          f"{sps_adaptive_after:.3f} steps/s (replanned, degraded link)")
+    print(f"adapt_speedup_after_drop,"
+          f"{result['adaptive_over_static_after_drop']:.2f},"
+          f"adaptive vs static with {len(events)} replan event(s), "
+          f"detection latency "
+          f"{detection if detection is not None else 'n/a'} steps")
+    print(f"# BENCH_adapt.json written in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        adapt_bench,
         fig10_time_to_solution,
         fig14_scalability,
         fig15_bandwidth,
@@ -30,6 +31,8 @@ def main() -> None:
         ("roofline (dry-run)", roofline.run),
         ("runtime (fused DeftRuntime + solver, BENCH_runtime.json)",
          runtime_bench.run),
+        ("adapt (static vs adaptive replan, BENCH_adapt.json)",
+         adapt_bench.run),
     ]
     t0 = time.time()
     failures = 0

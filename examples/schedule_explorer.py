@@ -1,13 +1,24 @@
 """Schedule explorer: ASCII timeline of what each scheduler does with one
-iteration's buckets — the paper's Fig. 11-13 rendered in a terminal.
+iteration's buckets — the paper's Fig. 11-13 rendered in a terminal —
+plus a replay of the online control plane acting on a mid-run bandwidth
+drop (replan events: step, trigger, coverage-rate delta, Preserver
+verdict).
 
     PYTHONPATH=src python examples/schedule_explorer.py --cr 2.0
+    PYTHONPATH=src python examples/schedule_explorer.py --adapt \
+        --drop-step 40 --drop-scale 3.0
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
+from repro.adapt import (
+    AdaptiveController,
+    BandwidthDrop,
+    SyntheticTelemetrySource,
+    run_control_loop,
+)
 from repro.configs import get_config
 from repro.core.bucket import BucketTimes
 from repro.core.deft import plan_deft
@@ -35,11 +46,45 @@ def render(timeline, t_end, label):
         print(f"{stream:8s} |{''.join(row)}|")
 
 
+def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
+                  steps: int) -> None:
+    """Replay the control plane on a synthetic bandwidth drop and print
+    every replan event — the terminal view of the Fig. 7 loop acting."""
+    from repro.core.deft import feedback_solve
+    from repro.core.preserver import WalkParams
+
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    schedule, verdict, scfg, _ = feedback_solve(times, walk)
+    print(f"\n== adaptive control plane: bandwidth x1/{drop_scale:.1f} "
+          f"at step {drop_step} ==")
+    print(f"initial plan: period={schedule.period} "
+          f"k-seq={schedule.batch_size_sequence} "
+          f"CR={times.coverage_rate:.2f} "
+          f"preserver ratio={verdict.ratio:.4f}")
+    src = SyntheticTelemetrySource(
+        times, BandwidthDrop(step=drop_step, comm_scale=drop_scale)
+    )
+    ctrl = AdaptiveController(times, schedule, scfg, walk=walk)
+    run_control_loop(ctrl, src, steps,
+                     on_event=lambda e: print(e.describe()))
+    if not ctrl.events:
+        print("(no drift detected — no replan events)")
+    else:
+        print(f"{len(ctrl.events)} replan event(s), "
+              f"{sum(1 for e in ctrl.events if e.changed)} hot-swap(s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--cr", type=float, default=2.0)
     ap.add_argument("--iters", type=int, default=4)
+    ap.add_argument("--adapt", action="store_true",
+                    help="also replay the online control plane on a "
+                         "synthetic mid-run bandwidth drop")
+    ap.add_argument("--drop-step", type=int, default=40)
+    ap.add_argument("--drop-scale", type=float, default=3.0)
+    ap.add_argument("--adapt-steps", type=int, default=120)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -68,6 +113,9 @@ def main() -> None:
            f"deft: iter={r.iteration_time*1e3:.1f}ms "
            f"bubble={r.bubble_fraction:.2f} "
            f"upd/iter={r.updates_per_iteration:.2f}")
+
+    if args.adapt:
+        explore_adapt(t, args.drop_step, args.drop_scale, args.adapt_steps)
 
 
 if __name__ == "__main__":

@@ -23,10 +23,11 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.adapt import AdaptConfig, AdaptiveController
 from repro.configs import get_config
 from repro.core.bucket import BucketTimes
-from repro.core.deft import solve_schedule
-from repro.core.scheduler import DeftScheduler, SchedulerConfig
+from repro.core.deft import feedback_solve
+from repro.core.scheduler import DeftScheduler
 from repro.core.profiler import HardwareModel
 from repro.core.simulator import simulate_baseline, simulate_deft
 from repro.core.policies import pytorch_ddp
@@ -52,6 +53,9 @@ def main() -> None:
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--coverage-rate", type=float, default=1.8,
                     help="simulated CR (sets how aggressively DeFT merges)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="attach the online control plane to the DeFT run "
+                         "(real measured wall times feed drift detection)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -84,16 +88,9 @@ def main() -> None:
                         tuple(c * scale for c in times.comm))
     # Solver + Preserver feedback (paper Fig. 7): reject schedules whose
     # variable-batch-size sequence would hurt convergence
-    from repro.core.preserver import WalkParams, check_schedule
+    from repro.core.preserver import WalkParams
     walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
-    factor = 1.0
-    for _ in range(11):
-        scfg = SchedulerConfig(capacity_factor=factor)
-        schedule = solve_schedule(times, scfg)
-        if check_schedule(schedule.batch_size_sequence, schedule.period,
-                          walk, eps=0.01).ok:
-            break
-        factor *= 1.2
+    schedule, _verdict, scfg, _ = feedback_solve(times, walk)
     print(f"deft schedule: {nb} buckets CR={times.coverage_rate:.2f} "
           f"period={schedule.period} updates/period="
           f"{schedule.updates_per_period} k-seq={schedule.batch_size_sequence}")
@@ -117,6 +114,11 @@ def main() -> None:
                "opt": init_opt_state(opt, state_d["params"])}
     state_d = runtime.init_state(key)
     ddp_fn = make_ddp_step(cfg, opt)
+    controller = (
+        AdaptiveController(times, schedule, scfg, walk=walk,
+                           cfg=AdaptConfig(eta=3e-4))
+        if args.adapt else None
+    )
     with jax.set_mesh(mesh):
         ds_d = SyntheticDataset(cfg, args.seed, args.batch, args.seq)
         ds_r = SyntheticDataset(cfg, args.seed, args.batch, args.seq)
@@ -128,7 +130,17 @@ def main() -> None:
         for step in range(args.steps):
             bd = next(ds_d)
             br = next(ds_r)
+            t_s = time.time()
             state_d, md = runtime.step(step, state_d, bd)
+            if controller is not None:
+                jax.block_until_ready(md["loss"])
+                event = controller.observe(
+                    step, runtime.last_phase, time.time() - t_s,
+                    loss=float(md["loss"]),
+                )
+                if event is not None and event.changed:
+                    runtime.prepare_swap(event.schedule, state_d, bd,
+                                         background=True)
             state_r, mr = ddp_fn(state_r, br)
             ddp_hist.append(float(mr["loss"]))
             deft_hist.append(float(md["loss"]))

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the fast deterministic suite + a dry-run smoke.
+#
+# The default pytest run excludes the `slow` / `multidevice` markers
+# (full multi-device subprocess equivalence runs, ~10 min) so that the
+# everyday gate stays fast; run `pytest -m slow` explicitly before
+# touching shard_map/collective code.
+#
+#   scripts/verify.sh          # tests + dry-run smoke
+#   scripts/verify.sh --fast   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests (excluding slow/multidevice) =="
+python -m pytest -q -m "not slow and not multidevice"
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== dry-run smoke (compile-only, no model memory) =="
+  # default (ddp) mode: --mode deft needs jax >= 0.5 on the production
+  # mesh (partial-manual SPMD CHECK on old jaxlib — DESIGN.md §6)
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+fi
+
+echo "verify.sh: OK"

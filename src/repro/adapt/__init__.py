@@ -1,0 +1,41 @@
+"""Online adaptive control plane: telemetry -> calibration -> drift
+detection -> Preserver-gated replanning -> DeftRuntime hot-swap.
+
+Closes the paper's Fig. 7 feedback loop *during* training instead of only
+before step 0: measured per-phase wall times re-base the analytical
+profile, the Solver re-plans off the hot path, and the runtime swaps the
+compiled phase set at a period boundary (DESIGN.md §7).
+"""
+from repro.adapt.calibrate import (
+    CalibratedProfile,
+    calibrate,
+    fit_scales,
+    scale_times,
+    schedule_plans,
+    steady_phase_durations,
+)
+from repro.adapt.controller import AdaptConfig, AdaptiveController, ReplanEvent
+from repro.adapt.scenario import (
+    BandwidthDrop,
+    SyntheticTelemetrySource,
+    run_control_loop,
+)
+from repro.adapt.telemetry import StepSample, Telemetry, TelemetryConfig
+
+__all__ = [
+    "AdaptConfig",
+    "AdaptiveController",
+    "BandwidthDrop",
+    "CalibratedProfile",
+    "ReplanEvent",
+    "StepSample",
+    "SyntheticTelemetrySource",
+    "Telemetry",
+    "TelemetryConfig",
+    "calibrate",
+    "fit_scales",
+    "run_control_loop",
+    "scale_times",
+    "schedule_plans",
+    "steady_phase_durations",
+]

@@ -1,0 +1,292 @@
+"""Drift detection + Preserver-gated replanning (the online Fig. 7 loop).
+
+The controller sits between :class:`DeftRuntime` and the planner.  Every
+step the train loop feeds it (step id, phase-in-cycle, wall seconds,
+loss); every ``check_every`` steps — once telemetry is warm — it:
+
+1. **calibrates**: fits (comp_scale, comm_scale) so the simulated
+   per-phase durations of the installed plan match the measured EMAs
+   (:mod:`repro.adapt.calibrate`);
+2. **detects drift**: either fitted scale deviating from 1 beyond
+   ``drift_threshold`` (the plan's timing assumptions are wrong), or the
+   Preserver verdict flipping when re-checked under *measured*
+   ``WalkParams`` fit from the observed loss trace (the plan's
+   convergence assumptions are wrong);
+3. **replans**: re-runs the Solver + Preserver feedback loop
+   (:func:`repro.core.deft.feedback_solve`) on the calibrated bucket
+   times.  The knapsack memo cache (core/knapsack.py) makes consecutive
+   replans over a drifting-but-similar profile cheap — the solver
+   re-solves mostly cache-hit instances.
+
+A replan yields a :class:`ReplanEvent`; when the new schedule's phases
+differ from the installed ones the caller hands it to
+``DeftRuntime.prepare_swap`` for background compile + period-boundary
+hot-swap.  All of this runs off the hot path: the controller does pure
+Python (simulator + DP) work, never touches device state, and a
+``cooldown`` keeps it from thrashing while new telemetry accumulates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+from repro.adapt.calibrate import (
+    CalibratedProfile,
+    calibrate,
+    planned_phase_durations,
+)
+from repro.adapt.telemetry import Telemetry, TelemetryConfig
+from repro.core.bucket import BucketTimes
+from repro.core.deft import feedback_solve
+from repro.core.preserver import (
+    PreserverVerdict,
+    WalkParams,
+    check_schedule,
+    estimate_walk_params_from_losses,
+)
+from repro.core.scheduler import DeftSchedule, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Control-plane constants (DESIGN.md §7 documents the choices)."""
+
+    # telemetry
+    ring_size: int = 256
+    ema_alpha: float = 0.25
+    warmup_steps: int = 8
+    # drift detection
+    check_every: int = 8          # steps between calibration passes
+    drift_threshold: float = 0.25 # |scale - 1| that triggers a replan
+    cooldown_steps: int = 16      # min steps between replans
+    min_loss_samples: int = 12    # before the measured-WalkParams check
+    # replanning (mirrors plan_deft defaults)
+    eps: float = 0.01
+    max_retries: int = 10
+    capacity_growth: float = 1.2
+    # measured-WalkParams fit inputs
+    eta: float = 1e-3             # learning rate fed to the walk fit
+    base_batch: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One control-plane action, in human-readable terms."""
+
+    step: int
+    trigger: str                   # 'timing-drift' | 'preserver-flip'
+    profile: CalibratedProfile
+    old_coverage_rate: float
+    new_coverage_rate: float
+    old_period: int
+    new_period: int
+    old_batch_seq: tuple
+    new_batch_seq: tuple
+    verdict: PreserverVerdict      # Preserver verdict of the NEW schedule
+    schedule: DeftSchedule
+    scheduler_cfg: SchedulerConfig
+    times: BucketTimes             # calibrated times the replan consumed
+    changed: bool                  # new phases differ from installed ones
+    replan_s: float                # wall seconds spent solving
+
+    @property
+    def coverage_delta(self) -> float:
+        return self.new_coverage_rate - self.old_coverage_rate
+
+    def describe(self) -> str:
+        return (
+            f"step {self.step:5d}  {self.trigger:<14s} "
+            f"comp x{self.profile.comp_scale:.2f} "
+            f"comm x{self.profile.comm_scale:.2f}  "
+            f"CR {self.old_coverage_rate:.2f}->{self.new_coverage_rate:.2f} "
+            f"(d{self.coverage_delta:+.2f})  "
+            f"period {self.old_period}->{self.new_period}  "
+            f"k-seq {self.old_batch_seq}->{self.new_batch_seq}  "
+            f"preserver ratio={self.verdict.ratio:.4f} "
+            f"ok={self.verdict.ok}  "
+            f"{'SWAP' if self.changed else 'no-op'} "
+            f"({self.replan_s * 1e3:.0f} ms)"
+        )
+
+
+class AdaptiveController:
+    """Owns telemetry + the installed plan's planning-time view."""
+
+    def __init__(
+        self,
+        times: BucketTimes,
+        schedule: DeftSchedule,
+        scheduler_cfg: SchedulerConfig,
+        walk: Optional[WalkParams] = None,
+        cfg: Optional[AdaptConfig] = None,
+    ):
+        self.cfg = cfg or AdaptConfig()
+        self.times = times                   # what the installed plan assumed
+        self.schedule = schedule
+        self.scheduler_cfg = scheduler_cfg
+        self.walk = walk or WalkParams(
+            s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256
+        )
+        self.telemetry = Telemetry(
+            schedule.period,
+            TelemetryConfig(
+                ring_size=self.cfg.ring_size,
+                ema_alpha=self.cfg.ema_alpha,
+                warmup_steps=self.cfg.warmup_steps,
+            ),
+        )
+        self.events: List[ReplanEvent] = []
+        self._last_replan_step = -(10**9)
+        self._last_check_step = -(10**9)
+
+    # ---- the per-step hook ----------------------------------------------
+    def observe(
+        self,
+        step: int,
+        phase: int,
+        wall_s: float,
+        loss: Optional[float] = None,
+        updated: bool = False,
+    ) -> Optional[ReplanEvent]:
+        """Feed one step's telemetry; returns a ReplanEvent when this step
+        triggered a replan (caller decides whether to hot-swap)."""
+        self.telemetry.record(step, phase, wall_s, loss, updated)
+        if step - self._last_check_step < self.cfg.check_every:
+            return None
+        if step - self._last_replan_step < self.cfg.cooldown_steps:
+            return None
+        if not self.telemetry.ready():
+            return None
+        self._last_check_step = step
+        return self._check(step)
+
+    # ---- drift detection -------------------------------------------------
+    def duration_deviation(self) -> float:
+        """Cheap steady-state screen: largest relative deviation of a
+        phase's measured EMA from the planned duration.  Only when this
+        exceeds the drift threshold is the full 2-D calibration fit worth
+        paying for (both are off the hot path; this keeps the common
+        nothing-drifted check at ~zero cost)."""
+        planned = planned_phase_durations(
+            self.times, self.scheduler_cfg, self.schedule.period
+        )
+        dev = 0.0
+        for p, m in zip(planned, self.telemetry.phase_times()):
+            if m is not None and p > 1e-12:
+                dev = max(dev, abs(m - p) / p)
+        return dev
+
+    def _check(self, step: int) -> Optional[ReplanEvent]:
+        trigger: Optional[str] = None
+        # once a measured walk exists, EVERY replan solves under it —
+        # mixing the planned walk into timing replans and the measured
+        # walk into flip replans makes consecutive replans oscillate
+        # between the two convergence models
+        measured_walk = self.measured_walk()
+        walk = measured_walk or self.walk
+        profile: Optional[CalibratedProfile] = None
+        if self.duration_deviation() > self.cfg.drift_threshold:
+            profile = calibrate(
+                self.times,
+                self.scheduler_cfg,
+                self.schedule.period,
+                self.telemetry.phase_times(),
+            )
+            if profile.drift > self.cfg.drift_threshold:
+                trigger = "timing-drift"
+        if trigger is None and measured_walk is not None:
+            v = check_schedule(
+                self.schedule.batch_size_sequence,
+                self.schedule.period,
+                measured_walk,
+                eps=self.cfg.eps,
+            )
+            if not v.ok:
+                trigger = "preserver-flip"
+        if trigger is None:
+            return None
+        if profile is None:
+            profile = calibrate(
+                self.times,
+                self.scheduler_cfg,
+                self.schedule.period,
+                self.telemetry.phase_times(),
+            )
+        return self._replan(step, trigger, profile, walk)
+
+    def measured_walk(self) -> Optional[WalkParams]:
+        """WalkParams fit from the observed loss trace (the paper's
+        'convergence info' edge of Fig. 7); None until enough samples."""
+        losses = self.telemetry.losses()
+        if len(losses) < self.cfg.min_loss_samples:
+            return None
+        return estimate_walk_params_from_losses(
+            losses, eta=self.cfg.eta, batch=self.cfg.base_batch
+        )
+
+    # ---- replanning ------------------------------------------------------
+    def _replan(
+        self,
+        step: int,
+        trigger: str,
+        profile: CalibratedProfile,
+        walk: WalkParams,
+    ) -> ReplanEvent:
+        t0 = time.perf_counter()
+        schedule, verdict, scfg, _ = feedback_solve(
+            profile.times,
+            walk,
+            heterogeneous=self.scheduler_cfg.heterogeneous,
+            mu=self.scheduler_cfg.mu,
+            eps=self.cfg.eps,
+            max_retries=self.cfg.max_retries,
+            capacity_growth=self.cfg.capacity_growth,
+        )
+        replan_s = time.perf_counter() - t0
+        event = ReplanEvent(
+            step=step,
+            trigger=trigger,
+            profile=profile,
+            old_coverage_rate=self.times.coverage_rate,
+            new_coverage_rate=profile.times.coverage_rate,
+            old_period=self.schedule.period,
+            new_period=schedule.period,
+            old_batch_seq=tuple(self.schedule.batch_size_sequence),
+            new_batch_seq=tuple(schedule.batch_size_sequence),
+            verdict=verdict,
+            schedule=schedule,
+            scheduler_cfg=scfg,
+            times=profile.times,
+            changed=schedule.phases != self.schedule.phases,
+            replan_s=replan_s,
+        )
+        self.events.append(event)
+        self._last_replan_step = step
+        # the calibrated profile becomes the baseline the next check
+        # compares against EVEN when the phases came out identical (a
+        # no-op replan): the drift was real and is now accounted for —
+        # without this the same deviation would re-trigger every
+        # cooldown.  Telemetry re-keys at the new period; the widened
+        # warm-up also swallows the old schedule's tail steps that run
+        # before the runtime installs the swap at a cycle boundary.
+        old_period = self.schedule.period
+        self.times = profile.times
+        self.schedule = schedule
+        self.scheduler_cfg = scfg
+        self.telemetry.rebase(schedule.period, extra_warmup=old_period)
+        return event
+
+    # ---- reporting -------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "replans": len(self.events),
+            "swaps_requested": sum(1 for e in self.events if e.changed),
+            "triggers": [e.trigger for e in self.events],
+            "last_comp_scale": (
+                self.events[-1].profile.comp_scale if self.events else 1.0
+            ),
+            "last_comm_scale": (
+                self.events[-1].profile.comm_scale if self.events else 1.0
+            ),
+        }

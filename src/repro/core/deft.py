@@ -12,7 +12,7 @@ decrease in parameter update frequency") and re-solves, up to
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.bucket import BucketTimes
@@ -54,6 +54,38 @@ def solve_schedule(
     return extract_schedule(plans, n_buckets or times.n, warmup=warmup)
 
 
+def feedback_solve(
+    times: BucketTimes,
+    walk: WalkParams,
+    *,
+    heterogeneous: bool = True,
+    mu: float = 1.65,
+    eps: float = 0.01,
+    max_retries: int = 10,
+    capacity_growth: float = 1.2,
+    initial_factor: float = 1.0,
+) -> Tuple[DeftSchedule, PreserverVerdict, SchedulerConfig, int]:
+    """The Fig. 7 feedback loop over profiled bucket times: solve, check
+    with the Preserver, and grow the knapsack capacity on rejection (up to
+    ``max_retries``).  Shared by :func:`plan_deft` (analytic profiles),
+    the train driver (leaf-bucket profiles) and the online adaptive
+    controller (measurement-calibrated profiles)."""
+    factor = initial_factor
+    schedule, verdict, scfg, retry = None, None, None, 0
+    for retry in range(max_retries + 1):
+        scfg = SchedulerConfig(
+            heterogeneous=heterogeneous, mu=mu, capacity_factor=factor
+        )
+        schedule = solve_schedule(times, scfg, n_buckets=times.n)
+        verdict = check_schedule(
+            schedule.batch_size_sequence, schedule.period, walk, eps=eps
+        )
+        if verdict.ok:
+            break
+        factor *= capacity_growth
+    return schedule, verdict, scfg, retry
+
+
 def plan_deft(
     cfg: ArchConfig,
     hw: HardwareModel = HardwareModel(),
@@ -80,25 +112,21 @@ def plan_deft(
     )
     walk = walk or WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
 
-    factor = 1.0
-    last = None
-    for retry in range(max_retries + 1):
-        scfg = SchedulerConfig(
-            heterogeneous=heterogeneous, mu=mu, capacity_factor=factor
-        )
-        schedule = solve_schedule(profile.times, scfg, n_buckets=len(profile.times.fwd))
-        verdict = check_schedule(
-            schedule.batch_size_sequence, schedule.period, walk, eps=eps
-        )
-        last = DeftPlan(
-            profile=profile,
-            schedule=schedule,
-            verdict=verdict,
-            capacity_factor=factor,
-            retries=retry,
-            scheduler_cfg=scfg,
-        )
-        if verdict.ok:
-            return last
-        factor *= capacity_growth
-    return last  # best effort after max retries (paper caps at 10)
+    schedule, verdict, scfg, retries = feedback_solve(
+        profile.times,
+        walk,
+        heterogeneous=heterogeneous,
+        mu=mu,
+        eps=eps,
+        max_retries=max_retries,
+        capacity_growth=capacity_growth,
+    )
+    # best effort after max retries (paper caps at 10)
+    return DeftPlan(
+        profile=profile,
+        schedule=schedule,
+        verdict=verdict,
+        capacity_factor=scfg.capacity_factor,
+        retries=retries,
+        scheduler_cfg=scfg,
+    )

@@ -390,7 +390,13 @@ def _plan_to_phase(plan: IterationPlan, n_buckets: int) -> PhaseSpec:
             sync_cur[b] = True
         if b in sec_buckets:
             secondary[b] = True
-    rotate = plan.case.endswith("case3") or plan.case.endswith("case4")
+    # the fresh generation rotates into `cur` whenever Case 3/4 ran this
+    # iteration — also when the liveness fallback appended "+forced" (a
+    # forced fresh-origin sync still belongs to the rotated generation;
+    # matching on endswith() here used to leave rotate=False and strand
+    # an update_source="new" phase with no generation to update from)
+    labels = plan.case.split("+")
+    rotate = "case3" in labels or "case4" in labels
     update_source = (
         "new" if plan.update and plan.iteration in plan.update_origins else "cur"
     )

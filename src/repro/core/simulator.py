@@ -36,6 +36,9 @@ class SimResult:
     updates_per_iteration: float   # 1.0 for baselines; <=1 for DeFT
     timeline: Optional[List[Tuple[str, float, float, str]]] = None
     # timeline entries: (stream, start, end, label)
+    # per-iteration wall durations (incl. warmup iterations) — the adapt
+    # control plane consumes these as synthetic per-phase telemetry
+    iteration_durations: Tuple[float, ...] = ()
 
     @property
     def throughput_speedup_vs(self):
@@ -118,7 +121,13 @@ def simulate_baseline(
         bubble_fraction=max(0.0, 1.0 - compute / span),
         updates_per_iteration=1.0,
         timeline=timeline if keep_timeline else None,
+        iteration_durations=_durations(iter_starts, t),
     )
+
+
+def _durations(iter_starts: List[float], t_end: float) -> Tuple[float, ...]:
+    bounds = iter_starts + [t_end]
+    return tuple(bounds[i + 1] - bounds[i] for i in range(len(iter_starts)))
 
 
 def simulate_deft(
@@ -209,4 +218,5 @@ def simulate_deft(
         bubble_fraction=max(0.0, 1.0 - compute / span),
         updates_per_iteration=updates,
         timeline=timeline if keep_timeline else None,
+        iteration_durations=_durations(iter_starts, t),
     )

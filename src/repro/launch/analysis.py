@@ -162,6 +162,8 @@ def analyse_compiled(
     costs; collective bytes parsed from HLO are likewise per device.
     """
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     bytes_ = float(ca.get("bytes accessed", 0.0))
     try:

@@ -17,11 +17,17 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.adapt import (
+    AdaptConfig,
+    AdaptiveController,
+    BandwidthDrop,
+    SyntheticTelemetrySource,
+)
 from repro.checkpoint.checkpoint import save as save_ckpt
 from repro.configs import ARCH_NAMES, get_config, reduce_for_smoke
 from repro.core.bucket import BucketTimes
-from repro.core.deft import plan_deft, solve_schedule
-from repro.core.preserver import WalkParams, check_schedule
+from repro.core.deft import feedback_solve
+from repro.core.preserver import WalkParams
 from repro.core.profiler import HardwareModel
 from repro.core.scheduler import SchedulerConfig
 from repro.data.pipeline import SyntheticDataset, batch_spec
@@ -69,17 +75,11 @@ def build_schedule(
         times = BucketTimes(times.fwd, times.bwd,
                             tuple(c * scale for c in times.comm))
     walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
-    factor = 1.0
-    for retry in range(max_retries + 1):
-        scfg = SchedulerConfig(heterogeneous=heterogeneous, mu=mu,
-                               capacity_factor=factor)
-        schedule = solve_schedule(times, scfg)
-        verdict = check_schedule(schedule.batch_size_sequence,
-                                 schedule.period, walk, eps=eps)
-        if verdict.ok:
-            break
-        factor *= 1.2
-    return bucket_of, nb, times, schedule, verdict, factor
+    schedule, verdict, scfg, _ = feedback_solve(
+        times, walk, heterogeneous=heterogeneous, mu=mu, eps=eps,
+        max_retries=max_retries,
+    )
+    return bucket_of, nb, times, schedule, verdict, scfg
 
 
 def main() -> None:
@@ -94,6 +94,14 @@ def main() -> None:
     ap.add_argument("--coverage-rate", type=float, default=1.8,
                     help="synthetic CR for the DeFT schedule (0 = analytic)")
     ap.add_argument("--partition-elems", type=int, default=200_000)
+    ap.add_argument("--adapt", action="store_true",
+                    help="online control plane: telemetry -> drift "
+                         "detection -> replan -> phase hot-swap")
+    ap.add_argument("--adapt-drop-step", type=int, default=0,
+                    help="with --adapt: inject a synthetic bandwidth drop "
+                         "at this step (0 = use real measured wall times)")
+    ap.add_argument("--adapt-drop-scale", type=float, default=3.0,
+                    help="comm slowdown factor of the injected drop")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--data", type=int, default=0, help="debug mesh data axis")
     ap.add_argument("--model", type=int, default=0, help="debug mesh model axis")
@@ -131,7 +139,7 @@ def main() -> None:
             params_abs = jax.eval_shape(
                 lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
             )
-            bucket_of, nb, times, schedule, verdict, factor = build_schedule(
+            bucket_of, nb, times, schedule, verdict, scfg = build_schedule(
                 params_abs, cfg, dp=dp, seq_len=args.seq,
                 per_device_batch=max(args.batch // dp, 1),
                 partition_elems=args.partition_elems,
@@ -142,7 +150,7 @@ def main() -> None:
                   f"updates/period={schedule.updates_per_period}, "
                   f"batch-size seq={schedule.batch_size_sequence}, "
                   f"preserver ratio={verdict.ratio:.4f} "
-                  f"(capacity x{factor:.2f})")
+                  f"(capacity x{scfg.capacity_factor:.2f})")
             layout = build_bucket_layout(params_abs, bucket_of, nb)
             runtime = DeftRuntime(cfg, opt, schedule, layout, mesh, fsdp=fsdp)
             state = runtime.init_state(key)
@@ -156,19 +164,66 @@ def main() -> None:
                   f"{runtime.stats()['max_collectives_in_a_phase']} "
                   f"(vs {layout.n_leaves} per-leaf)")
 
+        # ---- online adaptive control plane (--adapt) ------------------
+        controller = None
+        telemetry_src = None
+        if args.adapt and runtime is not None:
+            controller = AdaptiveController(
+                times, schedule, scfg,
+                cfg=AdaptConfig(eta=1e-3, warmup_steps=4, check_every=4,
+                                cooldown_steps=2 * schedule.period),
+            )
+            if args.adapt_drop_step > 0:
+                telemetry_src = SyntheticTelemetrySource(
+                    times,
+                    BandwidthDrop(step=args.adapt_drop_step,
+                                  comm_scale=args.adapt_drop_scale),
+                )
+                print(f"adapt: synthetic bandwidth drop "
+                      f"x{args.adapt_drop_scale} at step "
+                      f"{args.adapt_drop_step}")
+
         t0 = time.time()
         for step in range(args.steps):
             batch = next(ds)
+            t_s = time.perf_counter()
             if runtime is None:
                 state, m = step_fn(state, batch)
             else:
                 state, m = runtime.step(step, state, batch)
+            if controller is not None:
+                if telemetry_src is not None:
+                    wall = telemetry_src.wall_time(
+                        step, controller.schedule, controller.scheduler_cfg,
+                        runtime.last_phase, solve_times=controller.times,
+                    )
+                else:
+                    jax.block_until_ready(m["loss"])
+                    wall = time.perf_counter() - t_s
+                event = controller.observe(
+                    step, runtime.last_phase, wall, loss=float(m["loss"])
+                )
+                if event is not None:
+                    print(f"adapt: {event.describe()}")
+                    if event.changed:
+                        runtime.prepare_swap(
+                            event.schedule, state,
+                            batch_spec(cfg, args.batch, args.seq),
+                            background=True,
+                        )
             if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
                 print(f"step {step:4d} loss={float(m['loss']):.4f} "
                       f"updated={bool(m['updated'])}")
         dt = time.time() - t0
         print(f"{args.steps} steps in {dt:.1f}s "
               f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+        if runtime is not None and args.adapt:
+            st = runtime.stats()
+            print(f"adapt: {st['replans']} replans, {st['hot_swaps']} "
+                  f"hot-swaps, {st['cached_phases']} cached phases, "
+                  f"{st['steps_per_s']:.2f} steps/s (dispatch)")
+            for ev in (controller.events if controller else []):
+                print(f"  {ev.describe()}")
 
     if args.ckpt:
         path = save_ckpt(args.ckpt, args.steps, state)

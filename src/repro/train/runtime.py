@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -299,18 +300,52 @@ class PhaseStats:
     dispatch_s: float = 0.0
 
 
-class DeftRuntime:
-    """Owns the per-phase executables of one DeFT schedule.
+def _abstractify(x):
+    """Shape/dtype/sharding snapshot of a (possibly soon-donated) array;
+    passes ShapeDtypeStructs and non-array leaves through unchanged."""
+    if isinstance(x, jax.ShapeDtypeStruct) or not hasattr(x, "dtype"):
+        return x
+    sharding = getattr(x, "sharding", None)
+    try:
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sharding)
+    except TypeError:  # older jax: no sharding kwarg
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
 
-    Lifecycle (DESIGN.md §Phase cache):
+
+class _PhaseEntry:
+    """One unique PhaseSpec's executable lifecycle: the donated jitted
+    callable, its AOT-compiled executable (once built) and stats.  Entries
+    live in the runtime's *persistent* phase cache — a replanned schedule
+    that reuses a PhaseSpec reuses its compiled executable verbatim."""
+
+    __slots__ = ("spec", "jitted", "compiled", "stats")
+
+    def __init__(self, spec: PhaseSpec, jitted: Callable):
+        self.spec = spec
+        self.jitted = jitted
+        self.compiled: Optional[Callable] = None
+        self.stats = PhaseStats()
+
+
+class DeftRuntime:
+    """Owns the per-phase executables of one (evolving) DeFT schedule.
+
+    Lifecycle (DESIGN.md §5/§7):
 
     1. construction dedupes ``schedule.phases`` by spec signature and
        builds one donated jitted callable per *unique* phase;
     2. :meth:`compile` lowers + compiles each unique phase ahead of time
        against concrete (or abstract) state/batch, recording timings;
-    3. :meth:`step` dispatches ``i % period`` through the AOT cache
-       (falling back to the jitted callable if :meth:`compile` was
-       skipped — first dispatch then pays the compile).
+    3. :meth:`step` dispatches the step's cycle phase through the AOT
+       cache (falling back to the jitted callable if :meth:`compile` was
+       skipped — first dispatch then pays the compile);
+    4. :meth:`prepare_swap` stages a replanned schedule: unseen phases
+       are lowered + compiled (optionally on a background thread while
+       training continues), previously-seen phases are reused from the
+       persistent cache, and the new schedule is installed atomically at
+       the next cycle boundary — the donated train state carries across
+       untouched because a replan over the same :class:`BucketLayout`
+       leaves every buffer shape and sharding unchanged.
 
     All phase executables donate the train state: callers MUST treat the
     state passed to :meth:`step` as consumed and continue with the
@@ -334,12 +369,14 @@ class DeftRuntime:
     ):
         self.cfg = cfg
         self.opt_spec = opt_spec
-        self.schedule = schedule
         self.layout = layout
         self.mesh = mesh
         self.fsdp = fsdp
         self.multi_pod = multi_pod
         self.donate = donate
+        self._remat = remat
+        self._loss_chunk = loss_chunk
+        self._unroll = unroll
         if fsdp:
             self.dp_axes: Tuple[str, ...] = ("pod",)
         else:
@@ -349,39 +386,70 @@ class DeftRuntime:
         for a in self.dp_axes:
             self.accum_devices *= int(shape[a])
 
-        step_impl = deft_rs_phase_step_fused if fsdp else deft_phase_step_fused
-        self._unique: List[PhaseSpec] = []
-        self._index_of: Dict[PhaseSpec, int] = {}
-        for phase in schedule.phases:
-            if phase not in self._index_of:
-                self._index_of[phase] = len(self._unique)
-                self._unique.append(phase)
-        self.phase_of_step: Tuple[int, ...] = tuple(
-            self._index_of[p] for p in schedule.phases
+        # persistent phase cache: PhaseSpec -> executable entry.  Survives
+        # hot-swaps; schedules only reference into it.
+        self._entries: Dict[PhaseSpec, _PhaseEntry] = {}
+        # hot-swap state
+        self._cycle_base = 0               # step at which the cycle restarts
+        self._pending: Optional[DeftSchedule] = None
+        self._swap_gen = 0                 # stale background builds don't publish
+        self._swap_thread: Optional[threading.Thread] = None
+        self.replans = 0                   # schedules staged via prepare_swap
+        self.hot_swaps = 0                 # schedules actually installed
+        self.swap_log: List[Dict[str, Any]] = []
+        self.last_phase = 0                # cycle phase of the last dispatch
+        self._install(schedule)
+
+    # ---- schedule installation ------------------------------------------
+    def _make_jitted(self, phase: PhaseSpec) -> Callable:
+        step_impl = (
+            deft_rs_phase_step_fused if self.fsdp else deft_phase_step_fused
+        )
+        kw = dict(
+            cfg=self.cfg,
+            opt_spec=self.opt_spec,
+            phase=phase,
+            layout=self.layout,
+            mesh=self.mesh,
+            remat=self._remat,
+            loss_chunk=self._loss_chunk,
+            unroll=self._unroll,
+        )
+        if not self.fsdp:
+            kw["multi_pod"] = self.multi_pod
+        return jax.jit(
+            functools.partial(step_impl, **kw),
+            donate_argnums=(0,) if self.donate else (),
         )
 
-        self._jitted: List[Callable] = []
-        for phase in self._unique:
-            kw = dict(
-                cfg=cfg,
-                opt_spec=opt_spec,
-                phase=phase,
-                layout=layout,
-                mesh=mesh,
-                remat=remat,
-                loss_chunk=loss_chunk,
-                unroll=unroll,
-            )
-            if not fsdp:
-                kw["multi_pod"] = multi_pod
-            self._jitted.append(
-                jax.jit(
-                    functools.partial(step_impl, **kw),
-                    donate_argnums=(0,) if donate else (),
-                )
-            )
-        self._compiled: List[Optional[Callable]] = [None] * len(self._unique)
-        self._stats: List[PhaseStats] = [PhaseStats() for _ in self._unique]
+    def _ensure_entries(
+        self, schedule: DeftSchedule
+    ) -> Tuple[List[_PhaseEntry], int]:
+        """Create cache entries for the schedule's unseen PhaseSpecs.
+        Returns (entries needing compile, number reused from cache)."""
+        fresh: List[_PhaseEntry] = []
+        reused = 0
+        for phase in schedule.phases:
+            if phase in self._entries:
+                reused += 1
+                continue
+            entry = _PhaseEntry(phase, self._make_jitted(phase))
+            self._entries[phase] = entry
+            fresh.append(entry)
+        return fresh, reused
+
+    def _install(self, schedule: DeftSchedule) -> None:
+        self._ensure_entries(schedule)
+        self.schedule = schedule
+        self._unique: List[PhaseSpec] = []
+        index_of: Dict[PhaseSpec, int] = {}
+        for phase in schedule.phases:
+            if phase not in index_of:
+                index_of[phase] = len(self._unique)
+                self._unique.append(phase)
+        self.phase_of_step: Tuple[int, ...] = tuple(
+            index_of[p] for p in schedule.phases
+        )
 
     # ---- state ----------------------------------------------------------
     @property
@@ -391,6 +459,18 @@ class DeftRuntime:
     @property
     def n_unique_phases(self) -> int:
         return len(self._unique)
+
+    @property
+    def n_cached_phases(self) -> int:
+        """Unique phases ever compiled/jitted, across all installed
+        schedules (the persistent cache's size)."""
+        return len(self._entries)
+
+    def phase_in_cycle(self, i: int) -> int:
+        """Cycle phase step ``i`` will dispatch.  Correct across swaps:
+        a staged schedule installs exactly at a boundary, where both the
+        old and the new cycle agree the phase is 0."""
+        return (i - self._cycle_base) % self.period
 
     def init_state(self, key, dtype=jnp.float32) -> TrainState:
         """Fresh train state, committed to the shardings the phase
@@ -417,42 +497,134 @@ class DeftRuntime:
         }
 
     # ---- AOT phase cache ------------------------------------------------
+    def _compile_entries(
+        self, entries: Sequence[_PhaseEntry], state, batch
+    ) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        with jax.set_mesh(self.mesh):
+            for i, entry in enumerate(entries):
+                if entry.compiled is not None:
+                    continue
+                t0 = time.perf_counter()
+                lowered = entry.jitted.lower(state, batch)
+                t1 = time.perf_counter()
+                entry.compiled = lowered.compile()
+                t2 = time.perf_counter()
+                entry.stats.lower_s = t1 - t0
+                entry.stats.compile_s = t2 - t1
+                out[f"phase{i}"] = t2 - t0
+        return out
+
     def compile(self, state: TrainState, batch) -> Dict[str, float]:
-        """Lower + compile every unique phase ahead of the first step.
+        """Lower + compile every unique phase of the installed schedule
+        ahead of the first step.
 
         ``state``/``batch`` may be concrete arrays or ShapeDtypeStructs.
         Returns {phase_index: seconds} wall-clock compile times.
         """
-        out: Dict[str, float] = {}
-        with jax.set_mesh(self.mesh):
-            for i, fn in enumerate(self._jitted):
-                t0 = time.perf_counter()
-                lowered = fn.lower(state, batch)
-                t1 = time.perf_counter()
-                self._compiled[i] = lowered.compile()
-                t2 = time.perf_counter()
-                self._stats[i].lower_s = t1 - t0
-                self._stats[i].compile_s = t2 - t1
-                out[f"phase{i}"] = t2 - t0
-        return out
+        return self._compile_entries(
+            [self._entries[p] for p in self._unique], state, batch
+        )
+
+    # ---- hot-swap -------------------------------------------------------
+    def prepare_swap(
+        self,
+        schedule: DeftSchedule,
+        state: TrainState,
+        batch,
+        *,
+        background: bool = False,
+    ) -> Dict[str, Any]:
+        """Stage a replanned schedule for installation at the next cycle
+        boundary.
+
+        Unseen PhaseSpecs are lowered + compiled against the current
+        state/batch shapes (``lower`` only reads avals — it never consumes
+        the donated buffers); PhaseSpecs already in the persistent cache
+        reuse their compiled executables.  With ``background=True`` the
+        compile happens on a daemon thread while training keeps stepping
+        the old schedule; the swap arms only once compilation finishes, so
+        :meth:`step` never blocks on a half-built schedule.
+
+        The swap itself (see :meth:`step`) is a pure Python pointer flip
+        at ``(i - cycle_base) % period == 0``: the donated train state
+        carries across untouched because every replan shares this
+        runtime's :class:`BucketLayout` — params, opt moments and both
+        per-bucket accumulator sets keep their shapes and shardings.
+        """
+        fresh, reused = self._ensure_entries(schedule)
+        self.replans += 1
+        info: Dict[str, Any] = {
+            "new_phases": len(fresh),
+            "reused_phases": reused,
+            "background": background,
+        }
+        # snapshot avals NOW: the caller keeps training, and donation
+        # deletes the concrete state buffers under the background thread
+        state_abs = jax.tree.map(_abstractify, state)
+        batch_abs = jax.tree.map(_abstractify, batch)
+        self._swap_gen += 1
+        gen = self._swap_gen
+        self._pending = None   # a newer replan supersedes any armed one
+
+        def _build() -> None:
+            t0 = time.perf_counter()
+            self._compile_entries(fresh, state_abs, batch_abs)
+            info["compile_s"] = time.perf_counter() - t0
+            # publish last — step() sees the schedule only fully compiled —
+            # and only if no NEWER prepare_swap superseded this one (a slow
+            # older compile must not overwrite a fresher staged schedule)
+            if self._swap_gen == gen:
+                self._pending = schedule
+
+        if background:
+            self._swap_thread = threading.Thread(
+                target=_build, name="deft-swap-compile", daemon=True
+            )
+            self._swap_thread.start()
+        else:
+            _build()
+        return info
+
+    def swap_ready(self) -> bool:
+        """A staged schedule is compiled and armed for the next cycle
+        boundary."""
+        return self._pending is not None
+
+    def wait_swap_ready(self, timeout: Optional[float] = None) -> bool:
+        """Block until a background prepare_swap finishes compiling."""
+        if self._swap_thread is not None:
+            self._swap_thread.join(timeout)
+        return self.swap_ready()
 
     # ---- dispatch -------------------------------------------------------
     def step(
         self, i: int, state: TrainState, batch
     ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-        """Run training step ``i`` (phase ``i % period``).  Consumes
-        ``state`` when donation is on."""
-        u = self.phase_of_step[i % self.period]
-        fn = self._compiled[u]
+        """Run training step ``i`` (cycle phase ``(i - cycle_base) %
+        period``).  Consumes ``state`` when donation is on.  If a staged
+        schedule is armed and ``i`` lands on a cycle boundary, it is
+        installed first and ``i`` becomes step 0 of the new cycle."""
+        if self._pending is not None and (i - self._cycle_base) % self.period == 0:
+            pending, self._pending = self._pending, None
+            self._install(pending)
+            self._cycle_base = i
+            self.hot_swaps += 1
+            self.swap_log.append(
+                {"step": i, "period": pending.period,
+                 "updates_per_period": pending.updates_per_period}
+            )
+        off = (i - self._cycle_base) % self.period
+        self.last_phase = off
+        entry = self._entries[self._unique[self.phase_of_step[off]]]
         t0 = time.perf_counter()
-        if fn is not None:
-            out = fn(state, batch)
+        if entry.compiled is not None:
+            out = entry.compiled(state, batch)
         else:  # compile() skipped — trace under the mesh on first hit
             with jax.set_mesh(self.mesh):
-                out = self._jitted[u](state, batch)
-        st = self._stats[u]
-        st.dispatches += 1
-        st.dispatch_s += time.perf_counter() - t0
+                out = entry.jitted(state, batch)
+        entry.stats.dispatches += 1
+        entry.stats.dispatch_s += time.perf_counter() - t0
         return out
 
     # ---- reporting ------------------------------------------------------
@@ -461,20 +633,30 @@ class DeftRuntime:
         return [phase_collectives(p) for p in self.schedule.phases]
 
     def stats(self) -> Dict[str, Any]:
-        per_phase = [dataclasses.asdict(s) for s in self._stats]
-        total_compile = sum(s.lower_s + s.compile_s for s in self._stats)
-        total_dispatch = sum(s.dispatch_s for s in self._stats)
-        n = sum(s.dispatches for s in self._stats)
+        entries = list(self._entries.values())
+        per_phase = [dataclasses.asdict(e.stats) for e in entries]
+        total_compile = sum(
+            e.stats.lower_s + e.stats.compile_s for e in entries
+        )
+        total_dispatch = sum(e.stats.dispatch_s for e in entries)
+        n = sum(e.stats.dispatches for e in entries)
         coll = self.collectives_per_phase()
         return {
             "period": self.period,
             "unique_phases": self.n_unique_phases,
+            "cached_phases": self.n_cached_phases,
             "accum_devices": self.accum_devices,
             "n_buckets": self.layout.n_buckets,
             "n_leaves": self.layout.n_leaves,
             "compile_s_total": total_compile,
             "steps_dispatched": n,
             "dispatch_s_total": total_dispatch,
+            # dispatch-wall throughput: what the benchmarks report without
+            # re-deriving it from their own timers
+            "steps_per_s": n / total_dispatch if total_dispatch > 0 else 0.0,
+            "replans": self.replans,
+            "hot_swaps": self.hot_swaps,
+            "swap_log": list(self.swap_log),
             "collectives_per_phase": coll,
             "max_collectives_in_a_phase": max(
                 (c["primary"] + c["secondary"] for c in coll), default=0

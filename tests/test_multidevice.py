@@ -142,6 +142,7 @@ print("MULTIDEVICE_OK")
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_deft_equivalence_on_8_devices(tmp_path):
     src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
     script = tmp_path / "run.py"

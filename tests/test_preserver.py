@@ -11,6 +11,7 @@ from repro.core.preserver import (
     estimate_walk_params_from_losses,
     expected_next_state,
     rollout,
+    verdict_ok,
 )
 
 
@@ -84,3 +85,53 @@ def test_estimate_walk_params_roundtrip():
     p = estimate_walk_params_from_losses(losses, eta=0.01, batch=64)
     assert p.s0 == losses[-1]
     assert p.mu > 0 and p.sigma >= 0
+
+
+# ---------------------------------------------------------------------------
+# Edge cases the online control plane leans on (ISSUE 2 satellites)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("period", [1, 4, 17])
+def test_degenerate_m_equals_n_is_exact_noop(period):
+    """m == N (every iteration updates with k=1): O_D IS O_B, so the
+    verdict must be an exact identity — ratio exactly 1.0 and ok even at
+    eps=0, including near-S* parameters where both rollouts approach
+    s_star and a naive ratio would be 0/0."""
+    for p in (
+        WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256),
+        WalkParams(s0=1e-12, s_star=0.0, eta=0.5, mu=5.0, sigma=1e-6, batch=1),
+    ):
+        v = check_schedule([1] * period, period=period, params=p, eps=0.0)
+        assert v.ok
+        assert v.ratio == 1.0                  # exact, not approx
+        assert v.e_baseline == v.e_deft
+
+
+def test_eps_boundary_is_inclusive():
+    """The acceptance band [1-eps, 1+eps] includes its endpoints; one ulp
+    outside is rejected."""
+    eps = 0.01
+    assert verdict_ok(1.0 + eps, eps)
+    assert verdict_ok(1.0 - eps, eps)
+    assert not verdict_ok(math.nextafter(1.0 + eps, 2.0), eps)
+    assert not verdict_ok(math.nextafter(1.0 - eps, 0.0), eps)
+    assert verdict_ok(1.0, 0.0)
+
+
+def test_check_schedule_with_measured_walk_params():
+    """The measured-WalkParams path (Fig. 7 'convergence info' edge): a
+    walk fit from an observed loss trace feeds check_schedule directly.
+    Identical sequences stay exact; merged sequences get a real verdict
+    whose deviation grows with merging, same as under analytic params."""
+    rng = random.Random(7)
+    losses = [abs(rng.gauss(0.05, 0.03)) for _ in range(64)]
+    w = estimate_walk_params_from_losses(losses, eta=0.05, batch=16)
+    assert w.s0 == losses[-1] and w.sigma > 0
+
+    exact = check_schedule([1, 1, 1, 1], period=4, params=w, eps=0.0)
+    assert exact.ok and exact.ratio == 1.0
+
+    mild = check_schedule([2, 1, 1], period=4, params=w, eps=1e9)
+    strong = check_schedule([4], period=4, params=w, eps=1e9)
+    assert abs(strong.ratio - 1.0) >= abs(mild.ratio - 1.0)
+    # a tight eps rejects the aggressive merge under the measured walk
+    assert not check_schedule([4], period=4, params=w, eps=1e-6).ok
