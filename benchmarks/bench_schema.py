@@ -1,0 +1,121 @@
+"""Machine-readable BENCH_*.json key schemas.
+
+The perf trajectory across PRs is tracked by the benchmark emitters
+(runtime_bench, adapt_bench); this module pins the key sets those files
+must contain so an emitter refactor cannot silently drop or rename a
+metric.  ``scripts/check_bench_schema.py`` runs the validation from CI
+after the smoke benchmark job; tests/test_bench_schema.py validates the
+checked-in files at the repo root.
+
+A schema is a nested dict: leaf ``None`` means "key must exist" (any
+value), a dict means "key must exist and hold a mapping with at least
+these keys".  Extra keys are allowed — the schema is a floor, not a
+straitjacket, so emitters can grow without breaking older checkers.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+_RUNTIME_SCENARIO = {
+    "host_devices": None,
+    "model": {"name": None, "params": None, "n_leaves": None,
+              "n_buckets": None},
+    "schedule": {"period": None, "updates_per_period": None},
+    "engine": {"flat_state": None, "update_impl": None},
+    "steps_timed": None,
+    "steps_per_s_fused": None,
+    "steps_per_s_fused_tree": None,
+    "steps_per_s_legacy": None,
+    "speedup_fused_vs_legacy": None,
+    "compile_s_fused_aot": None,
+    "update_phase_ms_flat": None,
+    "update_phase_ms_tree": None,
+    "update_phase_ms_legacy_per_leaf": None,
+    "update_phase_speedup_flat_vs_per_leaf": None,
+    "update_phase_speedup_flat_vs_tree": None,
+    "collectives_per_phase_fused": None,
+    "collectives_per_phase_legacy_per_leaf": None,
+}
+
+_UPDATE_PATH_GRANULARITY = {
+    "n_leaves": None,
+    "n_buckets": None,
+    "total_elems": None,
+    "apply_ms_flat": None,
+    "apply_ms_per_leaf": None,
+    "speedup_flat_vs_per_leaf": None,
+}
+
+SCHEMAS: Dict[str, Dict[str, Any]] = {
+    "BENCH_runtime.json": {
+        "solver": {
+            "n_buckets": None,
+            "plan_s_unmemoized": None,
+            "plan_s_memoized": None,
+            "speedup": None,
+            "cache_hits": None,
+            "cache_misses": None,
+        },
+        "update_path": {
+            "smoke_config": _UPDATE_PATH_GRANULARITY,
+            "paper_leafcount": _UPDATE_PATH_GRANULARITY,
+        },
+        "smoke": _RUNTIME_SCENARIO,
+        "dp4": _RUNTIME_SCENARIO,
+    },
+    "BENCH_adapt.json": {
+        "scenario": {"drop_step": None, "drop_scale": None,
+                     "coverage_rate": None, "steps": None},
+        "initial_plan": {"period": None, "updates_per_period": None,
+                         "batch_seq": None, "preserver_ratio": None},
+        "steps_per_s_before_drop": None,
+        "steps_per_s_static_after_drop": None,
+        "steps_per_s_adaptive_after_drop": None,
+        "adaptive_over_static_after_drop": None,
+        "detection_latency_steps": None,
+        "replan_events": None,
+        "knapsack_cache_trail": None,
+    },
+}
+
+
+def _walk(schema: Dict[str, Any], data: Any, prefix: str,
+          errors: List[str]) -> None:
+    if not isinstance(data, dict):
+        errors.append(f"{prefix or '<root>'}: expected a mapping, "
+                      f"got {type(data).__name__}")
+        return
+    for key, sub in schema.items():
+        path = f"{prefix}.{key}" if prefix else key
+        if key not in data:
+            errors.append(f"missing key: {path}")
+            continue
+        if isinstance(sub, dict):
+            _walk(sub, data[key], path, errors)
+
+
+def validate_data(name: str, data: Any) -> List[str]:
+    """Validate a parsed BENCH payload against its schema by file name.
+    Returns a list of human-readable problems (empty = valid)."""
+    if name not in SCHEMAS:
+        return [f"no schema registered for {name!r} "
+                f"(known: {sorted(SCHEMAS)})"]
+    errors: List[str] = []
+    _walk(SCHEMAS[name], data, "", errors)
+    return errors
+
+
+def validate_file(path: str) -> List[str]:
+    """Validate a BENCH_*.json file on disk (schema chosen by basename)."""
+    import os
+
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return [f"{path}: file not found"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: invalid json ({e})"]
+    return [f"{path}: {e}"
+            for e in validate_data(os.path.basename(path), data)]

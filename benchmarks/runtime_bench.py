@@ -86,7 +86,25 @@ def _inner(devices: int) -> dict:
         for i in range(n):
             state, m = step_of(i, state, batch)
         jax.block_until_ready(m["loss"])
-        return n / (time.perf_counter() - t0)
+        return n / (time.perf_counter() - t0), state
+
+    # the phase whose executable applies the (delayed) optimizer update —
+    # the update-path comparison times this one phase across engines
+    upd = next(i for i, ph in enumerate(sched.phases) if ph.do_update)
+
+    def bench_phase(dispatch, state, n):
+        for _ in range(2):                   # warmup (compile + caches)
+            state, m = dispatch(state)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(n):
+            state, m = dispatch(state)
+        jax.block_until_ready(m["loss"])
+        return (time.perf_counter() - t0) / n
+
+    def rt_phase_dispatch(rt):
+        fn = rt.phase_executable(upd)
+        return lambda s: fn(s, batch)
 
     with mesh:
         # ---- seed implementation: per-leaf psums, tree accumulators,
@@ -95,18 +113,32 @@ def _inner(devices: int) -> dict:
         fns = make_deft_step_fns(cfg, opt, sched, bucket_of, mesh)
         state_l = init_train_state(key, cfg, opt, deft=True,
                                    accum_devices=dp)
-        sps_legacy = bench_loop(
+        sps_legacy, state_l = bench_loop(
             lambda i, s, b: fns[i % sched.period](s, b), state_l, _STEPS
         )
         legacy_wall = time.perf_counter() - t0
+        upd_s_legacy = bench_phase(
+            lambda s: fns[upd](s, batch), state_l, _STEPS
+        )
 
-        # ---- fused runtime: bucket collectives + donation + AOT cache -
+        # ---- PR-1 fused runtime, tree state: bucket collectives +
+        # donation + AOT cache, but per-leaf apply_updates ---------------
+        rt_tree = DeftRuntime(cfg, opt, sched, layout, mesh,
+                              flat_state=False)
+        state_t = rt_tree.init_state(key)
+        rt_tree.compile(state_t, batch)
+        sps_tree, state_t = bench_loop(rt_tree.step, state_t, _STEPS)
+        upd_s_tree = bench_phase(rt_phase_dispatch(rt_tree), state_t, _STEPS)
+
+        # ---- production engine: flat-resident state + fused
+        # bucket-update kernels ------------------------------------------
         t0 = time.perf_counter()
         rt = DeftRuntime(cfg, opt, sched, layout, mesh)
         state_f = rt.init_state(key)
         compile_s = sum(rt.compile(state_f, batch).values())
-        sps_fused = bench_loop(rt.step, state_f, _STEPS)
+        sps_fused, state_f = bench_loop(rt.step, state_f, _STEPS)
         fused_wall = time.perf_counter() - t0
+        upd_s_flat = bench_phase(rt_phase_dispatch(rt), state_f, _STEPS)
 
     coll = rt.collectives_per_phase()
     per_leaf = [
@@ -122,18 +154,116 @@ def _inner(devices: int) -> dict:
                   "n_leaves": layout.n_leaves, "n_buckets": nb},
         "schedule": {"period": sched.period,
                      "updates_per_period": sched.updates_per_period},
+        "engine": {"flat_state": rt.flat_state,
+                   "update_impl": rt.stats()["update_impl"]},
         "steps_timed": _STEPS,
         "steps_per_s_fused": sps_fused,
+        "steps_per_s_fused_tree": sps_tree,
         "steps_per_s_legacy": sps_legacy,
         "speedup_fused_vs_legacy": sps_fused / sps_legacy,
         "compile_s_fused_aot": compile_s,
         "wall_s_fused_total": fused_wall,
         "wall_s_legacy_total": legacy_wall,
+        # wall time of the do_update phase across the three update paths:
+        # flat fused-kernel engine vs PR-1 tree-state (per-leaf
+        # apply_updates on fused buffers) vs the seed per-leaf step
+        "update_phase_ms_flat": upd_s_flat * 1e3,
+        "update_phase_ms_tree": upd_s_tree * 1e3,
+        "update_phase_ms_legacy_per_leaf": upd_s_legacy * 1e3,
+        "update_phase_speedup_flat_vs_per_leaf": upd_s_legacy / upd_s_flat,
+        "update_phase_speedup_flat_vs_tree": upd_s_tree / upd_s_flat,
         "collectives_per_phase_fused": [
             c["primary"] + c["secondary"] for c in coll
         ],
         "collectives_per_phase_legacy_per_leaf": per_leaf,
     }
+
+
+def _bench_update_path() -> dict:
+    """Isolated optimizer-apply wall time: fused flat bucket kernels
+    (kernels/bucket_update) vs per-leaf apply_updates over the same
+    values.  min-of-reps timing (robust to CPU load spikes — the
+    whole-phase numbers in the scenario entries bury the update under
+    fwd/bwd noise).  Two granularities:
+
+    * ``smoke_config`` — the smoke model's real layout (few stacked
+      leaves; memory-bound, so CPU parity is the expected result);
+    * ``paper_leafcount`` — a few hundred tensors as in the paper's
+      DNN/LLM profiles, where the per-tensor op overhead the engine
+      removes (the MG-WFBP/DeAR motivation) actually shows.
+    """
+    import jax
+
+    import repro  # noqa: F401
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.kernels.bucket_update import (
+        apply_bucket_updates,
+        build_segments,
+        init_flat_opt_state,
+    )
+    from repro.optim.optimizers import adamw, apply_updates, init_opt_state
+    from repro.train import (
+        assign_buckets,
+        build_bucket_layout,
+        flatten_buckets,
+        init_train_state,
+    )
+
+    opt = adamw(1e-3)
+
+    def measure(params, layout) -> dict:
+        grads = jax.tree.map(lambda p: p * 0.01, params)
+        seg = build_segments(layout, opt)
+        pbuf = tuple(flatten_buckets(layout, jax.tree.leaves(params)))
+        gbuf = tuple(flatten_buckets(layout, jax.tree.leaves(grads)))
+        opt_f = init_flat_opt_state(opt, layout.buf_sizes)
+        opt_l = init_opt_state(opt, params)
+        f_flat = jax.jit(lambda p, g, o: apply_bucket_updates(
+            opt, seg, p, g, o, grad_scale=0.1)[:2])
+        f_leaf = jax.jit(lambda p, g, o: apply_updates(
+            opt, p, g, o, grad_scale=0.1))
+
+        def timed(f, *args, n=20):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                out = f(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / n
+
+        # paired + interleaved min-of-reps: ambient load spikes on a
+        # shared host hit both paths, not whichever ran second
+        jax.block_until_ready(f_flat(pbuf, gbuf, opt_f))
+        jax.block_until_ready(f_leaf(params, grads, opt_l))
+        ms_flat = ms_leaf = float("inf")
+        for _ in range(9):
+            ms_flat = min(ms_flat, timed(f_flat, pbuf, gbuf, opt_f) * 1e3)
+            ms_leaf = min(ms_leaf, timed(f_leaf, params, grads, opt_l) * 1e3)
+        return {
+            "n_leaves": layout.n_leaves,
+            "n_buckets": layout.n_buckets,
+            "total_elems": layout.total_elems,
+            "apply_ms_flat": ms_flat,
+            "apply_ms_per_leaf": ms_leaf,
+            "speedup_flat_vs_per_leaf": ms_leaf / ms_flat,
+        }
+
+    cfg = reduce_for_smoke(get_config("qwen3-4b"))
+    probe = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    bucket_of, nb = assign_buckets(probe["params"], cfg,
+                                   partition_elems=150_000)
+    smoke = measure(probe["params"],
+                    build_bucket_layout(probe["params"], bucket_of, nb))
+
+    n_leaves, leaf_elems, n_buckets = 256, 8192, 8
+    key = jax.random.PRNGKey(1)
+    tree = {
+        f"l{i:03d}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (leaf_elems,))
+        for i in range(n_leaves)
+    }
+    bo = tuple(i * n_buckets // n_leaves for i in range(n_leaves))
+    paper = measure(tree, build_bucket_layout(tree, bo, n_buckets))
+    return {"smoke_config": smoke, "paper_leafcount": paper}
 
 
 def _bench_solver() -> dict:
@@ -185,7 +315,10 @@ def _bench_solver() -> dict:
 def run() -> None:
     """Benchmark section entry point (benchmarks/run.py)."""
     t0 = time.time()
-    results: dict = {"solver": _bench_solver()}
+    results: dict = {
+        "solver": _bench_solver(),
+        "update_path": _bench_update_path(),
+    }
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     for name, devices in (("smoke", 1), ("dp4", 4)):
@@ -218,6 +351,20 @@ def run() -> None:
               f"{max(r['collectives_per_phase_fused'])},"
               f"legacy per-leaf "
               f"{max(r['collectives_per_phase_legacy_per_leaf'])}")
+        print(f"runtime_{name}_update_phase_ms,"
+              f"{r['update_phase_ms_flat'] * 1e3:.0f},"
+              f"flat {r['update_phase_ms_flat']:.1f}ms vs per-leaf "
+              f"{r['update_phase_ms_legacy_per_leaf']:.1f}ms "
+              f"({r['update_phase_speedup_flat_vs_per_leaf']:.2f}x) / "
+              f"tree {r['update_phase_ms_tree']:.1f}ms "
+              f"({r['update_phase_speedup_flat_vs_tree']:.2f}x)")
+    for gran, u in results["update_path"].items():
+        print(f"update_path_{gran}_apply_ms,"
+              f"{u['apply_ms_flat'] * 1e3:.0f},"
+              f"flat {u['apply_ms_flat']:.2f}ms vs per-leaf "
+              f"{u['apply_ms_per_leaf']:.2f}ms "
+              f"({u['speedup_flat_vs_per_leaf']:.2f}x, "
+              f"{u['n_leaves']} leaves -> {u['n_buckets']} buckets)")
     s = results["solver"]
     print(f"solver_plan_us_memoized,{s['plan_s_memoized'] * 1e6:.0f},"
           f"{s['speedup']:.1f}x vs unmemoized "

@@ -1,0 +1,36 @@
+#!/usr/bin/env python
+"""Validate BENCH_*.json files against benchmarks/bench_schema.py.
+
+    python scripts/check_bench_schema.py [FILE ...]
+
+With no arguments checks every schema-registered BENCH file in the repo
+root (the checked-in perf trajectory).  Exits 1 listing every missing /
+malformed key, so CI fails loudly when a benchmark emitter drifts.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.bench_schema import SCHEMAS, validate_file  # noqa: E402
+
+
+def main(argv) -> int:
+    paths = argv or [os.path.join(_ROOT, name) for name in sorted(SCHEMAS)]
+    failures = 0
+    for path in paths:
+        errors = validate_file(path)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        else:
+            print(f"{path}: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

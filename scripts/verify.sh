@@ -8,19 +8,42 @@
 #
 #   scripts/verify.sh          # tests + dry-run smoke
 #   scripts/verify.sh --fast   # tests only
+#   scripts/verify.sh --smoke  # smoke benchmarks + BENCH schema check
+#                              # (the CI benchmark job; no test run)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests (excluding slow/multidevice) =="
-python -m pytest -q -m "not slow and not multidevice"
+mode="${1:-}"
 
-if [[ "${1:-}" != "--fast" ]]; then
+if [[ "$mode" == "--smoke" ]]; then
+  echo "== smoke benchmarks (BENCH_*.json + schema check) =="
+  python benchmarks/run.py --smoke
+  python scripts/check_bench_schema.py
+  echo "verify.sh --smoke: OK"
+  exit 0
+fi
+
+echo "== tier-1 tests (excluding slow/multidevice) =="
+# run under an if so `set -e` cannot short-circuit before we report,
+# then propagate pytest's exit code verbatim (CI must see the status)
+rc=0
+python -m pytest -q -m "not slow and not multidevice" || rc=$?
+if [[ "$rc" -ne 0 ]]; then
+  echo "verify.sh: tier-1 tests FAILED (exit $rc)" >&2
+  exit "$rc"
+fi
+
+if [[ "$mode" != "--fast" ]]; then
   echo "== dry-run smoke (compile-only, no model memory) =="
   # default (ddp) mode: --mode deft needs jax >= 0.5 on the production
-  # mesh (partial-manual SPMD CHECK on old jaxlib — DESIGN.md §6)
-  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  # mesh (partial-manual SPMD CHECK on old jaxlib — DESIGN.md §6).
+  # Output goes to a scratch dir: the checked-in experiments/dryrun
+  # artifacts are updated deliberately, not by every verify run (CI
+  # asserts the tree is clean afterwards).
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k \
+    --out "$(mktemp -d)"
 fi
 
 echo "verify.sh: OK"

@@ -1,0 +1,22 @@
+from repro.kernels.bucket_update.kernel import bucket_update_pallas
+from repro.kernels.bucket_update.ops import (
+    apply_bucket_updates,
+    bucket_update,
+    default_bucket_update_impl,
+    init_flat_opt_state,
+    pack_scalars,
+)
+from repro.kernels.bucket_update.ref import bucket_update_ref
+from repro.kernels.bucket_update.segments import BucketSegments, build_segments
+
+__all__ = [
+    "BucketSegments",
+    "build_segments",
+    "bucket_update",
+    "bucket_update_pallas",
+    "bucket_update_ref",
+    "apply_bucket_updates",
+    "init_flat_opt_state",
+    "pack_scalars",
+    "default_bucket_update_impl",
+]

@@ -1,0 +1,205 @@
+"""Dispatcher + whole-state entry point for the fused bucket updates.
+
+* ``bucket_update``       — one bucket: Pallas on TPU, pure-JAX ``lax``
+                            fallback elsewhere (CPU, old-jaxlib,
+                            ``REPRO_BUCKET_UPDATE=ref`` override).
+* ``apply_bucket_updates``— the flat-resident optimizer step the
+                            DeftRuntime update phases call: global-norm
+                            clip across all buckets, then one fused
+                            launch per bucket, step counter advanced
+                            once per applied (delayed) update.
+
+The delayed-update semantics live in the *caller's* PhaseSpec: the
+gradient buffers arriving here are the merged k-batch accumulators the
+schedule synchronized at this phase, and ``grad_scale = 1/(n_dp * k)``
+recovers gradient-accumulation math exactly (see optim/optimizers.py).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_update.kernel import bucket_update_pallas
+from repro.kernels.bucket_update.ref import bucket_update_ref
+from repro.kernels.bucket_update.segments import BucketSegments
+from repro.optim.optimizers import OptimizerSpec
+
+# scalar-row layout (f32[1, 128], lanes 5..127 are zero padding)
+SCALARS_GRAD_SCALE = 0
+SCALARS_CLIP = 1
+SCALARS_LR = 2
+SCALARS_BC1 = 3
+SCALARS_BC2 = 4
+_N_SCALARS = 5
+
+
+_IMPLS = ("pallas", "ref", "interpret")
+
+
+@functools.lru_cache(maxsize=1)
+def default_bucket_update_impl() -> str:
+    """'pallas' on TPU backends, 'ref' elsewhere.  Override with
+    REPRO_BUCKET_UPDATE=pallas|ref|interpret (interpret = Pallas kernel
+    under the interpreter — the CI/CPU way to exercise the kernel).
+    Read ONCE per process (cached); an unknown value raises instead of
+    silently running the wrong implementation."""
+    env = os.environ.get("REPRO_BUCKET_UPDATE", "").strip().lower()
+    if env:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"REPRO_BUCKET_UPDATE={env!r}: expected one of {_IMPLS}"
+            )
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def pack_scalars(
+    spec: OptimizerSpec,
+    step_new: jax.Array,
+    *,
+    grad_scale,
+    clip,
+    lr_scale=1.0,
+) -> jax.Array:
+    """Dynamic per-update scalars as one (1, 128) f32 row (SCALARS_*)."""
+    lr = spec.lr * lr_scale
+    vals = [grad_scale, clip, lr]
+    if spec.name == "adamw":
+        sf = step_new.astype(jnp.float32)
+        vals += [1 - spec.beta1 ** sf, 1 - spec.beta2 ** sf]
+    else:
+        vals += [0.0, 0.0]
+    row = jnp.stack([jnp.asarray(x, jnp.float32) for x in vals])
+    return jnp.concatenate(
+        [row, jnp.zeros((128 - _N_SCALARS,), jnp.float32)]
+    ).reshape(1, 128)
+
+
+def bucket_update(
+    spec: OptimizerSpec,
+    p: jax.Array,
+    m: jax.Array,
+    v: Optional[jax.Array],
+    g: jax.Array,
+    scalars: jax.Array,
+    *,
+    n_valid: int,
+    uniform: Optional[Tuple[float, float]],
+    elem_hparams: Optional[Tuple[jax.Array, jax.Array]] = None,
+    zero_grads: bool = False,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    """One fused optimizer step over one flat bucket buffer."""
+    impl = impl or default_bucket_update_impl()
+    if impl in ("pallas", "interpret"):
+        return bucket_update_pallas(
+            spec, p, m, v, g, scalars,
+            n_valid=n_valid, uniform=uniform, elem_hparams=elem_hparams,
+            zero_grads=zero_grads, interpret=(impl == "interpret"),
+        )
+    if impl == "ref":
+        return bucket_update_ref(
+            spec, p, m, v, g, scalars,
+            n_valid=n_valid, uniform=uniform, elem_hparams=elem_hparams,
+            zero_grads=zero_grads,
+        )
+    raise ValueError(f"unknown bucket-update impl {impl!r}")
+
+
+def init_flat_opt_state(
+    spec: OptimizerSpec, buf_sizes: Sequence[int]
+) -> Dict[str, Any]:
+    """Flat-resident twin of optimizers.init_opt_state: per-bucket f32
+    moment buffers instead of a params-shaped tree."""
+    zeros = lambda: tuple(jnp.zeros((s,), jnp.float32) for s in buf_sizes)
+    out: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32), "m": zeros()}
+    if spec.name == "adamw":
+        out["v"] = zeros()
+    elif spec.name != "sgd":
+        raise ValueError(spec.name)
+    return out
+
+
+def apply_bucket_updates(
+    spec: OptimizerSpec,
+    segments: BucketSegments,
+    pbuf: Sequence[jax.Array],
+    gbuf: Sequence[jax.Array],
+    opt: Dict[str, Any],
+    *,
+    grad_scale=1.0,
+    lr_scale=1.0,
+    zero_grads: bool = False,
+    impl: Optional[str] = None,
+) -> Tuple[
+    Tuple[jax.Array, ...], Dict[str, Any], Optional[Tuple[jax.Array, ...]]
+]:
+    """Apply one (delayed) optimizer update across all bucket buffers.
+
+    Mirrors optimizers.apply_updates on the flat representation: scale
+    by ``grad_scale``, clip by the global norm across every bucket, then
+    one fused kernel launch per bucket.  With ``zero_grads`` the zeroed
+    gradient buffers come back fused from the same launches (the
+    accumulator reset of the delayed-update schedule).
+    """
+    layout = segments.layout
+    adam = spec.name == "adamw"
+    if spec.grad_clip:
+        # norm over the VALID spans only — the padded tails are zero by
+        # construction, but the kernels' tail mask promises that even
+        # hostile tail values cannot leak into params, and an unmasked
+        # norm would funnel them through the clip scalar
+        sq = [
+            jnp.sum(jnp.square(g[: layout.sizes[b]] * grad_scale))
+            for b, g in enumerate(gbuf)
+        ]
+        gn = jnp.sqrt(jnp.sum(jnp.stack(sq)))
+        clip = jnp.minimum(1.0, spec.grad_clip / jnp.maximum(gn, 1e-12))
+    else:
+        clip = jnp.float32(1.0)
+    step_new = opt["step"] + 1
+    scalars = pack_scalars(
+        spec, step_new, grad_scale=grad_scale, clip=clip, lr_scale=lr_scale
+    )
+
+    new_p: List[jax.Array] = []
+    new_m: List[jax.Array] = []
+    new_v: List[jax.Array] = []
+    zeroed: List[jax.Array] = []
+    for b in range(layout.n_buckets):
+        uniform = segments.uniform(b)
+        elem = None
+        if uniform is None:
+            sc, wd = segments.element_hparams(b)
+            elem = (jnp.asarray(sc), jnp.asarray(wd))
+        p2, m2, v2, gz = bucket_update(
+            spec,
+            pbuf[b],
+            opt["m"][b],
+            opt["v"][b] if adam else None,
+            gbuf[b],
+            scalars,
+            n_valid=layout.sizes[b],
+            uniform=uniform,
+            elem_hparams=elem,
+            zero_grads=zero_grads,
+            impl=impl,
+        )
+        new_p.append(p2)
+        new_m.append(m2)
+        if adam:
+            new_v.append(v2)
+        if zero_grads:
+            zeroed.append(gz)
+    new_opt: Dict[str, Any] = {"step": step_new, "m": tuple(new_m)}
+    if adam:
+        new_opt["v"] = tuple(new_v)
+    return (
+        tuple(new_p),
+        new_opt,
+        tuple(zeroed) if zero_grads else None,
+    )

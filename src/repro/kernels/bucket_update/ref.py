@@ -1,0 +1,84 @@
+"""Pure-JAX reference / fallback for the fused bucket-update kernels.
+
+One fused elementwise expression over the whole flat bucket buffer —
+numerically the same math, in the same order, as the Pallas kernel
+(kernel.py), so the two are bit-comparable.  XLA compiles this to a
+single fused loop per bucket, which is also the production path on CPU
+and on jaxlibs without the Pallas bucket-update gate (DESIGN.md §8).
+
+Scalar packing (``scalars`` is a (1, 128) f32 row, see ops.SCALARS_*):
+    [0] grad_scale   1/(n_dp * k) of the merged gradient
+    [1] clip         global-norm clip factor (1.0 when disabled)
+    [2] lr           spec.lr * lr_scale (dynamic schedules ride here)
+    [3] bc1          1 - beta1**step   (adam)
+    [4] bc2          1 - beta2**step   (adam)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import OptimizerSpec
+
+
+def _keep_tail(new: jax.Array, old: jax.Array, n_valid: int) -> jax.Array:
+    """Restore the padded tail to its input value.  The tail is < one
+    pad_multiple (tiny), so patching the slice costs O(tail) instead of
+    a whole-buffer select — same result as the kernel's tile mask."""
+    if n_valid >= new.shape[0]:
+        return new
+    return jax.lax.dynamic_update_slice(new, old[n_valid:], (n_valid,))
+
+
+def bucket_update_ref(
+    spec: OptimizerSpec,
+    p: jax.Array,                      # f32[padded] params
+    m: jax.Array,                      # f32[padded] momentum
+    v: Optional[jax.Array],            # f32[padded] variance (adam) | None
+    g: jax.Array,                      # f32[padded] merged raw gradient
+    scalars: jax.Array,                # f32[1, 128] dynamic scalars
+    *,
+    n_valid: int,
+    uniform: Optional[Tuple[float, float]],        # (lr_scale, wd) | None
+    elem_hparams: Optional[Tuple[jax.Array, jax.Array]] = None,
+    zero_grads: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    """One optimizer step over one flat bucket buffer.
+
+    Returns (p', m', v'|None, zeroed-g|None).  The padded tail
+    [n_valid, padded) is masked: p/m/v keep their (zero) tail values no
+    matter what rides in the tail of ``g``.
+    """
+    gscale, clip, lr = scalars[0, 0], scalars[0, 1], scalars[0, 2]
+    if uniform is not None:
+        sc, wd = uniform
+    else:
+        sc, wd = elem_hparams                      # f32[padded] each
+
+    ghat = (g * gscale) * clip
+    if spec.name == "sgd":
+        m_new = spec.momentum * m + ghat
+        u = m_new
+        if (uniform is None) or wd:
+            u = u + wd * p
+        p_new = p - (lr * sc) * u
+        v_new = None
+    elif spec.name == "adamw":
+        bc1, bc2 = scalars[0, 3], scalars[0, 4]
+        b1, b2 = spec.beta1, spec.beta2
+        m_new = b1 * m + (1 - b1) * ghat
+        v_new = b2 * v + (1 - b2) * ghat * ghat
+        u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + spec.eps)
+        if (uniform is None) or wd:
+            u = u + wd * p
+        p_new = p - (lr * sc) * u
+        v_new = _keep_tail(v_new, v, n_valid)
+    else:
+        raise ValueError(spec.name)
+
+    p_new = _keep_tail(p_new, p, n_valid)
+    m_new = _keep_tail(m_new, m, n_valid)
+    gz = jnp.zeros_like(g) if zero_grads else None
+    return p_new, m_new, v_new, gz

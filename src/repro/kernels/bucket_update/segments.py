@@ -1,0 +1,90 @@
+"""Static segment-id map: per-leaf optimizer hyperparameters on flat
+bucket buffers.
+
+Each bucket buffer is a concatenation of leaf spans plus a zero tail
+(``BucketLayout.padded_sizes``).  The update kernels need two per-element
+quantities — an lr scale and a weight-decay coefficient — that are
+constant *within* a leaf span.  ``BucketSegments`` freezes that mapping
+at plan time:
+
+* ``segment_ids(b)`` — int32[padded] leaf-ordinal per element (the
+  segment-id map proper; the zero tail is segment ``-1``);
+* ``element_hparams(b)`` — the map materialized to per-element f32
+  (scale, weight_decay) arrays, tail masked to scale 0;
+* ``uniform(b)`` — the fast path: when every leaf in a bucket shares the
+  same (lr_scale, weight_decay) — true for the default OptimizerSpec —
+  the kernels take the hparams as compile-time scalars and only the tail
+  mask is computed in-kernel (an iota compare), so no O(params) constant
+  arrays enter the compiled graph.
+
+Hyperparameters come from :func:`repro.optim.optimizers.leaf_hparams`,
+the same source the per-leaf reference path uses — fused and reference
+updates agree by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional, Tuple
+
+import numpy as np
+
+from repro.optim.optimizers import OptimizerSpec, SegmentHParams, leaf_hparams
+
+if TYPE_CHECKING:  # import would cycle: train.runtime imports this package
+    from repro.train.bucketing import BucketLayout
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSegments:
+    """Frozen per-bucket segment metadata for the update kernels."""
+
+    layout: "BucketLayout"
+    hparams: Tuple[SegmentHParams, ...]     # per leaf, tree_flatten order
+
+    def uniform(self, b: int) -> Optional[Tuple[float, float]]:
+        """(lr_scale, weight_decay) if all leaves of bucket ``b`` agree,
+        else None (the kernel then takes materialized element arrays)."""
+        hps = {
+            (self.hparams[i].lr_scale, self.hparams[i].weight_decay)
+            for i in self.layout.leaves[b]
+        }
+        if len(hps) == 1:
+            return next(iter(hps))
+        return None
+
+    def segment_ids(self, b: int) -> np.ndarray:
+        """int32[padded] element -> leaf ordinal within the bucket;
+        the padded tail is segment -1."""
+        lay = self.layout
+        padded = lay.buf_sizes[b]
+        ids = np.full((padded,), -1, np.int32)
+        for ordinal, (i, off) in enumerate(zip(lay.leaves[b], lay.offsets[b])):
+            n = int(np.prod(lay.shapes[i], dtype=np.int64)) \
+                if lay.shapes[i] else 1
+            ids[off:off + n] = ordinal
+        return ids
+
+    def element_hparams(self, b: int) -> Tuple[np.ndarray, np.ndarray]:
+        """The segment-id map materialized to per-element f32 arrays
+        (lr_scale, weight_decay); tail elements get scale 0 / wd 0."""
+        lay = self.layout
+        ids = self.segment_ids(b)
+        leaf_ids = lay.leaves[b]
+        sc = np.array(
+            [self.hparams[i].lr_scale for i in leaf_ids] + [0.0], np.float32
+        )
+        wd = np.array(
+            [self.hparams[i].weight_decay for i in leaf_ids] + [0.0],
+            np.float32,
+        )
+        # ids == -1 (tail) indexes the trailing sentinel entry
+        return sc[ids], wd[ids]
+
+
+def build_segments(
+    layout: "BucketLayout", spec: OptimizerSpec
+) -> BucketSegments:
+    """Segment metadata for ``layout`` under ``spec``'s per-leaf rules."""
+    return BucketSegments(
+        layout=layout, hparams=leaf_hparams(spec, layout.shapes)
+    )

@@ -158,11 +158,14 @@ def main() -> None:
             # AOT phase cache against abstract batch specs: no data batch
             # is consumed, so step 0 still trains on the stream's batch 0
             runtime.compile(state, batch_spec(cfg, args.batch, args.seq))
+            st = runtime.stats()
             print(f"compiled {runtime.n_unique_phases} unique phases "
                   f"(period {runtime.period}) in {time.time() - t_c:.1f}s; "
                   f"max collectives in a phase: "
-                  f"{runtime.stats()['max_collectives_in_a_phase']} "
-                  f"(vs {layout.n_leaves} per-leaf)")
+                  f"{st['max_collectives_in_a_phase']} "
+                  f"(vs {layout.n_leaves} per-leaf); "
+                  f"update engine: "
+                  f"{'flat/' + st['update_impl'] if st['flat_state'] else 'per-leaf tree'}")
 
         # ---- online adaptive control plane (--adapt) ------------------
         controller = None
@@ -226,7 +229,10 @@ def main() -> None:
                 print(f"  {ev.describe()}")
 
     if args.ckpt:
-        path = save_ckpt(args.ckpt, args.steps, state)
+        # checkpoint boundary: the flat-resident runtime state unflattens
+        # to the tree form HERE and nowhere in the steady-state loop
+        tree_state = runtime.state_to_tree(state) if runtime else state
+        path = save_ckpt(args.ckpt, args.steps, tree_state)
         print(f"checkpoint -> {path}")
 
 

@@ -1,15 +1,19 @@
 from repro.optim.optimizers import (
     OptimizerSpec,
+    SegmentHParams,
     adamw,
     apply_updates,
     init_opt_state,
+    leaf_hparams,
     sgd_momentum,
 )
 
 __all__ = [
     "OptimizerSpec",
+    "SegmentHParams",
     "adamw",
     "sgd_momentum",
     "init_opt_state",
     "apply_updates",
+    "leaf_hparams",
 ]

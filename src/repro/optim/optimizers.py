@@ -30,6 +30,51 @@ class OptimizerSpec:
     weight_decay: float = 0.0
     momentum: float = 0.9           # sgd only
     grad_clip: float = 1.0          # global-norm clip; 0 disables
+    # Per-leaf hyperparameter segments (see leaf_hparams).  'all' decays
+    # every leaf (historical behavior); 'matrix' restricts weight decay
+    # to ndim >= 2 leaves (norm scales / biases stay undecayed).
+    decay_mask: str = "all"
+    # lr multiplier for ndim < 2 leaves (norms/biases); 1.0 = no-op.
+    ndim1_lr_scale: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentHParams:
+    """Static optimizer hyperparameters of one parameter leaf.
+
+    This is the *segment metadata* the fused bucket-update kernels
+    consume (kernels/bucket_update): each leaf's span inside a flat
+    bucket buffer becomes one segment of the static segment-id map, and
+    (lr_scale, weight_decay) are the only per-segment knobs the update
+    math needs.  The per-leaf reference path (apply_updates) derives its
+    behavior from the same tuples, so fused == reference by construction.
+    """
+
+    lr_scale: float
+    weight_decay: float
+
+
+def leaf_hparams(
+    spec: OptimizerSpec, shapes
+) -> Tuple[SegmentHParams, ...]:
+    """Per-leaf (lr_scale, weight_decay) from the spec's segment rules.
+
+    ``shapes`` is a sequence of leaf shapes in ``tree_flatten`` order (or
+    a sequence of array-likes with ``.shape``).  Defaults reproduce the
+    historical uniform behavior exactly.
+    """
+    out = []
+    for s in shapes:
+        shape = tuple(getattr(s, "shape", s))
+        ndim = len(shape)
+        wd = spec.weight_decay
+        if spec.decay_mask == "matrix" and ndim < 2:
+            wd = 0.0
+        elif spec.decay_mask not in ("all", "matrix"):
+            raise ValueError(f"unknown decay_mask {spec.decay_mask!r}")
+        scale = spec.ndim1_lr_scale if ndim < 2 else 1.0
+        out.append(SegmentHParams(lr_scale=scale, weight_decay=wd))
+    return tuple(out)
 
 
 def adamw(lr: float = 1e-3, **kw) -> OptimizerSpec:
@@ -77,6 +122,17 @@ def apply_updates(
     step = state["step"] + 1
     lr = spec.lr * lr_scale
 
+    # per-leaf hparam segments (same metadata the fused kernels consume),
+    # rebuilt as pytrees of python floats aligned with params
+    treedef = jax.tree_util.tree_structure(params)
+    hps = leaf_hparams(spec, jax.tree_util.tree_leaves(params))
+    wd_tree = jax.tree_util.tree_unflatten(
+        treedef, [hp.weight_decay for hp in hps]
+    )
+    sc_tree = jax.tree_util.tree_unflatten(
+        treedef, [hp.lr_scale for hp in hps]
+    )
+
     if spec.name == "adamw":
         b1, b2 = spec.beta1, spec.beta2
         m = jax.tree.map(
@@ -90,15 +146,15 @@ def apply_updates(
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
 
-        def upd(p, m_, v_):
+        def upd(p, m_, v_, wd, sc):
             m_ = m_.astype(jnp.float32)
             v_ = v_.astype(jnp.float32)
             u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + spec.eps)
-            if spec.weight_decay:
-                u = u + spec.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            if wd:
+                u = u + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - (lr * sc) * u).astype(p.dtype)
 
-        new_params = jax.tree.map(upd, params, m, v)
+        new_params = jax.tree.map(upd, params, m, v, wd_tree, sc_tree)
         return new_params, {"step": step, "m": m, "v": v}
 
     if spec.name == "sgd":
@@ -107,12 +163,15 @@ def apply_updates(
             state["m"], grads,
         )
 
-        def upd(p, m_):
-            u = m_
-            if spec.weight_decay:
-                u = u + spec.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        def upd(p, m_, wd, sc):
+            u = m_.astype(jnp.float32)
+            if wd:
+                u = u + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - (lr * sc) * u).astype(p.dtype)
 
-        return jax.tree.map(upd, params, m), {"step": step, "m": m}
+        return (
+            jax.tree.map(upd, params, m, wd_tree, sc_tree),
+            {"step": step, "m": m},
+        )
 
     raise ValueError(spec.name)

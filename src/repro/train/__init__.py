@@ -12,6 +12,7 @@ from repro.train.bucketing import (
 )
 from repro.train.runtime import (
     DeftRuntime,
+    deft_phase_step_flat,
     deft_phase_step_fused,
     deft_rs_phase_step_fused,
     init_fused_accumulators,
@@ -43,6 +44,7 @@ __all__ = [
     "deft_rs_phase_step",
     "deft_phase_step_fused",
     "deft_rs_phase_step_fused",
+    "deft_phase_step_flat",
     "make_deft_step_fns",
     "make_ddp_step",
     "phase_collectives",

@@ -120,8 +120,15 @@ class BucketLayout:
     n_buckets:      number of buckets (== number of flat buffers).
     leaves:         per bucket, the leaf indices it holds (ascending).
     offsets:        per bucket, the start offset of each leaf's span.
-    sizes:          per bucket, total element count of its buffer.
+    sizes:          per bucket, total element count of its *valid* span.
     shapes:         per leaf (tree_flatten order), the original shape.
+    padded_sizes:   per bucket, the allocated buffer length — ``sizes``
+                    rounded up to ``pad_multiple`` so the buffer reshapes
+                    to (rows, 128) lanes for the Pallas bucket-update
+                    kernels (DESIGN.md §8).  The tail [size, padded) is
+                    always zero: flatten pads zeros, collectives reduce
+                    zeros, and the update kernels mask it.  Empty tuple
+                    means "no padding" (legacy hand-built layouts).
     """
 
     bucket_of_leaf: Tuple[int, ...]
@@ -130,6 +137,7 @@ class BucketLayout:
     offsets: Tuple[Tuple[int, ...], ...]
     sizes: Tuple[int, ...]
     shapes: Tuple[Tuple[int, ...], ...]
+    padded_sizes: Tuple[int, ...] = ()
 
     @property
     def n_leaves(self) -> int:
@@ -139,11 +147,34 @@ class BucketLayout:
     def total_elems(self) -> int:
         return sum(self.sizes)
 
+    @property
+    def buf_sizes(self) -> Tuple[int, ...]:
+        """Allocated per-bucket buffer lengths (padded when available)."""
+        return self.padded_sizes or self.sizes
+
+
+# One f32 lane row: the bucket-update kernels reshape buffers to
+# (rows, PAD_MULTIPLE) tiles (kernels/bucket_update/kernel.py re-checks
+# the two constants agree on every trace, so they cannot drift apart
+# silently).
+PAD_MULTIPLE = 128
+
 
 def build_bucket_layout(
-    params, bucket_of_leaf: Sequence[int], n_buckets: int
+    params,
+    bucket_of_leaf: Sequence[int],
+    n_buckets: int,
+    *,
+    pad_multiple: int = PAD_MULTIPLE,
 ) -> BucketLayout:
     """Precompute the per-bucket flat-buffer layout for a parameter tree."""
+    if pad_multiple <= 0 or pad_multiple % PAD_MULTIPLE:
+        raise ValueError(
+            f"pad_multiple={pad_multiple} must be a positive multiple of "
+            f"{PAD_MULTIPLE} (the bucket-update kernels' lane width) — a "
+            f"smaller value would only fail deep inside the flat engine's "
+            f"first update-phase compile"
+        )
     flat = jax.tree_util.tree_flatten(params)[0]
     assert len(flat) == len(bucket_of_leaf)
     shapes = tuple(tuple(l.shape) for l in flat)
@@ -152,6 +183,7 @@ def build_bucket_layout(
         leaves[b].append(i)
     offsets: List[Tuple[int, ...]] = []
     sizes: List[int] = []
+    padded: List[int] = []
     for b in range(n_buckets):
         offs, acc = [], 0
         for i in leaves[b]:
@@ -159,6 +191,7 @@ def build_bucket_layout(
             acc += int(np.prod(shapes[i], dtype=np.int64)) if shapes[i] else 1
         offsets.append(tuple(offs))
         sizes.append(acc)
+        padded.append(-(-acc // pad_multiple) * pad_multiple if acc else 0)
     return BucketLayout(
         bucket_of_leaf=tuple(bucket_of_leaf),
         n_buckets=n_buckets,
@@ -166,18 +199,24 @@ def build_bucket_layout(
         offsets=tuple(offsets),
         sizes=tuple(sizes),
         shapes=shapes,
+        padded_sizes=tuple(padded),
     )
 
 
 def flatten_buckets(layout: BucketLayout, leaf_vals) -> List[jax.Array]:
     """Pack leaf values (tree_flatten order) into per-bucket flat f32
-    buffers.  Traced: static concatenation, no data-dependent shapes."""
+    buffers, zero-padded to the layout's allocated length.  Traced:
+    static concatenation, no data-dependent shapes."""
     out = []
+    buf_sizes = layout.buf_sizes
     for b in range(layout.n_buckets):
         parts = [
             leaf_vals[i].astype(jnp.float32).reshape(-1)
             for i in layout.leaves[b]
         ]
+        pad = buf_sizes[b] - layout.sizes[b]
+        if pad:
+            parts.append(jnp.zeros((pad,), jnp.float32))
         out.append(
             parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         )

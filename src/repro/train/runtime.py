@@ -19,10 +19,20 @@ runtime that owns the whole compiled-phase lifecycle (see DESIGN.md):
   lowered + compiled ahead of the first step; ``step(i)`` dispatches the
   cached executable for ``i % period`` and the runtime exposes compile /
   dispatch timing stats.
+* **Flat-resident state** (default, DESIGN.md §8) — params and optimizer
+  moments live as per-bucket flat f32 buffers for the whole period, not
+  as trees: the forward unflattens with static slice/reshape views, and
+  update phases apply the optimizer with ONE fused bucket-update kernel
+  per bucket (Pallas on TPU, lax fallback elsewhere — see
+  ``kernels/bucket_update``) instead of per-leaf ``apply_updates`` over
+  hundreds of tiny tensors.  The tree form exists only at checkpoint /
+  eval boundaries (:meth:`DeftRuntime.params_tree` /
+  :meth:`DeftRuntime.state_to_tree`).
 
 The per-leaf path in ``train/steps.py`` is kept as the semantic
-reference (tests prove fused == per-leaf == the gradient-accumulation
-reference) and as the benchmark baseline.
+reference (tests prove flat == fused-tree == per-leaf == the gradient-
+accumulation reference) and as the benchmark baseline; the PR-1
+tree-state fused path remains available via ``flat_state=False``.
 """
 from __future__ import annotations
 
@@ -38,6 +48,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.scheduler import DeftSchedule, PhaseSpec
+from repro.kernels.bucket_update import (
+    BucketSegments,
+    apply_bucket_updates,
+    build_segments,
+    init_flat_opt_state,
+)
 from repro.models.model import init_params, loss_fn
 from repro.optim.optimizers import OptimizerSpec, apply_updates, init_opt_state
 from repro.sharding import (
@@ -66,9 +82,52 @@ def init_fused_accumulators(
 ) -> Dict[str, Tuple[jax.Array, ...]]:
     """Per-bucket flat f32 accumulators with a leading device axis."""
     zeros = lambda: tuple(
-        jnp.zeros((accum_devices, s), jnp.float32) for s in layout.sizes
+        jnp.zeros((accum_devices, s), jnp.float32) for s in layout.buf_sizes
     )
     return {"cur": zeros(), "fut": zeros()}
+
+
+# ---------------------------------------------------------------------------
+# Shared per-bucket routing (identical for tree-state and flat-state paths)
+# ---------------------------------------------------------------------------
+def _route_and_sync(phase: PhaseSpec, g_flat, cur, fut, sync):
+    """DeFT generation bookkeeping on per-bucket flat buffers.
+
+    Returns (gen, new_fut, cur_synced): the merged fresh generation (or
+    None when not rotating), the next future accumulator, and the older
+    generation with this phase's scheduled collectives applied.
+    """
+    if phase.rotate:
+        # fresh generation merges with the future accumulator (Cases 3/4)
+        gen = [g + f for g, f in zip(g_flat, fut)]
+        gen = [
+            sync(x, b) if phase.route_new[b] == "sync" else x
+            for b, x in enumerate(gen)
+        ]
+        new_fut = [jnp.zeros_like(f) for f in fut]
+    else:
+        # Cases 1/2: fresh gradients accumulate locally
+        gen = None
+        new_fut = [f + g for f, g in zip(fut, g_flat)]
+
+    # older generation buckets scheduled this phase (fwd Case 1 + bwd 2/3)
+    cur_synced = [
+        sync(c, b) if phase.sync_cur[b] else c for b, c in enumerate(cur)
+    ]
+    return gen, new_fut, cur_synced
+
+
+def _fused_metrics(loss, parts, phase: PhaseSpec, dp_axes, n_dp: int):
+    """Loss and aux parts ride ONE fused psum, stacked to a vector."""
+    part_keys = sorted(parts)
+    stacked = jnp.stack([loss] + [parts[k] for k in part_keys])
+    stacked = jax.lax.psum(stacked, dp_axes) / n_dp
+    return {
+        "loss": stacked[0],
+        **{k: stacked[1 + j] for j, k in enumerate(part_keys)},
+        "updated": jnp.asarray(phase.do_update),
+        "k": jnp.asarray(phase.update_k, jnp.int32),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -118,25 +177,8 @@ def _deft_body_fused(
             return _sync_secondary(x, dp_axes, dp_sizes)
         return _sync_primary(x, dp_axes)
 
-    if phase.rotate:
-        # fresh generation merges with the future accumulator (Cases 3/4)
-        gen = [g + f for g, f in zip(g_flat, fut)]
-        gen = [
-            sync(x, b) if phase.route_new[b] == "sync" else x
-            for b, x in enumerate(gen)
-        ]
-        new_fut = [jnp.zeros_like(f) for f in fut]
-    else:
-        # Cases 1/2: fresh gradients accumulate locally
-        gen = None
-        new_fut = [f + g for f, g in zip(fut, g_flat)]
+    gen, new_fut, cur_synced = _route_and_sync(phase, g_flat, cur, fut, sync)
 
-    # older generation buckets scheduled this phase (fwd Case 1 + bwd 2/3)
-    cur_synced = [
-        sync(c, b) if phase.sync_cur[b] else c for b, c in enumerate(cur)
-    ]
-
-    updated = jnp.asarray(phase.do_update)
     if phase.do_update:
         src = cur_synced if phase.update_source == "cur" else gen
         grad_tree = jax.tree_util.tree_unflatten(
@@ -156,18 +198,93 @@ def _deft_body_fused(
     else:
         new_cur = cur_synced
 
-    # metrics ride ONE fused psum: loss and aux parts stacked to a vector
-    part_keys = sorted(parts)
-    stacked = jnp.stack([loss] + [parts[k] for k in part_keys])
-    stacked = jax.lax.psum(stacked, dp_axes) / n_dp
-    metrics = {
-        "loss": stacked[0],
-        **{k: stacked[1 + j] for j, k in enumerate(part_keys)},
-        "updated": updated,
-        "k": jnp.asarray(phase.update_k, jnp.int32),
-    }
+    metrics = _fused_metrics(loss, parts, phase, dp_axes, n_dp)
     new_state = {
         "params": params,
+        "opt": opt,
+        "cur": tuple(c[None] for c in new_cur),
+        "fut": tuple(f[None] for f in new_fut),
+    }
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Flat-resident DeFT phase body (params/opt as per-bucket flat buffers)
+# ---------------------------------------------------------------------------
+def _deft_body_flat(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    segments: BucketSegments,
+    treedef,
+    dp_axes: Tuple[str, ...],
+    dp_sizes: Dict[str, int],
+    rules: Dict,
+    remat: bool,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+    update_impl: Optional[str] = None,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One DeFT phase with params and optimizer moments resident as
+    per-bucket flat f32 buffers (DESIGN.md §8).
+
+    The forward reads params through static slice/reshape views of the
+    buffers (no per-leaf copies survive fusion); the update phase applies
+    the optimizer with one fused bucket-update kernel per bucket and the
+    accumulator zeroing rides the same launch.  No per-leaf O(num_params)
+    op sequence exists anywhere in the steady-state step.
+    """
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= dp_sizes[a]
+    pbuf, opt = state["pbuf"], state["opt"]
+    params = jax.tree_util.tree_unflatten(
+        treedef, unflatten_buckets(layout, pbuf)
+    )
+    with logical_rules(rules):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat,
+                              loss_chunk=loss_chunk, unroll=unroll),
+            has_aux=True,
+        )(params)
+
+    g_flat = flatten_buckets(layout, jax.tree_util.tree_leaves(grads))
+    cur = [c[0] for c in state["cur"]]
+    fut = [f[0] for f in state["fut"]]
+
+    def sync(x: jax.Array, b: int) -> jax.Array:
+        if phase.secondary[b]:
+            return _sync_secondary(x, dp_axes, dp_sizes)
+        return _sync_primary(x, dp_axes)
+
+    gen, new_fut, cur_synced = _route_and_sync(phase, g_flat, cur, fut, sync)
+
+    if phase.do_update:
+        src = cur_synced if phase.update_source == "cur" else gen
+        # the consumed accumulator is replaced by the fresh generation
+        # (rotate) or comes back zeroed fused from the update launch
+        zero_grads = (phase.update_source == "new") or (gen is None)
+        scale = 1.0 / (n_dp * phase.update_k)
+        pbuf, opt, zeroed = apply_bucket_updates(
+            opt_spec, segments, pbuf, src, opt,
+            grad_scale=scale, zero_grads=zero_grads, impl=update_impl,
+        )
+        if phase.update_source == "cur" and gen is not None:
+            new_cur = gen
+        else:
+            new_cur = list(zeroed)
+    elif phase.rotate:
+        new_cur = gen
+    else:
+        new_cur = cur_synced
+
+    metrics = _fused_metrics(loss, parts, phase, dp_axes, n_dp)
+    new_state = {
+        "pbuf": tuple(pbuf),
         "opt": opt,
         "cur": tuple(c[None] for c in new_cur),
         "fut": tuple(f[None] for f in new_fut),
@@ -186,6 +303,72 @@ _fused_state_specs = _state_specs
 _METRIC_SPECS = {"loss": P(), "ce": P(), "aux": P(), "updated": P(), "k": P()}
 
 
+def _flat_state_specs(state: TrainState, dp_axes: Tuple[str, ...]):
+    """Manual-axis specs for the flat-resident state: param buffers and
+    optimizer moments replicated over DP, accumulators split on their
+    leading device axis."""
+    rep = jax.tree.map(
+        lambda _: P(), {"pbuf": state["pbuf"], "opt": state["opt"]}
+    )
+    acc = jax.tree.map(
+        lambda _: P(dp_axes if len(dp_axes) > 1 else dp_axes[0]),
+        {"cur": state["cur"], "fut": state["fut"]},
+    )
+    return {**rep, **acc}
+
+
+def _shard_phase(body, specs_fn, state, batch, mesh, dp_axes):
+    """The one shard_map invocation every phase wrapper shares (state
+    specs from ``specs_fn``, batch split over DP, fused metric specs)."""
+    in_specs = (specs_fn(state, dp_axes), _batch_specs(batch, dp_axes))
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(specs_fn(state, dp_axes), _METRIC_SPECS),
+        axis_names=set(dp_axes),
+        check_vma=False,
+    )(state, batch)
+
+
+def deft_phase_step_flat(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    segments: BucketSegments,
+    treedef,
+    mesh,
+    multi_pod: bool = False,
+    remat: bool = True,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+    update_impl: Optional[str] = None,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """Flat-resident DeFT phase with explicit DP (params replicated)."""
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    body = functools.partial(
+        _deft_body_flat,
+        cfg=cfg,
+        opt_spec=opt_spec,
+        phase=phase,
+        layout=layout,
+        segments=segments,
+        treedef=treedef,
+        dp_axes=dp_axes,
+        dp_sizes=_dp_sizes(mesh, dp_axes),
+        rules=rules_deft_manual_dp(),
+        remat=remat,
+        loss_chunk=loss_chunk,
+        unroll=unroll,
+        update_impl=update_impl,
+    )
+    return _shard_phase(body, _flat_state_specs, state, batch, mesh, dp_axes)
+
+
 def deft_phase_step_fused(
     state: TrainState,
     batch: Dict[str, jax.Array],
@@ -202,7 +385,6 @@ def deft_phase_step_fused(
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Fused DeFT phase with explicit DP (params replicated over DP)."""
     dp_axes = ("pod", "data") if multi_pod else ("data",)
-    dp_sizes = _dp_sizes(mesh, dp_axes)
     body = functools.partial(
         _deft_body_fused,
         cfg=cfg,
@@ -210,22 +392,13 @@ def deft_phase_step_fused(
         phase=phase,
         layout=layout,
         dp_axes=dp_axes,
-        dp_sizes=dp_sizes,
+        dp_sizes=_dp_sizes(mesh, dp_axes),
         rules=rules_deft_manual_dp(),
         remat=remat,
         loss_chunk=loss_chunk,
         unroll=unroll,
     )
-    in_specs = (_fused_state_specs(state, dp_axes),
-                _batch_specs(batch, dp_axes))
-    return jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(_fused_state_specs(state, dp_axes), _METRIC_SPECS),
-        axis_names=set(dp_axes),
-        check_vma=False,
-    )(state, batch)
+    return _shard_phase(body, _fused_state_specs, state, batch, mesh, dp_axes)
 
 
 def deft_rs_phase_step_fused(
@@ -244,7 +417,6 @@ def deft_rs_phase_step_fused(
     """Fused DeFT hierarchical path (FSDP archs): manual over 'pod' only."""
     assert "pod" in mesh.axis_names, "DeFT-RS needs the multi-pod mesh"
     dp_axes = ("pod",)
-    dp_sizes = _dp_sizes(mesh, dp_axes)
     body = functools.partial(
         _deft_body_fused,
         cfg=cfg,
@@ -252,22 +424,13 @@ def deft_rs_phase_step_fused(
         phase=phase,
         layout=layout,
         dp_axes=dp_axes,
-        dp_sizes=dp_sizes,
+        dp_sizes=_dp_sizes(mesh, dp_axes),
         rules=rules_deft_rs_manual_pod(),
         remat=remat,
         loss_chunk=loss_chunk,
         unroll=unroll,
     )
-    in_specs = (_fused_state_specs(state, dp_axes),
-                _batch_specs(batch, dp_axes))
-    return jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(_fused_state_specs(state, dp_axes), _METRIC_SPECS),
-        axis_names=set(dp_axes),
-        check_vma=False,
-    )(state, batch)
+    return _shard_phase(body, _fused_state_specs, state, batch, mesh, dp_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +529,8 @@ class DeftRuntime:
         loss_chunk: int = 0,
         unroll: bool = False,
         donate: bool = True,
+        flat_state: Optional[bool] = None,
+        update_impl: Optional[str] = None,
     ):
         self.cfg = cfg
         self.opt_spec = opt_spec
@@ -377,6 +542,28 @@ class DeftRuntime:
         self._remat = remat
         self._loss_chunk = loss_chunk
         self._unroll = unroll
+        # flat-resident state (DESIGN.md §8): default everywhere except
+        # the FSDP/RS path, whose params must stay auto-shardable as
+        # trees over the intra-pod 'data' axis — replicated flat master
+        # buffers would defeat FSDP (and OOM the archs that need it)
+        self.flat_state = (not fsdp) if flat_state is None else flat_state
+        if self.flat_state and fsdp:
+            raise ValueError(
+                "flat_state is unsupported on the FSDP/RS path: the flat "
+                "param/moment buffers are replicated over DP (DESIGN.md §8)"
+            )
+        self.update_impl = update_impl
+        self._treedef = None
+        self._segments: Optional[BucketSegments] = None
+        if self.flat_state:
+            params_abs = jax.eval_shape(
+                lambda: init_params(jax.random.PRNGKey(0), cfg)
+            )
+            leaves, self._treedef = jax.tree_util.tree_flatten(params_abs)
+            assert tuple(tuple(l.shape) for l in leaves) == layout.shapes, (
+                "BucketLayout does not match this config's parameter tree"
+            )
+            self._segments = build_segments(layout, opt_spec)
         if fsdp:
             self.dp_axes: Tuple[str, ...] = ("pod",)
         else:
@@ -402,9 +589,13 @@ class DeftRuntime:
 
     # ---- schedule installation ------------------------------------------
     def _make_jitted(self, phase: PhaseSpec) -> Callable:
-        step_impl = (
-            deft_rs_phase_step_fused if self.fsdp else deft_phase_step_fused
-        )
+        if self.flat_state:        # never fsdp (rejected in __init__)
+            step_impl = deft_phase_step_flat
+        else:
+            step_impl = (
+                deft_rs_phase_step_fused if self.fsdp
+                else deft_phase_step_fused
+            )
         kw = dict(
             cfg=self.cfg,
             opt_spec=self.opt_spec,
@@ -415,6 +606,12 @@ class DeftRuntime:
             loss_chunk=self._loss_chunk,
             unroll=self._unroll,
         )
+        if self.flat_state:
+            kw.update(
+                segments=self._segments,
+                treedef=self._treedef,
+                update_impl=self.update_impl,
+            )
         if not self.fsdp:
             kw["multi_pod"] = self.multi_pod
         return jax.jit(
@@ -472,29 +669,98 @@ class DeftRuntime:
         old and the new cycle agree the phase is 0."""
         return (i - self._cycle_base) % self.period
 
+    def phase_executable(self, offset: int) -> Callable:
+        """The donated executable behind cycle phase ``offset`` — the
+        AOT-compiled one when :meth:`compile` ran, else the jitted
+        callable.  Public handle for benchmarks/tools that dispatch one
+        phase directly without the :meth:`step` bookkeeping."""
+        entry = self._entries[self._unique[self.phase_of_step[offset]]]
+        return entry.compiled if entry.compiled is not None else entry.jitted
+
     def init_state(self, key, dtype=jnp.float32) -> TrainState:
         """Fresh train state, committed to the shardings the phase
         executables expect — params/opt replicated, accumulators split on
         their leading device axis.  Committed placement is what lets XLA
         alias the donated input buffers (an uncommitted array would be
-        resharded at dispatch and could not be updated in place)."""
+        resharded at dispatch and could not be updated in place).
+
+        Flat-state runtimes return ``{pbuf, opt, cur, fut}`` — params
+        and moments as per-bucket flat f32 buffers (the master copy; see
+        :meth:`params_tree` / :meth:`state_to_tree` for the checkpoint /
+        eval boundary)."""
         from jax.sharding import NamedSharding
 
+        if self.flat_state and dtype != jnp.float32:
+            raise ValueError(
+                f"flat_state keeps an f32 master copy; dtype={dtype} would "
+                f"be silently promoted — use flat_state=False for non-f32 "
+                f"resident params (DESIGN.md §8)"
+            )
         params = init_params(key, self.cfg, dtype=dtype)
-        state: TrainState = {
-            "params": params,
-            "opt": init_opt_state(self.opt_spec, params),
-        }
-        state.update(init_fused_accumulators(self.layout, self.accum_devices))
         dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
         rep = NamedSharding(self.mesh, P())
         split = NamedSharding(self.mesh, P(dp))
+        acc = init_fused_accumulators(self.layout, self.accum_devices)
+        if self.flat_state:
+            # flat f32 master copy — one buffer per bucket
+            pbuf = tuple(
+                flatten_buckets(self.layout, jax.tree_util.tree_leaves(params))
+            )
+            opt = init_flat_opt_state(self.opt_spec, self.layout.buf_sizes)
+            return {
+                "pbuf": jax.device_put(pbuf, rep),
+                "opt": jax.device_put(opt, rep),
+                "cur": jax.device_put(acc["cur"], split),
+                "fut": jax.device_put(acc["fut"], split),
+            }
         return {
-            "params": jax.device_put(state["params"], rep),
-            "opt": jax.device_put(state["opt"], rep),
-            "cur": jax.device_put(state["cur"], split),
-            "fut": jax.device_put(state["fut"], split),
+            "params": jax.device_put(params, rep),
+            "opt": jax.device_put(init_opt_state(self.opt_spec, params), rep),
+            "cur": jax.device_put(acc["cur"], split),
+            "fut": jax.device_put(acc["fut"], split),
         }
+
+    # ---- checkpoint / eval boundary (tree <-> flat) ---------------------
+    def params_tree(self, state: TrainState):
+        """Parameter pytree view of a train state.  For flat-state
+        runtimes this is THE unflatten boundary — steady-state steps
+        never materialize the tree; call this only at checkpoint / eval
+        / debug points."""
+        if not self.flat_state:
+            return state["params"]
+        return jax.tree_util.tree_unflatten(
+            self._treedef, unflatten_buckets(self.layout, state["pbuf"])
+        )
+
+    def state_to_tree(self, state: TrainState) -> TrainState:
+        """Checkpoint-friendly tree form {params, opt{step,m[,v]}} of a
+        train state (accumulators pass through unchanged)."""
+        if not self.flat_state:
+            return state
+        unflat = lambda bufs: jax.tree_util.tree_unflatten(
+            self._treedef, unflatten_buckets(self.layout, bufs)
+        )
+        opt: Dict[str, Any] = {"step": state["opt"]["step"],
+                               "m": unflat(state["opt"]["m"])}
+        if "v" in state["opt"]:
+            opt["v"] = unflat(state["opt"]["v"])
+        return {"params": self.params_tree(state), "opt": opt,
+                "cur": state["cur"], "fut": state["fut"]}
+
+    def tree_to_state(self, tree_state: TrainState) -> TrainState:
+        """Inverse of :meth:`state_to_tree` — restore a checkpointed tree
+        into the runtime's resident representation."""
+        if not self.flat_state:
+            return tree_state
+        flat = lambda t: tuple(
+            flatten_buckets(self.layout, jax.tree_util.tree_leaves(t))
+        )
+        opt: Dict[str, Any] = {"step": tree_state["opt"]["step"],
+                               "m": flat(tree_state["opt"]["m"])}
+        if "v" in tree_state["opt"]:
+            opt["v"] = flat(tree_state["opt"]["v"])
+        return {"pbuf": flat(tree_state["params"]), "opt": opt,
+                "cur": tree_state["cur"], "fut": tree_state["fut"]}
 
     # ---- AOT phase cache ------------------------------------------------
     def _compile_entries(
@@ -641,10 +907,17 @@ class DeftRuntime:
         total_dispatch = sum(e.stats.dispatch_s for e in entries)
         n = sum(e.stats.dispatches for e in entries)
         coll = self.collectives_per_phase()
+        from repro.kernels.bucket_update import default_bucket_update_impl
+
         return {
             "period": self.period,
             "unique_phases": self.n_unique_phases,
             "cached_phases": self.n_cached_phases,
+            "flat_state": self.flat_state,
+            "update_impl": (
+                (self.update_impl or default_bucket_update_impl())
+                if self.flat_state else "per-leaf"
+            ),
             "accum_devices": self.accum_devices,
             "n_buckets": self.layout.n_buckets,
             "n_leaves": self.layout.n_leaves,

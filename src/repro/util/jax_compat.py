@@ -40,6 +40,18 @@ _state = threading.local()
 _V = tuple(int(x) for x in jax.__version__.split(".")[:2])
 HIERARCHICAL_COLLECTIVES_OK = _V >= (0, 5)
 
+# Pallas bucket-update kernels (kernels/bucket_update).  The kernels
+# themselves use only the post-0.4.31 BlockSpec convention, which the
+# pinned 0.4.37 provides, so the kernel gate is a backend question
+# (TPU vs CPU — resolved at dispatch in bucket_update/ops.py, composing
+# with the same fallback philosophy as the collectives gate above).
+# ``input_output_aliases`` *inside* a shard_map partial-manual region is
+# the one piece old jaxlib mishandles (same SPMD-partitioner vintage as
+# the hierarchical-collectives CHECK) — gate it; without the in-kernel
+# alias the jit-level donation still reuses the buffers, only the XLA
+# copy-elision hint is lost.
+PALLAS_BUCKET_ALIAS_OK = _V >= (0, 5)
+
 
 def _ambient_abstract():
     return getattr(_state, "abstract_mesh", None)

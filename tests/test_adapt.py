@@ -366,8 +366,8 @@ def test_adaptive_loop_hot_swap_bit_matches_reference(single_mesh):
             ref_state, _ = rt_b.step(step - swap_step, ref_state,
                                      make_batch(cfg, 0, step, B, S))
 
-    for a, b in zip(jax.tree.leaves(state["params"]),
-                    jax.tree.leaves(ref_state["params"])):
+    for a, b in zip(jax.tree.leaves(runtime.params_tree(state)),
+                    jax.tree.leaves(rt_b.params_tree(ref_state))):
         assert jnp.array_equal(a, b), "hot-swapped run diverged bitwise"
 
 

@@ -1,0 +1,104 @@
+"""BENCH_*.json schema validation: the validator itself, and the
+checked-in benchmark files at the repo root (the perf trajectory other
+PRs compare against must never silently lose a key)."""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.bench_schema import (  # noqa: E402
+    SCHEMAS,
+    validate_data,
+    validate_file,
+)
+
+
+def _minimal(schema):
+    """Smallest payload satisfying a schema."""
+    return {
+        k: _minimal(v) if isinstance(v, dict) else 0
+        for k, v in schema.items()
+    }
+
+
+@pytest.mark.parametrize("name", sorted(SCHEMAS))
+def test_minimal_payload_validates(name):
+    assert validate_data(name, _minimal(SCHEMAS[name])) == []
+
+
+@pytest.mark.parametrize("name", sorted(SCHEMAS))
+def test_missing_keys_detected(name):
+    schema = SCHEMAS[name]
+    data = _minimal(schema)
+    # drop one top-level and one nested key
+    top = sorted(schema)[0]
+    broken = copy.deepcopy(data)
+    del broken[top]
+    errors = validate_data(name, broken)
+    assert any(top in e for e in errors), errors
+
+    nested_parent = next(
+        (k for k, v in schema.items() if isinstance(v, dict)), None
+    )
+    if nested_parent:
+        broken = copy.deepcopy(data)
+        inner = sorted(schema[nested_parent])[0]
+        del broken[nested_parent][inner]
+        errors = validate_data(name, broken)
+        assert any(f"{nested_parent}.{inner}" in e for e in errors), errors
+
+
+def test_extra_keys_allowed():
+    name = sorted(SCHEMAS)[0]
+    data = _minimal(SCHEMAS[name])
+    data["a_future_metric"] = 123
+    assert validate_data(name, data) == []
+
+
+def test_unknown_file_rejected():
+    assert validate_data("BENCH_bogus.json", {}) != []
+
+
+def test_wrong_shape_reported():
+    name = "BENCH_runtime.json"
+    data = _minimal(SCHEMAS[name])
+    data["solver"] = 3.0            # mapping expected
+    errors = validate_data(name, data)
+    assert any("solver" in e and "mapping" in e for e in errors)
+
+
+@pytest.mark.parametrize("name", sorted(SCHEMAS))
+def test_checked_in_bench_files_validate(name):
+    """The committed perf-trajectory files conform to their schema."""
+    path = os.path.join(_ROOT, name)
+    assert os.path.exists(path), (
+        f"{name} missing from the repo root — regenerate with "
+        f"`python benchmarks/run.py --smoke`"
+    )
+    assert validate_file(path) == []
+
+
+def test_check_script_cli():
+    """scripts/check_bench_schema.py: exit 0 on the checked-in files,
+    exit 1 (with SCHEMA ERROR on stderr) on a broken payload."""
+    script = os.path.join(_ROOT, "scripts", "check_bench_schema.py")
+    ok = subprocess.run([sys.executable, script], capture_output=True,
+                        text=True, cwd=_ROOT)
+    assert ok.returncode == 0, ok.stderr
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        bad = os.path.join(td, "BENCH_runtime.json")
+        with open(bad, "w") as f:
+            json.dump({"solver": {}}, f)
+        res = subprocess.run([sys.executable, script, bad],
+                             capture_output=True, text=True, cwd=_ROOT)
+        assert res.returncode == 1
+        assert "SCHEMA ERROR" in res.stderr

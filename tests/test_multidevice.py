@@ -84,7 +84,7 @@ with mesh:
         elif ph.rotate:
             ref_cur = gen
         diff = max(float(jnp.max(jnp.abs(a - b)))
-                   for a, b in zip(jax.tree.leaves(state["params"]),
+                   for a, b in zip(jax.tree.leaves(rt.params_tree(state)),
                                    jax.tree.leaves(ref_params)))
         assert diff < 1e-4, f"step {step}: diverged by {diff}"
 

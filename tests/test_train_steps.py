@@ -117,10 +117,15 @@ def test_deft_steps_match_accumulation_reference(single_mesh, cr):
             assert bool(m["updated"]) == ph.do_update
 
 
+@pytest.mark.parametrize("flat_state", [True, False],
+                         ids=["flat", "tree"])
 @pytest.mark.parametrize("cr", [0.5, 1.8])
-def test_fused_runtime_matches_accumulation_reference(single_mesh, cr):
+def test_fused_runtime_matches_accumulation_reference(single_mesh, cr,
+                                                      flat_state):
     """DeftRuntime (bucket-fused collectives, donated buffers, AOT phase
-    cache) vs the same gradient-accumulation reference."""
+    cache) vs the same gradient-accumulation reference — both the flat-
+    resident engine (fused bucket-update path; cr=1.8 exercises delayed
+    k>1 stale-gradient updates) and the PR-1 tree-state engine."""
     cfg = reduce_for_smoke(get_config("qwen3-4b"))
     opt = adamw(1e-3)
     key = jax.random.PRNGKey(0)
@@ -129,7 +134,8 @@ def test_fused_runtime_matches_accumulation_reference(single_mesh, cr):
     layout = build_bucket_layout(probe["params"], bucket_of, nb)
 
     with single_mesh:
-        rt = DeftRuntime(cfg, opt, sched, layout, single_mesh)
+        rt = DeftRuntime(cfg, opt, sched, layout, single_mesh,
+                         flat_state=flat_state)
         state = rt.init_state(key)
         rt.compile(state, make_batch(cfg, 0, 0, B, S))   # AOT phase cache
         ref = _ReferenceReplay(cfg, opt, probe["params"])
@@ -138,13 +144,14 @@ def test_fused_runtime_matches_accumulation_reference(single_mesh, cr):
             ph = sched.phases[step % sched.period]
             state, m = rt.step(step, state, batch)
             ref.step(ph, batch)
-            diff = ref.max_param_diff(state["params"])
+            diff = ref.max_param_diff(rt.params_tree(state))
             assert diff < 5e-5, f"step {step}: params diverge by {diff}"
             assert bool(m["updated"]) == ph.do_update
     st = rt.stats()
     assert st["steps_dispatched"] == 2 * sched.period
     assert st["unique_phases"] <= sched.period
     assert st["compile_s_total"] > 0.0
+    assert st["flat_state"] == flat_state
 
 
 # ---------------------------------------------------------------------------
