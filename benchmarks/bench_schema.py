@@ -47,6 +47,31 @@ _UPDATE_PATH_GRANULARITY = {
     "speedup_flat_vs_per_leaf": None,
 }
 
+_FSDP_FLAT_SCENARIO = {
+    "host_devices": None,
+    "mesh": {"pod": None, "data": None, "model": None},
+    "model": {"name": None, "params": None, "n_leaves": None,
+              "n_buckets": None},
+    "schedule": {"period": None, "updates_per_period": None},
+    "engine": {"flat_state": None, "sharded_state": None, "shards": None,
+               "update_impl": None},
+    "steps_timed": None,
+    "compile_s_fused_aot": None,
+    "steps_per_s_sharded": None,
+    "steps_per_s_replicated_flat": None,
+    "update_phase_ms_sharded": None,
+    "update_phase_ms_replicated_flat": None,
+    "update_path_sharded": {
+        "n_leaves": None,
+        "n_buckets": None,
+        "shard_count": None,
+        "total_elems": None,
+        "apply_ms_flat_shard": None,
+        "apply_ms_per_leaf_shard": None,
+        "speedup_flat_vs_per_leaf": None,
+    },
+}
+
 SCHEMAS: Dict[str, Dict[str, Any]] = {
     "BENCH_runtime.json": {
         "solver": {
@@ -63,6 +88,7 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
         },
         "smoke": _RUNTIME_SCENARIO,
         "dp4": _RUNTIME_SCENARIO,
+        "fsdp_flat": _FSDP_FLAT_SCENARIO,
     },
     "BENCH_adapt.json": {
         "scenario": {"drop_step": None, "drop_scale": None,

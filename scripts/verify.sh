@@ -6,10 +6,13 @@
 # everyday gate stays fast; run `pytest -m slow` explicitly before
 # touching shard_map/collective code.
 #
-#   scripts/verify.sh          # tests + dry-run smoke
-#   scripts/verify.sh --fast   # tests only
-#   scripts/verify.sh --smoke  # smoke benchmarks + BENCH schema check
-#                              # (the CI benchmark job; no test run)
+#   scripts/verify.sh               # tests + dry-run smoke
+#   scripts/verify.sh --fast        # tests only
+#   scripts/verify.sh --smoke       # smoke benchmarks + BENCH schema check
+#                                   # (the CI benchmark job; no test run)
+#   scripts/verify.sh --multidevice # the multidevice-marked subprocess
+#                                   # suite on forced host devices (the
+#                                   # CI multidevice job)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,6 +25,21 @@ if [[ "$mode" == "--smoke" ]]; then
   python benchmarks/run.py --smoke
   python scripts/check_bench_schema.py
   echo "verify.sh --smoke: OK"
+  exit 0
+fi
+
+if [[ "$mode" == "--multidevice" ]]; then
+  echo "== multi-device suite (forced host devices) =="
+  # the tests spawn subprocesses that force their own device counts;
+  # the outer XLA_FLAGS only covers any future in-process cases
+  rc=0
+  XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest -q -m multidevice || rc=$?
+  if [[ "$rc" -ne 0 ]]; then
+    echo "verify.sh: multidevice tests FAILED (exit $rc)" >&2
+    exit "$rc"
+  fi
+  echo "verify.sh --multidevice: OK"
   exit 0
 fi
 

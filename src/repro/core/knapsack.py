@@ -200,7 +200,12 @@ def knapsack_two_link(
 
     Returns (primary_items, secondary_items).  Uses the greedy heuristic,
     then locally improves the primary set with the exact DP over the items
-    the greedy left out or placed on the secondary link."""
+    the greedy left out or placed on the primary link, re-offering any
+    item the refinement evicted (or the greedy never placed) to the
+    residual secondary capacity.  The refined split is adopted only when
+    its *total* covered time beats the greedy's — comparing primary load
+    alone could adopt a split that evicts greedy picks outright and
+    covers less overall."""
     placed = greedy_multi_knapsack(times, [primary_capacity, secondary_capacity])
     primary, secondary = placed.get(0, []), placed.get(1, [])
     # refinement: re-solve the primary knapsack exactly over all items not
@@ -208,6 +213,17 @@ def knapsack_two_link(
     free = [i for i in range(len(times)) if i not in secondary]
     sub = naive_knapsack([times[i] for i in free], primary_capacity)
     primary2 = [free[j] for j in sub]
-    if sum(times[i] for i in primary2) > sum(times[i] for i in primary):
-        primary = primary2
+    # evicted greedy picks and never-placed items compete for what the
+    # secondary link has left, longest-first (the greedy's own ordering)
+    secondary2 = list(secondary)
+    residual = secondary_capacity - sum(times[i] for i in secondary)
+    for i in sorted(set(free) - set(primary2), key=lambda j: -times[j]):
+        if times[i] <= residual:
+            secondary2.append(i)
+            residual -= times[i]
+    covered = lambda prim, sec: (
+        sum(times[i] for i in prim) + sum(times[i] for i in sec)
+    )
+    if covered(primary2, secondary2) > covered(primary, secondary):
+        primary, secondary = primary2, secondary2
     return sorted(primary), sorted(secondary)

@@ -8,7 +8,10 @@ tensor (launch, dispatch, tree bookkeeping) is paid once per bucket.
 
 * **Masked tail** — buffers are padded to a lane multiple; a 2-D iota
   against the static valid length keeps the tail at its (zero) value
-  even if garbage rides in the gradient tail.
+  even if garbage rides in the gradient tail.  On the sharded flat
+  engine the operand is one device's shard span and the valid length is
+  device-dependent, so the caller pre-masks the gradient and passes
+  ``n_valid == span`` (the mask compiles away — see ops.py).
 * **Segment hparams** — per-leaf (lr_scale, weight_decay) arrive either
   as compile-time scalars (uniform buckets, the default — no O(params)
   constants) or as materialized per-element arrays blocked like the

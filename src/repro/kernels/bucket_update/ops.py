@@ -135,6 +135,8 @@ def apply_bucket_updates(
     lr_scale=1.0,
     zero_grads: bool = False,
     impl: Optional[str] = None,
+    shard_id: Optional[jax.Array] = None,
+    norm_psum=None,
 ) -> Tuple[
     Tuple[jax.Array, ...], Dict[str, Any], Optional[Tuple[jax.Array, ...]]
 ]:
@@ -145,19 +147,73 @@ def apply_bucket_updates(
     one fused kernel launch per bucket.  With ``zero_grads`` the zeroed
     gradient buffers come back fused from the same launches (the
     accumulator reset of the delayed-update schedule).
+
+    **Sharded mode** (``shard_id`` given — the RS/FSDP flat engine,
+    DESIGN.md §8): every buffer is one device's contiguous shard span
+    (``layout.shard_sizes[b]`` elements, starting at global offset
+    ``shard_id * span``).  ``shard_id`` may be a traced per-device index
+    (``jax.lax.axis_index`` inside shard_map) — all shapes stay static.
+    The padded tail occupies the *trailing* spans (a small bucket can be
+    all tail on several shards), so per-span validity is
+    device-dependent: instead of the kernels' static mask, EVERY
+    gradient span is pre-masked against the global valid length (a
+    fused elementwise select) and the kernels run unmasked over the
+    whole span.  ``norm_psum`` must sum the squared-norm contribution across
+    the shard axis (each device only sees 1/N of the gradient) — without
+    it the clip factor would be computed from a single shard.
     """
     layout = segments.layout
     adam = spec.name == "adamw"
+    sharded = shard_id is not None
+    # layout.shards == 1 is the degenerate single-shard case (1-device
+    # FSDP smoke runs): spans are the whole buffers and the sharded path
+    # reduces to the unsharded one bit-for-bit.  A layout whose shard
+    # count mismatches the actual mesh is rejected by DeftRuntime's
+    # constructor — here the layout's own span math is authoritative.
+    if sharded and spec.grad_clip and norm_psum is None:
+        raise ValueError(
+            "sharded update with grad_clip needs norm_psum: each device "
+            "sees 1/N of the gradient, so a local norm would mis-clip "
+            "every shard differently and silently diverge params — pass "
+            "the shard-axis psum (or an identity for single-shard "
+            "benchmarking/tests)"
+        )
+
+    def shard_mask(b: int) -> Optional[jax.Array]:
+        """bool[span] validity of this device's span of bucket ``b``
+        (None when the bucket has no padded tail at all)."""
+        span = layout.shard_sizes[b]
+        if layout.sizes[b] >= layout.buf_sizes[b]:
+            return None
+        base = shard_id.astype(jnp.int32) * span
+        return (base + jnp.arange(span, dtype=jnp.int32)) < layout.sizes[b]
+
+    if sharded:
+        masks = [shard_mask(b) for b in range(layout.n_buckets)]
+        gbuf = [
+            g if masks[b] is None else jnp.where(masks[b], g, 0.0)
+            for b, g in enumerate(gbuf)
+        ]
+
     if spec.grad_clip:
         # norm over the VALID spans only — the padded tails are zero by
         # construction, but the kernels' tail mask promises that even
         # hostile tail values cannot leak into params, and an unmasked
-        # norm would funnel them through the clip scalar
-        sq = [
-            jnp.sum(jnp.square(g[: layout.sizes[b]] * grad_scale))
-            for b, g in enumerate(gbuf)
-        ]
-        gn = jnp.sqrt(jnp.sum(jnp.stack(sq)))
+        # norm would funnel them through the clip scalar.  Sharded mode
+        # already pre-masked the gradient; the per-shard sums are summed
+        # across the shard axis by ``norm_psum``.
+        if sharded:
+            sq = [jnp.sum(jnp.square(g * grad_scale)) for g in gbuf]
+            total = jnp.sum(jnp.stack(sq))
+            if norm_psum is not None:
+                total = norm_psum(total)
+            gn = jnp.sqrt(total)
+        else:
+            sq = [
+                jnp.sum(jnp.square(g[: layout.sizes[b]] * grad_scale))
+                for b, g in enumerate(gbuf)
+            ]
+            gn = jnp.sqrt(jnp.sum(jnp.stack(sq)))
         clip = jnp.minimum(1.0, spec.grad_clip / jnp.maximum(gn, 1e-12))
     else:
         clip = jnp.float32(1.0)
@@ -175,7 +231,17 @@ def apply_bucket_updates(
         elem = None
         if uniform is None:
             sc, wd = segments.element_hparams(b)
-            elem = (jnp.asarray(sc), jnp.asarray(wd))
+            sc, wd = jnp.asarray(sc), jnp.asarray(wd)
+            if sharded:
+                span = layout.shard_sizes[b]
+                start = shard_id.astype(jnp.int32) * span
+                sc = jax.lax.dynamic_slice(sc, (start,), (span,))
+                wd = jax.lax.dynamic_slice(wd, (start,), (span,))
+            elem = (sc, wd)
+        # sharded spans run the kernels unmasked (n_valid == span): the
+        # gradient tail is pre-masked above and p/m/v tails are zero by
+        # the engine's invariant, so a zero update keeps them zero
+        n_valid = layout.shard_sizes[b] if sharded else layout.sizes[b]
         p2, m2, v2, gz = bucket_update(
             spec,
             pbuf[b],
@@ -183,7 +249,7 @@ def apply_bucket_updates(
             opt["v"][b] if adam else None,
             gbuf[b],
             scalars,
-            n_valid=layout.sizes[b],
+            n_valid=n_valid,
             uniform=uniform,
             elem_hparams=elem,
             zero_grads=zero_grads,

@@ -49,7 +49,9 @@ def bucket_update_ref(
 
     Returns (p', m', v'|None, zeroed-g|None).  The padded tail
     [n_valid, padded) is masked: p/m/v keep their (zero) tail values no
-    matter what rides in the tail of ``g``.
+    matter what rides in the tail of ``g``.  Sharded spans arrive with
+    ``n_valid == len(p)`` and a pre-masked gradient (ops.py), making
+    ``_keep_tail`` a no-op.
     """
     gscale, clip, lr = scalars[0, 0], scalars[0, 1], scalars[0, 2]
     if uniform is not None:

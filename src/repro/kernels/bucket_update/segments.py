@@ -80,6 +80,27 @@ class BucketSegments:
         # ids == -1 (tail) indexes the trailing sentinel entry
         return sc[ids], wd[ids]
 
+    def element_hparams_shard(
+        self, b: int, shard: int, n_shards: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """``element_hparams`` sliced to one contiguous shard span of the
+        sharded flat engine (DESIGN.md §8): shard ``s`` of bucket ``b``
+        owns global elements ``[s * span, (s + 1) * span)`` with
+        ``span = buf_sizes[b] // n_shards``.  Static twin of the traced
+        per-device slice the RS update path takes (ops.py slices the
+        same full arrays with the device's shard index)."""
+        padded = self.layout.buf_sizes[b]
+        if padded % n_shards:
+            raise ValueError(
+                f"bucket {b}: buffer length {padded} does not split into "
+                f"{n_shards} shards — build the layout with "
+                f"shard_count={n_shards}"
+            )
+        span = padded // n_shards
+        sc, wd = self.element_hparams(b)
+        return sc[shard * span:(shard + 1) * span], \
+            wd[shard * span:(shard + 1) * span]
+
 
 def build_segments(
     layout: "BucketLayout", spec: OptimizerSpec

@@ -102,6 +102,10 @@ def main() -> None:
                          "at this step (0 = use real measured wall times)")
     ap.add_argument("--adapt-drop-scale", type=float, default=3.0,
                     help="comm slowdown factor of the injected drop")
+    ap.add_argument("--compute-dtype", choices=["f32", "bf16"],
+                    default="f32",
+                    help="forward/backward precision of the flat engines "
+                         "(the master copy stays f32)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--data", type=int, default=0, help="debug mesh data axis")
     ap.add_argument("--model", type=int, default=0, help="debug mesh model axis")
@@ -151,9 +155,17 @@ def main() -> None:
                   f"batch-size seq={schedule.batch_size_sequence}, "
                   f"preserver ratio={verdict.ratio:.4f} "
                   f"(capacity x{scfg.capacity_factor:.2f})")
-            layout = build_bucket_layout(params_abs, bucket_of, nb)
-            runtime = DeftRuntime(cfg, opt, schedule, layout, mesh, fsdp=fsdp)
-            state = runtime.init_state(key)
+            # FSDP archs run the sharded flat engine: the layout pads
+            # every bucket so it splits into dp equal lane-aligned spans
+            layout = build_bucket_layout(params_abs, bucket_of, nb,
+                                         shard_count=dp if fsdp else 1)
+            compute_dtype = (jnp.bfloat16 if args.compute_dtype == "bf16"
+                             else None)
+            runtime = DeftRuntime(cfg, opt, schedule, layout, mesh,
+                                  fsdp=fsdp, compute_dtype=compute_dtype)
+            state = runtime.init_state(
+                key, dtype=compute_dtype or jnp.float32
+            )
             t_c = time.time()
             # AOT phase cache against abstract batch specs: no data batch
             # is consumed, so step 0 still trains on the stream's batch 0
@@ -165,7 +177,9 @@ def main() -> None:
                   f"{st['max_collectives_in_a_phase']} "
                   f"(vs {layout.n_leaves} per-leaf); "
                   f"update engine: "
-                  f"{'flat/' + st['update_impl'] if st['flat_state'] else 'per-leaf tree'}")
+                  f"{'flat/' + st['update_impl'] if st['flat_state'] else 'per-leaf tree'}"
+                  + (f" (sharded 1/{st['shards']})"
+                     if st.get("sharded_state") else ""))
 
         # ---- online adaptive control plane (--adapt) ------------------
         controller = None

@@ -151,9 +151,12 @@ def sharding_tree(tree, rules: Dict[str, AxisVal], mesh):
 # --------------------------------------------------------------------------
 # Archs whose parameters cannot replicate across the DP axis on a 16 GB
 # v5e chip (bf16 params / 16-way TP > ~4 GB) use FSDP ('embed' dim sharded
-# over 'data'); DeFT's explicit-DP masked-psum path needs DP-replicated
-# params, so FSDP archs take the hierarchical DeFT-RS path instead
-# (explicit psums over 'pod' only, multi-pod meshes).
+# over 'data').  These rules drive the pjit baseline and the legacy
+# tree-state DeFT-RS path (explicit psums over 'pod' only, weight FSDP
+# left to XLA); the production engine for FSDP archs is the SHARDED
+# flat-state runtime (DESIGN.md §8), which realizes the same 1/N
+# residency by splitting the flat bucket buffers over 'data' explicitly
+# instead of through these per-leaf specs.
 FSDP_ARCHS = frozenset(
     {"deepseek-v2-236b", "llama4-maverick-400b-a17b", "llama-3.2-vision-90b"}
 )

@@ -14,6 +14,7 @@ from repro.train.runtime import (
     DeftRuntime,
     deft_phase_step_flat,
     deft_phase_step_fused,
+    deft_rs_phase_step_flat,
     deft_rs_phase_step_fused,
     init_fused_accumulators,
     make_ddp_step,
@@ -45,6 +46,7 @@ __all__ = [
     "deft_phase_step_fused",
     "deft_rs_phase_step_fused",
     "deft_phase_step_flat",
+    "deft_rs_phase_step_flat",
     "make_deft_step_fns",
     "make_ddp_step",
     "phase_collectives",

@@ -129,6 +129,12 @@ class BucketLayout:
                     always zero: flatten pads zeros, collectives reduce
                     zeros, and the update kernels mask it.  Empty tuple
                     means "no padding" (legacy hand-built layouts).
+    shards:         shard count of the sharded flat engine (DESIGN.md
+                    §8, sharded layout): every allocated buffer length is
+                    additionally a multiple of ``shards * pad_multiple``,
+                    so the buffer splits into ``shards`` equal contiguous
+                    spans and every span is itself a lane-aligned kernel
+                    operand.  1 (the default) is the replicated engine.
     """
 
     bucket_of_leaf: Tuple[int, ...]
@@ -138,6 +144,7 @@ class BucketLayout:
     sizes: Tuple[int, ...]
     shapes: Tuple[Tuple[int, ...], ...]
     padded_sizes: Tuple[int, ...] = ()
+    shards: int = 1
 
     @property
     def n_leaves(self) -> int:
@@ -151,6 +158,14 @@ class BucketLayout:
     def buf_sizes(self) -> Tuple[int, ...]:
         """Allocated per-bucket buffer lengths (padded when available)."""
         return self.padded_sizes or self.sizes
+
+    @property
+    def shard_sizes(self) -> Tuple[int, ...]:
+        """Per bucket, the length of one device's contiguous shard span
+        (``buf_sizes[b] // shards``; a lane multiple by construction).
+        Shard ``s`` of bucket ``b`` covers the global index range
+        ``[s * shard_sizes[b], (s + 1) * shard_sizes[b])``."""
+        return tuple(n // self.shards for n in self.buf_sizes)
 
 
 # One f32 lane row: the bucket-update kernels reshape buffers to
@@ -166,8 +181,16 @@ def build_bucket_layout(
     n_buckets: int,
     *,
     pad_multiple: int = PAD_MULTIPLE,
+    shard_count: int = 1,
 ) -> BucketLayout:
-    """Precompute the per-bucket flat-buffer layout for a parameter tree."""
+    """Precompute the per-bucket flat-buffer layout for a parameter tree.
+
+    ``shard_count > 1`` builds the shard-aware layout of the sharded flat
+    engine (DESIGN.md §8): every buffer is padded to a multiple of
+    ``shard_count * pad_multiple`` so it splits into ``shard_count``
+    equal, lane-aligned spans — each span a valid kernel operand and a
+    valid tiled reduce-scatter / all-gather shard.
+    """
     if pad_multiple <= 0 or pad_multiple % PAD_MULTIPLE:
         raise ValueError(
             f"pad_multiple={pad_multiple} must be a positive multiple of "
@@ -175,6 +198,9 @@ def build_bucket_layout(
             f"smaller value would only fail deep inside the flat engine's "
             f"first update-phase compile"
         )
+    if shard_count < 1:
+        raise ValueError(f"shard_count={shard_count} must be >= 1")
+    unit = pad_multiple * shard_count
     flat = jax.tree_util.tree_flatten(params)[0]
     assert len(flat) == len(bucket_of_leaf)
     shapes = tuple(tuple(l.shape) for l in flat)
@@ -191,7 +217,12 @@ def build_bucket_layout(
             acc += int(np.prod(shapes[i], dtype=np.int64)) if shapes[i] else 1
         offsets.append(tuple(offs))
         sizes.append(acc)
-        padded.append(-(-acc // pad_multiple) * pad_multiple if acc else 0)
+        # sharded layouts allocate one unit even for an empty bucket so
+        # every shard span is a non-empty kernel / collective operand
+        if acc:
+            padded.append(-(-acc // unit) * unit)
+        else:
+            padded.append(unit if shard_count > 1 else 0)
     return BucketLayout(
         bucket_of_leaf=tuple(bucket_of_leaf),
         n_buckets=n_buckets,
@@ -200,6 +231,7 @@ def build_bucket_layout(
         sizes=tuple(sizes),
         shapes=shapes,
         padded_sizes=tuple(padded),
+        shards=shard_count,
     )
 
 

@@ -130,6 +130,16 @@ def _fused_metrics(loss, parts, phase: PhaseSpec, dp_axes, n_dp: int):
     }
 
 
+def _cast_compute(params, compute_dtype):
+    """Mixed-precision boundary of the flat engines: the f32 master
+    buffers are cast to the compute dtype at the static slice/reshape
+    views, so the forward/backward runs in (e.g.) bf16 while the
+    optimizer state stays full-precision (DESIGN.md §8)."""
+    if compute_dtype is None or compute_dtype == jnp.float32:
+        return params
+    return jax.tree.map(lambda x: x.astype(compute_dtype), params)
+
+
 # ---------------------------------------------------------------------------
 # Fused DeFT phase body
 # ---------------------------------------------------------------------------
@@ -228,6 +238,7 @@ def _deft_body_flat(
     loss_chunk: int = 0,
     unroll: bool = False,
     update_impl: Optional[str] = None,
+    compute_dtype=None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase with params and optimizer moments resident as
     per-bucket flat f32 buffers (DESIGN.md §8).
@@ -245,6 +256,7 @@ def _deft_body_flat(
     params = jax.tree_util.tree_unflatten(
         treedef, unflatten_buckets(layout, pbuf)
     )
+    params = _cast_compute(params, compute_dtype)
     with logical_rules(rules):
         (loss, parts), grads = jax.value_and_grad(
             lambda p: loss_fn(p, cfg, batch, remat=remat,
@@ -293,6 +305,170 @@ def _deft_body_flat(
 
 
 # ---------------------------------------------------------------------------
+# Sharded flat-resident DeFT phase body (FSDP/RS engine, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def _deft_body_flat_rs(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    segments: BucketSegments,
+    treedef,
+    dp_axes: Tuple[str, ...],
+    shard_axis: str,
+    dp_sizes: Dict[str, int],
+    rules: Dict,
+    remat: bool,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+    update_impl: Optional[str] = None,
+    compute_dtype=None,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One DeFT phase with params and optimizer moments SHARDED over
+    ``shard_axis``: each device holds one contiguous 1/N span of every
+    flat bucket buffer (``layout.shard_sizes``), ZeRO-style.
+
+    * the forward all-gathers the updated param shards into full flat
+      buffers and reads the tree through the usual static views;
+    * scheduled syncs are hierarchical by construction — reduce-scatter
+      over ``shard_axis`` into shard-local buffers, all-reduce over the
+      outer (pod/DCN) axes, all-gather back ONLY when the synced buffer
+      must be stored full (a later phase consumes it).  A bucket synced
+      and consumed in the same phase feeds its shard-local reduction
+      straight to the update kernel with no trailing all-gather;
+    * the fused bucket-update kernels run on the shard-local p/m/v spans
+      (segment maps sliced per shard, clip norm psum'd across shards),
+      so optimizer state stays 1/N-resident for the whole run.
+
+    ``cur``/``fut`` stay full-length per-device accumulators: an
+    unsynchronized generation holds contributions to EVERY span, which a
+    later reduce-scatter folds into the owning shard.
+    """
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= dp_sizes[a]
+    outer_axes = tuple(a for a in dp_axes if a != shard_axis)
+    shard_id = jax.lax.axis_index(shard_axis)
+    spans = layout.shard_sizes
+
+    pbuf_sh, opt = state["pbuf"], state["opt"]
+    # ZeRO forward: re-materialize full param buffers from the shards.
+    # Mixed precision casts each span down BEFORE the gather — the cast
+    # is elementwise so the params are bit-identical, and the param
+    # all-gather (the engine's dominant per-phase comm term) moves half
+    # the bytes in bf16 instead of shipping f32 and casting after.
+    if compute_dtype is not None and compute_dtype != jnp.float32:
+        gather_src = [s.astype(compute_dtype) for s in pbuf_sh]
+    else:
+        gather_src = pbuf_sh
+    pbuf = [
+        jax.lax.all_gather(s, shard_axis, axis=0, tiled=True)
+        for s in gather_src
+    ]
+    params = jax.tree_util.tree_unflatten(
+        treedef, unflatten_buckets(layout, pbuf)
+    )
+    with logical_rules(rules):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat,
+                              loss_chunk=loss_chunk, unroll=unroll),
+            has_aux=True,
+        )(params)
+
+    g_flat = flatten_buckets(layout, jax.tree_util.tree_leaves(grads))
+    cur = [c[0] for c in state["cur"]]
+    fut = [f[0] for f in state["fut"]]
+
+    def rs_shard(x: jax.Array) -> jax.Array:
+        """Shard-local half of the hierarchical sync: reduce-scatter over
+        the fast shard axis, all-reduce across the outer axes."""
+        y = jax.lax.psum_scatter(
+            x, shard_axis, scatter_dimension=0, tiled=True
+        )
+        if outer_axes:
+            y = jax.lax.psum(y, outer_axes)
+        return y
+
+    def gather(y: jax.Array) -> jax.Array:
+        return jax.lax.all_gather(y, shard_axis, axis=0, tiled=True)
+
+    def slice_shard(x: jax.Array, b: int) -> jax.Array:
+        """This device's span of an already-summed full buffer."""
+        return jax.lax.dynamic_slice(x, (shard_id * spans[b],), (spans[b],))
+
+    # --- routing: same generation bookkeeping as _route_and_sync, but
+    # the shard-local reduction is kept alongside so the update path can
+    # consume it without paying the all-gather --------------------------
+    consumed_new = phase.do_update and phase.update_source == "new"
+    consumed_cur = phase.do_update and phase.update_source == "cur"
+    nb = layout.n_buckets
+    gen_sh: List[Optional[jax.Array]] = [None] * nb
+    cur_sh: List[Optional[jax.Array]] = [None] * nb
+    if phase.rotate:
+        gen_pre = [g + f for g, f in zip(g_flat, fut)]
+        gen = []
+        for b, x in enumerate(gen_pre):
+            if phase.route_new[b] == "sync":
+                gen_sh[b] = rs_shard(x)
+                # stored full only when this generation survives the
+                # phase (it becomes new_cur); a consumed one stays 1/N
+                gen.append(x if consumed_new else gather(gen_sh[b]))
+            else:
+                gen.append(x)
+        new_fut = [jnp.zeros_like(f) for f in fut]
+    else:
+        gen = None
+        new_fut = [f + g for f, g in zip(fut, g_flat)]
+    cur_synced = []
+    for b, c in enumerate(cur):
+        if phase.sync_cur[b]:
+            cur_sh[b] = rs_shard(c)
+            cur_synced.append(c if consumed_cur else gather(cur_sh[b]))
+        else:
+            cur_synced.append(c)
+
+    if phase.do_update:
+        src = cur_synced if consumed_cur else gen
+        src_shards = cur_sh if consumed_cur else gen_sh
+        # shard-local merged gradient: the fresh reduce-scatter result
+        # where this phase synced the bucket, else this device's span of
+        # the stored (already-summed) accumulator
+        src_sh = [
+            src_shards[b] if src_shards[b] is not None
+            else slice_shard(src[b], b)
+            for b in range(nb)
+        ]
+        scale = 1.0 / (n_dp * phase.update_k)
+        pbuf_sh, opt, _ = apply_bucket_updates(
+            opt_spec, segments, pbuf_sh, src_sh, opt,
+            grad_scale=scale, zero_grads=False, impl=update_impl,
+            shard_id=shard_id,
+            norm_psum=lambda t: jax.lax.psum(t, shard_axis),
+        )
+        pbuf_sh = list(pbuf_sh)
+        if consumed_cur and gen is not None:
+            new_cur = gen
+        else:
+            new_cur = [jnp.zeros_like(c) for c in cur_synced]
+    elif phase.rotate:
+        new_cur = gen
+    else:
+        new_cur = cur_synced
+
+    metrics = _fused_metrics(loss, parts, phase, dp_axes, n_dp)
+    new_state = {
+        "pbuf": tuple(pbuf_sh),
+        "opt": opt,
+        "cur": tuple(c[None] for c in new_cur),
+        "fut": tuple(f[None] for f in new_fut),
+    }
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
 # shard_map wrappers (fused variants of steps.deft_phase_step / _rs_)
 # ---------------------------------------------------------------------------
 # steps._state_specs is layout-agnostic (params/opt replicated, cur/fut
@@ -315,6 +491,24 @@ def _flat_state_specs(state: TrainState, dp_axes: Tuple[str, ...]):
         {"cur": state["cur"], "fut": state["fut"]},
     )
     return {**rep, **acc}
+
+
+def _flat_rs_state_specs(
+    state: TrainState, dp_axes: Tuple[str, ...], shard_axis: str
+):
+    """Manual-axis specs for the SHARDED flat-resident state: param and
+    moment buffers split over the shard axis (each device holds one
+    contiguous span), the step counter replicated, accumulators split on
+    their leading device axis as usual."""
+    shard = jax.tree.map(
+        lambda x: P() if x.ndim == 0 else P(shard_axis),
+        {"pbuf": state["pbuf"], "opt": state["opt"]},
+    )
+    acc = jax.tree.map(
+        lambda _: P(dp_axes if len(dp_axes) > 1 else dp_axes[0]),
+        {"cur": state["cur"], "fut": state["fut"]},
+    )
+    return {**shard, **acc}
 
 
 def _shard_phase(body, specs_fn, state, batch, mesh, dp_axes):
@@ -347,6 +541,7 @@ def deft_phase_step_flat(
     loss_chunk: int = 0,
     unroll: bool = False,
     update_impl: Optional[str] = None,
+    compute_dtype=None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Flat-resident DeFT phase with explicit DP (params replicated)."""
     dp_axes = ("pod", "data") if multi_pod else ("data",)
@@ -365,8 +560,67 @@ def deft_phase_step_flat(
         loss_chunk=loss_chunk,
         unroll=unroll,
         update_impl=update_impl,
+        compute_dtype=compute_dtype,
     )
     return _shard_phase(body, _flat_state_specs, state, batch, mesh, dp_axes)
+
+
+def deft_rs_phase_step_flat(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ArchConfig,
+    opt_spec: OptimizerSpec,
+    phase: PhaseSpec,
+    layout: BucketLayout,
+    segments: BucketSegments,
+    treedef,
+    mesh,
+    remat: bool = True,
+    loss_chunk: int = 0,
+    unroll: bool = False,
+    update_impl: Optional[str] = None,
+    compute_dtype=None,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """Sharded flat-resident DeFT phase (the FSDP/RS engine): manual over
+    every DP axis, param/moment buffers split 1/N over the innermost
+    ('data') axis, hierarchical RS -> pod all-reduce -> AG syncs.
+
+    Unlike the tree-state RS path (manual over 'pod' only, FSDP left to
+    XLA), the whole DP hierarchy is explicit here, so the engine also
+    runs on single-pod meshes — 'pod' is simply absent from the sync.
+
+    Old-jaxlib caveat (composes with DESIGN.md §6): the tiled
+    psum_scatter/all_gather chain partitions correctly inside a
+    partial-manual region only when the auto (model) axis is size 1 on
+    jaxlib < 0.5; real TP + this engine needs jax >= 0.5 — the same
+    constraint the tree RS path already has.
+    """
+    shard_axis = "data"
+    assert shard_axis in mesh.axis_names, "sharded flat engine needs 'data'"
+    dp_axes = (
+        ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    )
+    body = functools.partial(
+        _deft_body_flat_rs,
+        cfg=cfg,
+        opt_spec=opt_spec,
+        phase=phase,
+        layout=layout,
+        segments=segments,
+        treedef=treedef,
+        dp_axes=dp_axes,
+        shard_axis=shard_axis,
+        dp_sizes=_dp_sizes(mesh, dp_axes),
+        rules=rules_deft_manual_dp(),
+        remat=remat,
+        loss_chunk=loss_chunk,
+        unroll=unroll,
+        update_impl=update_impl,
+        compute_dtype=compute_dtype,
+    )
+    specs_fn = lambda s, axes: _flat_rs_state_specs(s, axes, shard_axis)
+    return _shard_phase(body, specs_fn, state, batch, mesh, dp_axes)
 
 
 def deft_phase_step_fused(
@@ -439,7 +693,11 @@ def deft_rs_phase_step_fused(
 def phase_collectives(phase: PhaseSpec) -> Dict[str, int]:
     """Collectives one fused phase issues, by construction: one primary
     psum per primary-synced bucket, one reduce-scatter chain per
-    secondary-synced bucket, plus the single fused metrics psum."""
+    secondary-synced bucket, plus the single fused metrics psum.
+
+    On the sharded flat engine every sync is one hierarchical chain
+    (these counts still bound the per-bucket syncs), plus one param
+    all-gather per bucket for the ZeRO forward — see DESIGN.md §8."""
     n = len(phase.route_new)
     synced = [
         (phase.route_new[b] == "sync" and phase.rotate) or phase.sync_cur[b]
@@ -531,6 +789,7 @@ class DeftRuntime:
         donate: bool = True,
         flat_state: Optional[bool] = None,
         update_impl: Optional[str] = None,
+        compute_dtype=None,
     ):
         self.cfg = cfg
         self.opt_spec = opt_spec
@@ -542,19 +801,19 @@ class DeftRuntime:
         self._remat = remat
         self._loss_chunk = loss_chunk
         self._unroll = unroll
-        # flat-resident state (DESIGN.md §8): default everywhere except
-        # the FSDP/RS path, whose params must stay auto-shardable as
-        # trees over the intra-pod 'data' axis — replicated flat master
-        # buffers would defeat FSDP (and OOM the archs that need it)
-        self.flat_state = (not fsdp) if flat_state is None else flat_state
-        if self.flat_state and fsdp:
-            raise ValueError(
-                "flat_state is unsupported on the FSDP/RS path: the flat "
-                "param/moment buffers are replicated over DP (DESIGN.md §8)"
-            )
+        # flat-resident state (DESIGN.md §8): the default everywhere.
+        # On the FSDP/RS path the flat engine SHARDS the param/moment
+        # buffers 1/N over 'data' (shard-aware BucketLayout) instead of
+        # replicating them, so the memory-bound archs keep their ZeRO
+        # residency and still get the fused bucket-update kernels.
+        self.flat_state = True if flat_state is None else flat_state
         self.update_impl = update_impl
+        # mixed precision (flat engines only): forward/backward in
+        # compute_dtype against the f32 master buffers
+        self.compute_dtype = compute_dtype
         self._treedef = None
         self._segments: Optional[BucketSegments] = None
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
         if self.flat_state:
             params_abs = jax.eval_shape(
                 lambda: init_params(jax.random.PRNGKey(0), cfg)
@@ -564,11 +823,27 @@ class DeftRuntime:
                 "BucketLayout does not match this config's parameter tree"
             )
             self._segments = build_segments(layout, opt_spec)
+        if self.flat_state and fsdp:
+            n_shards = int(shape["data"])
+            if layout.shards != n_shards:
+                raise ValueError(
+                    f"sharded flat engine: BucketLayout was built with "
+                    f"shard_count={layout.shards} but the mesh 'data' axis "
+                    f"is {n_shards}-way — build the layout with "
+                    f"build_bucket_layout(..., shard_count={n_shards})"
+                )
         if fsdp:
-            self.dp_axes: Tuple[str, ...] = ("pod",)
+            # tree state: manual over 'pod' only (FSDP left to XLA);
+            # sharded flat state: the whole DP hierarchy is explicit
+            if self.flat_state:
+                self.dp_axes: Tuple[str, ...] = (
+                    ("pod", "data") if "pod" in mesh.axis_names
+                    else ("data",)
+                )
+            else:
+                self.dp_axes = ("pod",)
         else:
             self.dp_axes = ("pod", "data") if multi_pod else ("data",)
-        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
         self.accum_devices = 1
         for a in self.dp_axes:
             self.accum_devices *= int(shape[a])
@@ -589,8 +864,11 @@ class DeftRuntime:
 
     # ---- schedule installation ------------------------------------------
     def _make_jitted(self, phase: PhaseSpec) -> Callable:
-        if self.flat_state:        # never fsdp (rejected in __init__)
-            step_impl = deft_phase_step_flat
+        if self.flat_state:
+            step_impl = (
+                deft_rs_phase_step_flat if self.fsdp
+                else deft_phase_step_flat
+            )
         else:
             step_impl = (
                 deft_rs_phase_step_fused if self.fsdp
@@ -611,6 +889,7 @@ class DeftRuntime:
                 segments=self._segments,
                 treedef=self._treedef,
                 update_impl=self.update_impl,
+                compute_dtype=self.compute_dtype,
             )
         if not self.fsdp:
             kw["multi_pod"] = self.multi_pod
@@ -687,14 +966,27 @@ class DeftRuntime:
         Flat-state runtimes return ``{pbuf, opt, cur, fut}`` — params
         and moments as per-bucket flat f32 buffers (the master copy; see
         :meth:`params_tree` / :meth:`state_to_tree` for the checkpoint /
-        eval boundary)."""
+        eval boundary).  On the sharded FSDP/RS engine the buffers are
+        committed split over 'data' (each device holds its span), so
+        optimizer state is 1/N-resident from step 0.
+
+        A non-f32 ``dtype`` on a flat runtime selects the *initialization
+        rounding* of the mixed-precision path: params are drawn at
+        ``dtype`` (matching the tree-path init bit-for-bit) and promoted
+        into the f32 master; the runtime must have been built with
+        ``compute_dtype=dtype`` so the forward casts back down at the
+        buffer views."""
         from jax.sharding import NamedSharding
 
-        if self.flat_state and dtype != jnp.float32:
+        if self.flat_state and dtype != jnp.float32 \
+                and dtype != self.compute_dtype:
             raise ValueError(
-                f"flat_state keeps an f32 master copy; dtype={dtype} would "
-                f"be silently promoted — use flat_state=False for non-f32 "
-                f"resident params (DESIGN.md §8)"
+                f"flat_state keeps an f32 master copy; init dtype={dtype} "
+                f"needs the runtime built with compute_dtype={dtype} so "
+                f"the forward runs at that precision (got "
+                f"compute_dtype={self.compute_dtype}) — or use "
+                f"flat_state=False for non-f32 resident params "
+                f"(DESIGN.md §8)"
             )
         params = init_params(key, self.cfg, dtype=dtype)
         dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
@@ -702,14 +994,21 @@ class DeftRuntime:
         split = NamedSharding(self.mesh, P(dp))
         acc = init_fused_accumulators(self.layout, self.accum_devices)
         if self.flat_state:
-            # flat f32 master copy — one buffer per bucket
+            # flat f32 master copy — one buffer per bucket (flatten
+            # promotes a low-precision init to f32)
             pbuf = tuple(
                 flatten_buckets(self.layout, jax.tree_util.tree_leaves(params))
             )
             opt = init_flat_opt_state(self.opt_spec, self.layout.buf_sizes)
+            # sharded engine: commit buffers split over 'data' so every
+            # device materializes only its 1/N span
+            buf = NamedSharding(self.mesh, P("data")) if self.fsdp else rep
+            opt_shardings = jax.tree.map(
+                lambda x: rep if x.ndim == 0 else buf, opt
+            )
             return {
-                "pbuf": jax.device_put(pbuf, rep),
-                "opt": jax.device_put(opt, rep),
+                "pbuf": jax.device_put(pbuf, buf),
+                "opt": jax.tree.map(jax.device_put, opt, opt_shardings),
                 "cur": jax.device_put(acc["cur"], split),
                 "fut": jax.device_put(acc["fut"], split),
             }
@@ -914,6 +1213,12 @@ class DeftRuntime:
             "unique_phases": self.n_unique_phases,
             "cached_phases": self.n_cached_phases,
             "flat_state": self.flat_state,
+            "sharded_state": bool(self.flat_state and self.fsdp),
+            "shards": self.layout.shards,
+            "compute_dtype": (
+                jnp.dtype(self.compute_dtype).name
+                if self.compute_dtype is not None else "float32"
+            ),
             "update_impl": (
                 (self.update_impl or default_bucket_update_impl())
                 if self.flat_state else "per-leaf"

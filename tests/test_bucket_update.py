@@ -408,6 +408,12 @@ def test_bench_update_path_entry():
     assert up["paper_leafcount"]["speedup_flat_vs_per_leaf"] > 0.9, up
     assert up["paper_leafcount"]["n_leaves"] >= 100
     assert up["smoke_config"]["apply_ms_flat"] > 0
+    # the sharded engine's ISOLATED floor — same contract on the RS
+    # path: the whole-phase scenario numbers (even interleaved) stay CPU
+    # load-noisy, so the gate reads only this signal
+    us = data["fsdp_flat"]["update_path_sharded"]
+    assert us["speedup_flat_vs_per_leaf"] > 0.9, us
+    assert us["n_leaves"] >= 100 and us["shard_count"] > 1
 
 
 def test_flat_runtime_checkpoint_roundtrip(single_mesh):

@@ -164,3 +164,43 @@ def test_knapsack_all_fit():
     times = [0.1, 0.2, 0.3]
     sel = naive_knapsack(times, 1.0)
     assert sorted(sel) == [0, 1, 2]
+
+
+@given(times_strategy, cap_strategy, cap_strategy)
+@settings(max_examples=80, deadline=None)
+def test_two_link_refinement_never_regresses_greedy(times, cap_p, cap_s):
+    """The DP refinement must only ever help: its evicted greedy picks
+    are re-offered to residual secondary capacity and the refined split
+    is adopted on TOTAL coverage — so the two-link total covered time is
+    >= the plain greedy's on every instance (regression: refinement once
+    compared primary load only and silently dropped evicted items)."""
+    greedy = greedy_multi_knapsack(times, [cap_p, cap_s])
+    cov_greedy = sum(times[i] for k in greedy for i in greedy[k])
+    prim, sec = knapsack_two_link(times, cap_p, cap_s)
+    cov_refined = sum(times[i] for i in prim) + sum(times[i] for i in sec)
+    assert cov_refined >= cov_greedy - 1e-9
+    # feasibility + disjointness must survive the re-offer step
+    assert not set(prim) & set(sec)
+    assert sum(times[i] for i in prim) <= cap_p * 1.001 + 1e-3
+    assert sum(times[i] for i in sec) <= cap_s + 1e-9
+
+
+def test_two_link_refinement_reoffers_evicted_items():
+    """Deterministic instance where the old refinement lost coverage:
+    greedy puts items {3, 1} on the primary link and {0} on the
+    secondary; the exact DP re-solve prefers {2, 4} (255.2s > 227.3s),
+    evicting BOTH greedy primary picks.  Item 1 (50.2s) still fits the
+    secondary link's 113.4s residual — the old code silently dropped it
+    (total 430.8s); the re-offer must place it (total 481.0s)."""
+    times = [175.604, 50.174, 126.127, 177.076, 129.057]
+    cap_p, cap_s = 273.143, 289.04
+    prim, sec = knapsack_two_link(times, cap_p, cap_s)
+    assert prim == [2, 4]
+    assert sec == [0, 1], "evicted item 1 must ride the secondary residual"
+    covered = sum(times[i] for i in prim) + sum(times[i] for i in sec)
+    assert covered == pytest.approx(480.962)
+    greedy = greedy_multi_knapsack(times, [cap_p, cap_s])
+    cov_greedy = sum(times[i] for k in greedy for i in greedy[k])
+    assert covered > cov_greedy       # strictly better than plain greedy
+    assert sum(times[i] for i in prim) <= cap_p * 1.001
+    assert sum(times[i] for i in sec) <= cap_s

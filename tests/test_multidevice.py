@@ -106,14 +106,20 @@ if _v >= (0, 5):
     t_rs = BucketTimes(t_rs.fwd, t_rs.bwd,
                        tuple(c * 50 for c in t_rs.comm))
     sched_rs = solve_schedule(t_rs, SchedulerConfig())
-    lay_rs = build_bucket_layout(probe_rs["params"], bo_rs, nb_rs)
+    # sharded flat engine (the fsdp default): layout split into 2 spans
+    # to match the mesh's 2-way 'data' axis
+    lay_rs = build_bucket_layout(probe_rs["params"], bo_rs, nb_rs,
+                                 shard_count=2)
     with mesh_rs:
         rt_rs = DeftRuntime(cfg_rs, opt, sched_rs, lay_rs, mesh_rs, fsdp=True)
+        assert rt_rs.flat_state, "fsdp now defaults to the sharded engine"
         state_rs = rt_rs.init_state(jax.random.PRNGKey(5))
         for step in range(min(sched_rs.period + 1, 4)):
             b_rs = make_batch(cfg_rs, 0, step, 8, 32)
             state_rs, m_rs = rt_rs.step(step, state_rs, b_rs)
             assert jnp.isfinite(m_rs["loss"])
+    # the tree-state RS path (flat_state=False) stays available and is
+    # exercised against the flat engine in test_flat_fsdp.py
 else:
     print("RS section skipped: jaxlib SPMD partial-manual CHECK bug "
           f"(jax {jax.__version__})")
