@@ -72,6 +72,19 @@ _FSDP_FLAT_SCENARIO = {
     },
 }
 
+_REPACK = {
+    "n_buckets_a": None,
+    "n_buckets_b": None,
+    "total_elems": None,
+    "moved_elems_a_to_b": None,
+    "repack_ms_a_to_b": None,
+    "repack_ms_b_to_a": None,
+    "update_phase_apply_ms": None,
+    "repack_over_update_apply": None,
+    "step_ms_smoke": None,
+    "amortized_overhead_at_replan_every_100_steps": None,
+}
+
 SCHEMAS: Dict[str, Dict[str, Any]] = {
     "BENCH_runtime.json": {
         "solver": {
@@ -82,6 +95,7 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
             "cache_hits": None,
             "cache_misses": None,
         },
+        "repack": _REPACK,
         "update_path": {
             "smoke_config": _UPDATE_PATH_GRANULARITY,
             "paper_leafcount": _UPDATE_PATH_GRANULARITY,

@@ -483,6 +483,106 @@ def _bench_update_path() -> dict:
     return {"smoke_config": smoke, "paper_leafcount": paper}
 
 
+def _bench_repack(step_s_smoke: float) -> dict:
+    """Cycle-boundary re-pack cost (DESIGN.md §9): the runtime's own
+    jitted LayoutTransition pass between two partitions of the smoke
+    model, alternated A->B->A (donated state stays live), min-of-reps —
+    against the isolated flat update apply (the cheapest thing a phase
+    does) and the smoke scenario's whole-step time (the amortization
+    denominator: a repack happens once per adopted repartition, i.e.
+    every O(100) steps at realistic replan cadence)."""
+    import jax
+
+    import repro  # noqa: F401
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core.deft import solve_schedule
+    from repro.core.scheduler import SchedulerConfig
+    from repro.kernels.bucket_update import (
+        apply_bucket_updates,
+        build_segments,
+        init_flat_opt_state,
+    )
+    from repro.optim.optimizers import adamw
+    from repro.train import (
+        DeftRuntime,
+        assign_buckets,
+        build_bucket_layout,
+        build_layout_transition,
+        flatten_buckets,
+        init_train_state,
+        leaf_bucket_times,
+    )
+    from repro.core.profiler import HardwareModel
+
+    cfg = reduce_for_smoke(get_config("qwen3-4b"))
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    probe = init_train_state(key, cfg, opt)
+    bo_a, nb_a = assign_buckets(probe["params"], cfg,
+                                partition_elems=150_000)
+    bo_b, nb_b = assign_buckets(probe["params"], cfg,
+                                partition_elems=400_000)
+    lay_a = build_bucket_layout(probe["params"], bo_a, nb_a)
+    lay_b = build_bucket_layout(probe["params"], bo_b, nb_b)
+    tr_ab = build_layout_transition(lay_a, lay_b)
+    tr_ba = build_layout_transition(lay_b, lay_a)
+    times = leaf_bucket_times(probe["params"], cfg, bo_a, nb_a,
+                              HardwareModel(dp_degree=2), 32, 4)
+    sched = solve_schedule(times, SchedulerConfig())
+    with mesh:
+        # construction only jits (no phase compiles): repack_state is
+        # the runtime's real staged-swap executable
+        rt = DeftRuntime(cfg, opt, sched, lay_a, mesh)
+        state = rt.init_state(key)
+        reps = 7
+        best_ab = best_ba = float("inf")
+        for _ in range(1 + reps):                 # first rep compiles
+            t0 = time.perf_counter()
+            state = rt.repack_state(state, tr_ab)
+            jax.block_until_ready(jax.tree_util.tree_leaves(state))
+            ab = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            state = rt.repack_state(state, tr_ba)
+            jax.block_until_ready(jax.tree_util.tree_leaves(state))
+            ba = time.perf_counter() - t0
+            if _ > 0:
+                best_ab, best_ba = min(best_ab, ab), min(best_ba, ba)
+
+        # isolated flat update apply under layout A (same harness as
+        # _bench_update_path): the per-phase work a repack competes with
+        grads = jax.tree.map(lambda p: p * 0.01, probe["params"])
+        seg = build_segments(lay_a, opt)
+        pbuf = tuple(flatten_buckets(lay_a, jax.tree.leaves(probe["params"])))
+        gbuf = tuple(flatten_buckets(lay_a, jax.tree.leaves(grads)))
+        opt_f = init_flat_opt_state(opt, lay_a.buf_sizes)
+        f_flat = jax.jit(lambda p, g, o: apply_bucket_updates(
+            opt, seg, p, g, o, grad_scale=0.1)[:2])
+        jax.block_until_ready(f_flat(pbuf, gbuf, opt_f))
+        apply_ms = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = f_flat(pbuf, gbuf, opt_f)
+            jax.block_until_ready(out)
+            apply_ms = min(apply_ms, (time.perf_counter() - t0) * 1e3)
+
+    repack_ms = best_ab * 1e3
+    return {
+        "n_buckets_a": nb_a,
+        "n_buckets_b": nb_b,
+        "total_elems": lay_a.total_elems,
+        "moved_elems_a_to_b": tr_ab.moved_elems,
+        "repack_ms_a_to_b": repack_ms,
+        "repack_ms_b_to_a": best_ba * 1e3,
+        "update_phase_apply_ms": apply_ms,
+        "repack_over_update_apply": repack_ms / max(apply_ms, 1e-9),
+        "step_ms_smoke": step_s_smoke * 1e3,
+        "amortized_overhead_at_replan_every_100_steps": (
+            repack_ms / 1e3 / max(100.0 * step_s_smoke, 1e-12)
+        ),
+    }
+
+
 def _bench_solver() -> dict:
     """Planning time of the two-stage Solver over the 96-iteration
     horizon, memoized vs unmemoized, on a paper-scale profile."""
@@ -551,6 +651,12 @@ def run() -> None:
             )
         results[name] = json.loads(proc.stdout.splitlines()[-1])
 
+    # repack rides in-process AFTER the scenarios: the smoke scenario's
+    # steady-state step time is its amortization denominator
+    results["repack"] = _bench_repack(
+        1.0 / results["smoke"]["steps_per_s_fused"]
+    )
+
     tmp = _OUT + ".tmp"
     json.dump(results, open(tmp, "w"), indent=1)
     os.replace(tmp, _OUT)
@@ -595,6 +701,13 @@ def run() -> None:
               f"{u['apply_ms_per_leaf']:.2f}ms "
               f"({u['speedup_flat_vs_per_leaf']:.2f}x, "
               f"{u['n_leaves']} leaves -> {u['n_buckets']} buckets)")
+    rp = results["repack"]
+    print(f"repack_us,{rp['repack_ms_a_to_b'] * 1e3:.0f},"
+          f"{rp['n_buckets_a']}->{rp['n_buckets_b']} buckets "
+          f"{rp['repack_ms_a_to_b']:.1f}ms "
+          f"(vs update apply {rp['update_phase_apply_ms']:.1f}ms; "
+          f"{rp['amortized_overhead_at_replan_every_100_steps'] * 100:.2f}% "
+          f"overhead at a replan every 100 steps)")
     s = results["solver"]
     print(f"solver_plan_us_memoized,{s['plan_s_memoized'] * 1e6:.0f},"
           f"{s['speedup']:.1f}x vs unmemoized "

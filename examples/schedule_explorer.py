@@ -74,6 +74,102 @@ def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
               f"{sum(1 for e in ctrl.events if e.changed)} hot-swap(s)")
 
 
+def explore_repartition(arch: str, drop_step: int, drop_scale: float,
+                        steps: int) -> None:
+    """Replay the control plane WITH the candidate-partition path on the
+    smoke-reduced config: partition-changing replans print old/new
+    n_buckets + shard count + the Preserver verdict of the winner, and
+    each adopted repartition is followed by a REAL timed re-pack of a
+    smoke-scale flat state between the two layouts (the cycle-boundary
+    cost the runtime would pay — DESIGN.md §9)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.adapt import (
+        RepartitionConfig,
+        Repartitioner,
+        candidate_solve_table,
+    )
+    from repro.configs import reduce_for_smoke
+    from repro.core.deft import feedback_solve
+    from repro.core.preserver import WalkParams
+    from repro.core.profiler import HardwareModel
+    from repro.models.model import init_params
+    from repro.train import (
+        build_bucket_layout,
+        build_layout_transition,
+        build_leaf_time_model,
+        repack_buffers,
+    )
+
+    cfg = reduce_for_smoke(get_config(arch))
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    model = build_leaf_time_model(params, cfg, HardwareModel(dp_degree=16),
+                                  64, 1)
+    pe = 100_000
+    bucket_of, nb = model.partition(pe)
+    model = model.with_coverage_rate(bucket_of, nb, 1.8)
+    times = model.bucket_times(bucket_of, nb)
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    schedule, verdict, scfg, _ = feedback_solve(times, walk)
+    rp = Repartitioner(model, RepartitionConfig(base_partition_elems=pe))
+    print(f"\n== adaptive repartitioning ({cfg.name}, smoke scale): "
+          f"bandwidth x1/{drop_scale:.1f} at step {drop_step} ==")
+    print(f"initial partition: {nb} buckets "
+          f"(partition_elems={pe}), period={schedule.period}, "
+          f"CR={times.coverage_rate:.2f}")
+
+    def time_repack(event) -> None:
+        lay_a = build_bucket_layout(params, tuple(ctrl_prev["bucket_of"]),
+                                    ctrl_prev["n_buckets"])
+        lay_b = build_bucket_layout(params, event.partition.bucket_of,
+                                    event.partition.n_buckets)
+        tr = build_layout_transition(lay_a, lay_b)
+        # a full flat-state repack at smoke scale: pbuf/m/v (1-D) and
+        # cur/fut (leading accum axis) in one jitted pass, like the
+        # runtime's staged swap
+        bufs1 = [jnp.zeros((n,), jnp.float32) for n in lay_a.buf_sizes]
+        bufs2 = [jnp.zeros((1, n), jnp.float32) for n in lay_a.buf_sizes]
+        f = jax.jit(lambda p, m, v, c, fz: (
+            repack_buffers(tr, p), repack_buffers(tr, m),
+            repack_buffers(tr, v), repack_buffers(tr, c),
+            repack_buffers(tr, fz),
+        ))
+        out = f(bufs1, bufs1, bufs1, bufs2, bufs2)
+        jax.block_until_ready(out)          # compile outside the timing
+        t0 = time.perf_counter()
+        out = f(bufs1, bufs1, bufs1, bufs2, bufs2)
+        jax.block_until_ready(out)
+        ms = (time.perf_counter() - t0) * 1e3
+        print(f"    repack {lay_a.n_buckets}->{lay_b.n_buckets} buckets "
+              f"(1/{lay_a.shards} -> 1/{lay_b.shards} shards, "
+              f"{tr.moved_elems:,} elems moved): {ms:.1f} ms")
+
+    ctrl_prev = {"bucket_of": bucket_of, "n_buckets": nb}
+
+    def on_event(e):
+        print(e.describe())
+        if e.candidate_solves:
+            print(candidate_solve_table(e.candidate_solves))
+        if e.partition_changed:
+            time_repack(e)
+            ctrl_prev["bucket_of"] = e.partition.bucket_of
+            ctrl_prev["n_buckets"] = e.partition.n_buckets
+
+    src = SyntheticTelemetrySource(
+        times, BandwidthDrop(step=drop_step, comm_scale=drop_scale)
+    )
+    ctrl = AdaptiveController(times, schedule, scfg, walk=walk,
+                              repartitioner=rp, bucket_of=bucket_of)
+    run_control_loop(ctrl, src, steps, on_event=on_event,
+                     run_base_fn=lambda e: rp.base_times_for(e.partition))
+    reparts = ctrl.stats()["repartitions"]
+    print(f"{len(ctrl.events)} replan event(s), {reparts} "
+          f"partition-changing")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
@@ -82,6 +178,10 @@ def main() -> None:
     ap.add_argument("--adapt", action="store_true",
                     help="also replay the online control plane on a "
                          "synthetic mid-run bandwidth drop")
+    ap.add_argument("--adapt-repartition", action="store_true",
+                    help="with --adapt: the replay also considers "
+                         "candidate bucket partitions and times a real "
+                         "smoke-scale re-pack per adopted change")
     ap.add_argument("--drop-step", type=int, default=40)
     ap.add_argument("--drop-scale", type=float, default=3.0)
     ap.add_argument("--adapt-steps", type=int, default=120)
@@ -116,6 +216,9 @@ def main() -> None:
 
     if args.adapt:
         explore_adapt(t, args.drop_step, args.drop_scale, args.adapt_steps)
+        if args.adapt_repartition:
+            explore_repartition(args.arch, args.drop_step,
+                                args.drop_scale, args.adapt_steps)
 
 
 if __name__ == "__main__":

@@ -56,6 +56,10 @@ def main() -> None:
     ap.add_argument("--adapt", action="store_true",
                     help="attach the online control plane to the DeFT run "
                          "(real measured wall times feed drift detection)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="drive the SHARDED flat engine end-to-end: params "
+                         "and optimizer moments resident 1/N over the data "
+                         "axis (ZeRO), DDP baseline sharded to match")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -108,12 +112,21 @@ def main() -> None:
     # fused phases / donated DDP step), so params and optimizer state
     # update in place; the two states must NOT share arrays (a donated
     # buffer is consumed), hence separate init_state/init_opt_state calls.
-    layout = build_bucket_layout(state_d["params"], bucket_of, nb)
-    runtime = DeftRuntime(cfg, opt, schedule, layout, mesh)
+    # --fsdp swaps in the SHARDED flat engine (ROADMAP satellite): the
+    # layout pads each bucket into dp equal lane-aligned spans and the
+    # runtime keeps params/moments 1/dp-resident, gather-skip on.
+    layout = build_bucket_layout(state_d["params"], bucket_of, nb,
+                                 shard_count=dp if args.fsdp else 1)
+    runtime = DeftRuntime(cfg, opt, schedule, layout, mesh,
+                          fsdp=args.fsdp)
+    if args.fsdp:
+        st = runtime.stats()
+        print(f"fsdp: sharded flat engine, params/moments 1/{st['shards']} "
+              f"resident over 'data', gather_skip={st['gather_skip']}")
     state_r = {"params": state_d["params"],
                "opt": init_opt_state(opt, state_d["params"])}
     state_d = runtime.init_state(key)
-    ddp_fn = make_ddp_step(cfg, opt)
+    ddp_fn = make_ddp_step(cfg, opt, fsdp=args.fsdp)
     controller = (
         AdaptiveController(times, schedule, scfg, walk=walk,
                            cfg=AdaptConfig(eta=3e-4))

@@ -15,6 +15,12 @@ from repro.adapt.calibrate import (
     steady_phase_durations,
 )
 from repro.adapt.controller import AdaptConfig, AdaptiveController, ReplanEvent
+from repro.adapt.repartition import (
+    PartitionCandidate,
+    RepartitionConfig,
+    Repartitioner,
+    candidate_solve_table,
+)
 from repro.adapt.scenario import (
     BandwidthDrop,
     SyntheticTelemetrySource,
@@ -27,11 +33,15 @@ __all__ = [
     "AdaptiveController",
     "BandwidthDrop",
     "CalibratedProfile",
+    "PartitionCandidate",
+    "RepartitionConfig",
+    "Repartitioner",
     "ReplanEvent",
     "StepSample",
     "SyntheticTelemetrySource",
     "Telemetry",
     "TelemetryConfig",
+    "candidate_solve_table",
     "calibrate",
     "fit_scales",
     "run_control_loop",

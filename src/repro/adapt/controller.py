@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 from repro.adapt.calibrate import (
     CalibratedProfile,
@@ -38,7 +38,7 @@ from repro.adapt.calibrate import (
 )
 from repro.adapt.telemetry import Telemetry, TelemetryConfig
 from repro.core.bucket import BucketTimes
-from repro.core.deft import feedback_solve
+from repro.core.deft import feedback_solve, feedback_solve_candidates
 from repro.core.preserver import (
     PreserverVerdict,
     WalkParams,
@@ -46,6 +46,9 @@ from repro.core.preserver import (
     estimate_walk_params_from_losses,
 )
 from repro.core.scheduler import DeftSchedule, SchedulerConfig
+
+if TYPE_CHECKING:   # the controller only duck-types the repartitioner
+    from repro.adapt.repartition import PartitionCandidate, Repartitioner
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,13 +92,24 @@ class ReplanEvent:
     times: BucketTimes             # calibrated times the replan consumed
     changed: bool                  # new phases differ from installed ones
     replan_s: float                # wall seconds spent solving
+    # ---- partition-change replans (repartitioner attached) --------------
+    old_n_buckets: int = 0
+    new_n_buckets: int = 0
+    # the adopted candidate when it differs from the installed partition
+    # (None = the replan kept the current partition)
+    partition: Optional["PartitionCandidate"] = None
+    candidate_solves: Tuple = ()   # CandidateSolve table, input order
+
+    @property
+    def partition_changed(self) -> bool:
+        return self.partition is not None
 
     @property
     def coverage_delta(self) -> float:
         return self.new_coverage_rate - self.old_coverage_rate
 
     def describe(self) -> str:
-        return (
+        out = (
             f"step {self.step:5d}  {self.trigger:<14s} "
             f"comp x{self.profile.comp_scale:.2f} "
             f"comm x{self.profile.comm_scale:.2f}  "
@@ -108,6 +122,12 @@ class ReplanEvent:
             f"{'SWAP' if self.changed else 'no-op'} "
             f"({self.replan_s * 1e3:.0f} ms)"
         )
+        if self.partition_changed:
+            out += (
+                f"  REPARTITION {self.old_n_buckets}->"
+                f"{self.new_n_buckets} buckets [{self.partition.tag}]"
+            )
+        return out
 
 
 class AdaptiveController:
@@ -120,6 +140,8 @@ class AdaptiveController:
         scheduler_cfg: SchedulerConfig,
         walk: Optional[WalkParams] = None,
         cfg: Optional[AdaptConfig] = None,
+        repartitioner: Optional["Repartitioner"] = None,
+        bucket_of: Optional[Sequence[int]] = None,
     ):
         self.cfg = cfg or AdaptConfig()
         self.times = times                   # what the installed plan assumed
@@ -128,6 +150,22 @@ class AdaptiveController:
         self.walk = walk or WalkParams(
             s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256
         )
+        # ---- optional repartitioning (DESIGN.md §9) ----------------------
+        # With a repartitioner attached, every replan ALSO considers a
+        # grid of alternative bucket partitions; ``bucket_of`` names the
+        # installed one.  ``times`` must come from the repartitioner's
+        # LeafTimeModel (same partition, same CR rescale) so candidate
+        # times stay commensurable with the calibrated baseline.
+        self.repartitioner = repartitioner
+        self.bucket_of = tuple(bucket_of) if bucket_of is not None else None
+        if repartitioner is not None and self.bucket_of is None:
+            raise ValueError(
+                "repartitioning needs bucket_of (the installed partition)"
+            )
+        # cumulative calibrated drift vs the LeafTimeModel's base times —
+        # candidate partitions are priced at these scales
+        self._cum_comp = 1.0
+        self._cum_comm = 1.0
         self.telemetry = Telemetry(
             schedule.period,
             TelemetryConfig(
@@ -234,22 +272,60 @@ class AdaptiveController:
         walk: WalkParams,
     ) -> ReplanEvent:
         t0 = time.perf_counter()
-        schedule, verdict, scfg, _ = feedback_solve(
-            profile.times,
-            walk,
-            heterogeneous=self.scheduler_cfg.heterogeneous,
-            mu=self.scheduler_cfg.mu,
-            eps=self.cfg.eps,
-            max_retries=self.cfg.max_retries,
-            capacity_growth=self.cfg.capacity_growth,
-        )
+        chosen: Optional["PartitionCandidate"] = None
+        solves: Tuple = ()
+        new_times = profile.times
+        if self.repartitioner is None:
+            schedule, verdict, scfg, _ = feedback_solve(
+                profile.times,
+                walk,
+                heterogeneous=self.scheduler_cfg.heterogeneous,
+                mu=self.scheduler_cfg.mu,
+                eps=self.cfg.eps,
+                max_retries=self.cfg.max_retries,
+                capacity_growth=self.cfg.capacity_growth,
+            )
+        else:
+            # candidate-partition path: the installed partition competes
+            # against the repartitioner's grid, every candidate priced at
+            # the CUMULATIVE calibrated drift and gated by the Preserver
+            cum_comp = self._cum_comp * profile.comp_scale
+            cum_comm = self._cum_comm * profile.comm_scale
+            cands = self.repartitioner.candidates(
+                self.bucket_of, self.times.n
+            )
+            pairs = []
+            for c in cands:
+                if c.tag == "current":
+                    pairs.append((c.tag, profile.times))
+                else:
+                    pairs.append((c.tag, self.repartitioner.times_for(
+                        c, comp_scale=cum_comp, comm_scale=cum_comm
+                    )))
+            best, solves = feedback_solve_candidates(
+                pairs,
+                walk,
+                baseline_tag="current",
+                min_gain=self.repartitioner.cfg.min_gain,
+                heterogeneous=self.scheduler_cfg.heterogeneous,
+                mu=self.scheduler_cfg.mu,
+                eps=self.cfg.eps,
+                max_retries=self.cfg.max_retries,
+                capacity_growth=self.cfg.capacity_growth,
+            )
+            schedule, verdict, scfg = (
+                best.schedule, best.verdict, best.scheduler_cfg
+            )
+            new_times = best.times
+            if best.tag != "current":
+                chosen = next(c for c in cands if c.tag == best.tag)
         replan_s = time.perf_counter() - t0
         event = ReplanEvent(
             step=step,
             trigger=trigger,
             profile=profile,
             old_coverage_rate=self.times.coverage_rate,
-            new_coverage_rate=profile.times.coverage_rate,
+            new_coverage_rate=new_times.coverage_rate,
             old_period=self.schedule.period,
             new_period=schedule.period,
             old_batch_seq=tuple(self.schedule.batch_size_sequence),
@@ -257,9 +333,16 @@ class AdaptiveController:
             verdict=verdict,
             schedule=schedule,
             scheduler_cfg=scfg,
-            times=profile.times,
-            changed=schedule.phases != self.schedule.phases,
+            times=new_times,
+            changed=(
+                chosen is not None
+                or schedule.phases != self.schedule.phases
+            ),
             replan_s=replan_s,
+            old_n_buckets=self.times.n,
+            new_n_buckets=new_times.n,
+            partition=chosen,
+            candidate_solves=solves,
         )
         self.events.append(event)
         self._last_replan_step = step
@@ -271,9 +354,13 @@ class AdaptiveController:
         # warm-up also swallows the old schedule's tail steps that run
         # before the runtime installs the swap at a cycle boundary.
         old_period = self.schedule.period
-        self.times = profile.times
+        self.times = new_times
         self.schedule = schedule
         self.scheduler_cfg = scfg
+        self._cum_comp *= profile.comp_scale
+        self._cum_comm *= profile.comm_scale
+        if chosen is not None:
+            self.bucket_of = chosen.bucket_of
         self.telemetry.rebase(schedule.period, extra_warmup=old_period)
         return event
 
@@ -282,6 +369,9 @@ class AdaptiveController:
         return {
             "replans": len(self.events),
             "swaps_requested": sum(1 for e in self.events if e.changed),
+            "repartitions": sum(
+                1 for e in self.events if e.partition_changed
+            ),
             "triggers": [e.trigger for e in self.events],
             "last_comp_scale": (
                 self.events[-1].profile.comp_scale if self.events else 1.0

@@ -1,0 +1,124 @@
+"""Online repartitioning: candidate bucket partitions for the replanner.
+
+DeFT's third lever is fixing "imbalanced communication/computation times
+of tensors caused by partitioning/fusion strategies": when calibration
+reveals the effective compute/comm ratio moved (a bandwidth drop, an MFU
+mis-estimate), the best *partition* — not just the best schedule over the
+installed partition — may change, the exact failure mode MG-WFBP shows
+for naive merge choices.  This module generates the candidate partitions
+the controller feeds to :func:`repro.core.deft.feedback_solve_candidates`.
+
+Everything here is pure Python off the hot path: a
+:class:`~repro.train.bucketing.LeafTimeModel` (frozen per-leaf timing
+atoms, built once from the parameter tree's shapes) re-aggregates bucket
+times for any greedy partition at a grid of ``partition_elems`` factors,
+scaled by the cumulative calibrated (comp, comm) drift.  The runtime side
+— re-packing the flat state into the chosen partition's
+:class:`BucketLayout` at a cycle boundary — lives in
+``DeftRuntime.prepare_swap(..., layout=...)`` (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.core.bucket import BucketTimes
+from repro.train.bucketing import LeafTimeModel
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionCandidate:
+    """One candidate leaf->bucket partition, in layout-buildable terms."""
+
+    tag: str
+    partition_elems: int
+    bucket_of: Tuple[int, ...]
+    n_buckets: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RepartitionConfig:
+    """Knobs of the candidate generator."""
+
+    base_partition_elems: int
+    # grid of partition_elems multipliers tried around the installed one
+    factors: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0)
+    # relative simulated-iteration-time gain required to switch partitions
+    # (a repack is cheap but not free; near-ties must not thrash)
+    min_gain: float = 0.02
+
+
+class Repartitioner:
+    """Candidate partitions + their calibrated bucket times.
+
+    The controller owns one of these when ``--adapt-repartition`` is on;
+    every replan asks for the current candidate set, solves each through
+    the Preserver-gated feedback loop, and adopts the winner.  Candidates
+    are deduplicated by their ``bucket_of`` assignment (two factors that
+    greedy-fill into the same partition are the same candidate), and the
+    installed partition is always candidate ``"current"``.
+    """
+
+    def __init__(self, model: LeafTimeModel, cfg: RepartitionConfig):
+        self.model = model
+        self.cfg = cfg
+
+    def candidates(
+        self,
+        current_bucket_of: Sequence[int],
+        current_n_buckets: int,
+    ) -> List[PartitionCandidate]:
+        out = [PartitionCandidate(
+            tag="current",
+            partition_elems=self.cfg.base_partition_elems,
+            bucket_of=tuple(current_bucket_of),
+            n_buckets=current_n_buckets,
+        )]
+        seen = {out[0].bucket_of}
+        for f in self.cfg.factors:
+            elems = max(int(self.cfg.base_partition_elems * f), 1)
+            bucket_of, nb = self.model.partition(elems)
+            if bucket_of in seen:
+                continue
+            seen.add(bucket_of)
+            out.append(PartitionCandidate(
+                tag=f"elems-x{f:g}",
+                partition_elems=elems,
+                bucket_of=bucket_of,
+                n_buckets=nb,
+            ))
+        return out
+
+    def times_for(
+        self,
+        cand: PartitionCandidate,
+        *,
+        comp_scale: float = 1.0,
+        comm_scale: float = 1.0,
+    ) -> BucketTimes:
+        """Candidate bucket times under the cumulative calibrated
+        scales (what the world looks like NOW for that partition)."""
+        return self.model.bucket_times(
+            cand.bucket_of, cand.n_buckets,
+            comp_scale=comp_scale, comm_scale=comm_scale,
+        )
+
+    def base_times_for(self, cand: PartitionCandidate) -> BucketTimes:
+        """Candidate bucket times at scale 1 (the pre-drift analytic
+        profile — what synthetic telemetry replays need as run-base)."""
+        return self.model.bucket_times(cand.bucket_of, cand.n_buckets)
+
+
+def candidate_solve_table(solves) -> str:
+    """Human-readable one-line-per-candidate summary of a
+    :func:`feedback_solve_candidates` result (explorer / logs)."""
+    rows = []
+    for s in solves:
+        rows.append(
+            f"    {s.tag:<12s} n={s.times.n:2d} "
+            f"iter={s.iteration_time * 1e3:8.2f}ms "
+            f"period={s.schedule.period} "
+            f"k-seq={s.schedule.batch_size_sequence} "
+            f"preserver={'ok' if s.verdict.ok else 'REJECT'}"
+        )
+    return "\n".join(rows)

@@ -1,3 +1,8 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    restore,
+    save,
+    saved_keys,
+)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "saved_keys"]

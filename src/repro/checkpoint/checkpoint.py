@@ -71,6 +71,15 @@ def restore(directory: str, step: int, like, *, name: str = "ckpt"):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def saved_keys(directory: str, step: int, *, name: str = "ckpt") -> list:
+    """Flattened leaf key paths a checkpoint holds (from its sidecar
+    meta) — lets callers probe for optional leaves (e.g. the runtime's
+    gather cache) without depending on this module's on-disk layout."""
+    base = os.path.join(directory, f"{name}_{step:08d}")
+    with open(base + ".json") as f:
+        return list(json.load(f)["keys"])
+
+
 def latest_step(directory: str, *, name: str = "ckpt") -> Optional[int]:
     if not os.path.isdir(directory):
         return None

@@ -86,6 +86,94 @@ def feedback_solve(
     return schedule, verdict, scfg, retry
 
 
+@dataclasses.dataclass(frozen=True)
+class CandidateSolve:
+    """One partition candidate's pass through the feedback loop."""
+
+    tag: str
+    times: BucketTimes
+    schedule: DeftSchedule
+    verdict: PreserverVerdict
+    scheduler_cfg: SchedulerConfig
+    retries: int
+    iteration_time: float        # simulated steady-state seconds/iteration
+
+
+def feedback_solve_candidates(
+    candidates,
+    walk: WalkParams,
+    *,
+    baseline_tag: Optional[str] = None,
+    min_gain: float = 0.0,
+    sim_iterations: int = 48,
+    heterogeneous: bool = True,
+    mu: float = 1.65,
+    eps: float = 0.01,
+    max_retries: int = 10,
+    capacity_growth: float = 1.2,
+) -> Tuple[CandidateSolve, Tuple[CandidateSolve, ...]]:
+    """The candidate-partition path of the Fig. 7 loop: run
+    :func:`feedback_solve` over SEVERAL bucket partitions of the same
+    model (each a ``(tag, BucketTimes)`` pair), score every candidate by
+    its simulated steady-state iteration time, and pick the winner.
+
+    The Preserver gates partition changes exactly like k-sequence
+    changes: a candidate whose schedule still fails the Preserver after
+    the capacity feedback retries is disqualified (unless it IS the
+    baseline — best-effort semantics match :func:`feedback_solve`).
+    ``min_gain`` adds switch hysteresis: a non-baseline candidate must
+    beat the baseline's iteration time by that relative margin, so a
+    near-tie never pays a state re-pack.
+
+    Returns (winner, all candidate solves in input order).
+    """
+    from repro.core.scheduler import DeftScheduler
+    from repro.core.simulator import simulate_deft
+
+    solves = []
+    for tag, times in candidates:
+        schedule, verdict, scfg, retries = feedback_solve(
+            times,
+            walk,
+            heterogeneous=heterogeneous,
+            mu=mu,
+            eps=eps,
+            max_retries=max_retries,
+            capacity_growth=capacity_growth,
+        )
+        sim = simulate_deft(
+            times,
+            DeftScheduler(times, scfg).run(sim_iterations),
+            mu=scfg.mu,
+            heterogeneous=scfg.heterogeneous,
+        )
+        solves.append(CandidateSolve(
+            tag=tag,
+            times=times,
+            schedule=schedule,
+            verdict=verdict,
+            scheduler_cfg=scfg,
+            retries=retries,
+            iteration_time=sim.iteration_time,
+        ))
+    if not solves:
+        raise ValueError("feedback_solve_candidates needs >= 1 candidate")
+    base = next(
+        (s for s in solves if s.tag == baseline_tag),
+        solves[0],
+    )
+    best = base
+    for s in solves:
+        if s is base or not s.verdict.ok:
+            continue
+        bar = best.iteration_time
+        if best is base:
+            bar = base.iteration_time * (1.0 - min_gain)
+        if s.iteration_time < bar:
+            best = s
+    return best, tuple(solves)
+
+
 def plan_deft(
     cfg: ArchConfig,
     hw: HardwareModel = HardwareModel(),

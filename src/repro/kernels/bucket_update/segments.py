@@ -105,7 +105,25 @@ class BucketSegments:
 def build_segments(
     layout: "BucketLayout", spec: OptimizerSpec
 ) -> BucketSegments:
-    """Segment metadata for ``layout`` under ``spec``'s per-leaf rules."""
-    return BucketSegments(
-        layout=layout, hparams=leaf_hparams(spec, layout.shapes)
-    )
+    """Segment metadata for ``layout`` under ``spec``'s per-leaf rules.
+
+    Memoized per (layout, spec): a layout-changing hot-swap rebuilds the
+    segment maps for the NEW layout while the old cycle finishes, and a
+    later replan that returns to a previously-seen layout reuses its
+    segments exactly like the runtime reuses its compiled phases.  Both
+    arguments are frozen tuple dataclasses, so the key is cheap and the
+    memo can never alias two different layouts.
+    """
+    key = (layout, spec)
+    hit = _SEGMENTS_MEMO.get(key)
+    if hit is None:
+        if len(_SEGMENTS_MEMO) > 64:
+            _SEGMENTS_MEMO.clear()
+        hit = BucketSegments(
+            layout=layout, hparams=leaf_hparams(spec, layout.shapes)
+        )
+        _SEGMENTS_MEMO[key] = hit
+    return hit
+
+
+_SEGMENTS_MEMO: dict = {}

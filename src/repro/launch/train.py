@@ -21,9 +21,12 @@ from repro.adapt import (
     AdaptConfig,
     AdaptiveController,
     BandwidthDrop,
+    RepartitionConfig,
+    Repartitioner,
     SyntheticTelemetrySource,
 )
-from repro.checkpoint.checkpoint import save as save_ckpt
+from repro.checkpoint.checkpoint import latest_step, save as save_ckpt
+from repro.checkpoint.checkpoint import restore as restore_ckpt, saved_keys
 from repro.configs import ARCH_NAMES, get_config, reduce_for_smoke
 from repro.core.bucket import BucketTimes
 from repro.core.deft import feedback_solve
@@ -38,10 +41,64 @@ from repro.sharding.specs import needs_fsdp
 from repro.train.bucketing import (
     assign_buckets,
     build_bucket_layout,
+    build_leaf_time_model,
+    coverage_rescale,
     leaf_bucket_times,
 )
 from repro.train.runtime import DeftRuntime, make_ddp_step
 from repro.train.steps import init_train_state
+
+
+def schedule_digest(schedule) -> str:
+    """Deterministic fingerprint of a schedule's phase structure —
+    PhaseSpecs are frozen dataclasses of primitives, so their repr is
+    stable across processes."""
+    import hashlib
+
+    return hashlib.sha1(repr(schedule.phases).encode()).hexdigest()[:16]
+
+
+def save_layout_descriptor(
+    directory: str, step: int, layout, next_phase: int = 0,
+    digest: str = "",
+) -> None:
+    """Sidecar json naming the BucketLayout a checkpoint was written
+    under, so a restore under a DIFFERENT layout (changed partition or
+    shard count) can route the flat accumulators through a
+    LayoutTransition (DESIGN.md §9).  ``next_phase`` + the schedule
+    ``digest`` record the cycle position the next step would have run,
+    letting a resume under the IDENTICAL schedule continue mid-cycle
+    (the accumulators were saved mid-generation) instead of restarting
+    the cycle."""
+    import json
+    import os
+
+    path = os.path.join(directory, f"layout_{step:08d}.json")
+    with open(path + ".tmp", "w") as f:
+        json.dump({"bucket_of": list(layout.bucket_of_leaf),
+                   "n_buckets": layout.n_buckets,
+                   "shards": layout.shards,
+                   "next_phase": next_phase,
+                   "schedule_digest": digest}, f)
+    os.replace(path + ".tmp", path)
+
+
+def load_layout_descriptor(directory: str, step: int, params_abs):
+    """Rebuild the checkpoint's BucketLayout + cycle position + schedule
+    digest from its sidecar; (None, 0, "") when the checkpoint predates
+    descriptors."""
+    import json
+    import os
+
+    path = os.path.join(directory, f"layout_{step:08d}.json")
+    if not os.path.exists(path):
+        return None, 0, ""
+    with open(path) as f:
+        d = json.load(f)
+    layout = build_bucket_layout(params_abs, tuple(d["bucket_of"]),
+                                 d["n_buckets"], shard_count=d["shards"])
+    return layout, int(d.get("next_phase", 0)), \
+        str(d.get("schedule_digest", ""))
 
 
 def build_schedule(
@@ -69,9 +126,7 @@ def build_schedule(
     times = leaf_bucket_times(params, cfg, bucket_of, nb, hw, seq_len,
                               per_device_batch)
     if coverage_rate > 0:
-        scale = coverage_rate * (times.fwd_total + times.bwd_total) / max(
-            times.comm_total, 1e-12
-        )
+        scale = coverage_rescale(times, coverage_rate)
         times = BucketTimes(times.fwd, times.bwd,
                             tuple(c * scale for c in times.comm))
     walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
@@ -102,6 +157,10 @@ def main() -> None:
                          "at this step (0 = use real measured wall times)")
     ap.add_argument("--adapt-drop-scale", type=float, default=3.0,
                     help="comm slowdown factor of the injected drop")
+    ap.add_argument("--adapt-repartition", action="store_true",
+                    help="with --adapt: replans may change the bucket "
+                         "partition itself — the runtime re-packs the "
+                         "flat state at a cycle boundary, no restart")
     ap.add_argument("--compute-dtype", choices=["f32", "bf16"],
                     default="f32",
                     help="forward/backward precision of the flat engines "
@@ -111,6 +170,11 @@ def main() -> None:
     ap.add_argument("--model", type=int, default=0, help="debug mesh model axis")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="", help="checkpoint dir (optional)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from --ckpt "
+                         "before training (a checkpoint written under a "
+                         "different bucket layout is re-packed through "
+                         "the LayoutTransition)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -133,10 +197,17 @@ def main() -> None:
 
     with jax.set_mesh(mesh):
         runtime = None
+        start_step = 0
         if args.scheduler == "ddp":
             state = init_train_state(key, cfg, opt)
             # donated: params/opt update in place instead of copying
             step_fn = make_ddp_step(cfg, opt, fsdp=fsdp)
+            if args.resume and args.ckpt:
+                last = latest_step(args.ckpt)
+                if last is not None:
+                    state = restore_ckpt(args.ckpt, last, state)
+                    start_step = last
+                    print(f"resumed checkpoint step {last}")
         else:
             # shape-only probe: bucketing/layout never read values, so an
             # eval_shape tree avoids materializing a throwaway full state
@@ -163,9 +234,52 @@ def main() -> None:
                              else None)
             runtime = DeftRuntime(cfg, opt, schedule, layout, mesh,
                                   fsdp=fsdp, compute_dtype=compute_dtype)
-            state = runtime.init_state(
-                key, dtype=compute_dtype or jnp.float32
-            )
+            state = None
+            if args.resume and args.ckpt:
+                last = latest_step(args.ckpt)
+                if last is not None:
+                    src_layout, next_phase, src_digest = \
+                        load_layout_descriptor(args.ckpt, last, params_abs)
+                    if src_layout is None:
+                        src_layout, next_phase, src_digest = layout, 0, ""
+                    # read the gather cache only if the checkpoint has
+                    # one AND the layout matches (tree_to_state re-inits
+                    # it cold otherwise)
+                    has_pg = any(k.startswith("pgather")
+                                 for k in saved_keys(args.ckpt, last))
+                    ts = restore_ckpt(
+                        args.ckpt, last,
+                        runtime.checkpoint_struct(
+                            src_layout,
+                            with_pgather=has_pg and src_layout == layout,
+                        ),
+                    )
+                    # cross-layout restores route cur/fut through the
+                    # LayoutTransition span remap inside tree_to_state
+                    state = runtime.tree_to_state(ts, src_layout=src_layout)
+                    start_step = last
+                    # continue mid-cycle ONLY under the byte-identical
+                    # schedule (a phase sequence that merely shares the
+                    # period would misread the mid-generation
+                    # accumulators), and only if the gather cache the
+                    # resumed position may read was actually saved
+                    same_cycle = (
+                        src_layout == layout
+                        and src_digest == schedule_digest(runtime.schedule)
+                        and (not runtime.stats()["gather_skip"] or has_pg)
+                    )
+                    runtime.reset_cycle(
+                        start_step - next_phase if same_cycle
+                        else start_step
+                    )
+                    print(f"resumed checkpoint step {last}"
+                          + (" (re-packed from a different layout)"
+                             if src_layout != layout else "")
+                          + ("" if same_cycle else " (cycle restarted)"))
+            if state is None:
+                state = runtime.init_state(
+                    key, dtype=compute_dtype or jnp.float32
+                )
             t_c = time.time()
             # AOT phase cache against abstract batch specs: no data batch
             # is consumed, so step 0 still trains on the stream's batch 0
@@ -184,11 +298,30 @@ def main() -> None:
         # ---- online adaptive control plane (--adapt) ------------------
         controller = None
         telemetry_src = None
+        repartitioner = None
+        run_base = None          # scale-1 run times after a repartition
         if args.adapt and runtime is not None:
+            if args.adapt_repartition:
+                model = build_leaf_time_model(
+                    params_abs, cfg, HardwareModel(dp_degree=dp),
+                    args.seq, max(args.batch // dp, 1),
+                )
+                if args.coverage_rate > 0:
+                    model = model.with_coverage_rate(
+                        bucket_of, nb, args.coverage_rate
+                    )
+                repartitioner = Repartitioner(
+                    model,
+                    RepartitionConfig(
+                        base_partition_elems=args.partition_elems
+                    ),
+                )
             controller = AdaptiveController(
                 times, schedule, scfg,
                 cfg=AdaptConfig(eta=1e-3, warmup_steps=4, check_every=4,
                                 cooldown_steps=2 * schedule.period),
+                repartitioner=repartitioner,
+                bucket_of=bucket_of if repartitioner else None,
             )
             if args.adapt_drop_step > 0:
                 telemetry_src = SyntheticTelemetrySource(
@@ -201,7 +334,12 @@ def main() -> None:
                       f"{args.adapt_drop_step}")
 
         t0 = time.time()
-        for step in range(args.steps):
+        # a resumed run continues the data stream where it left off —
+        # otherwise steps N.. would retrain on batches 0.. and diverge
+        # from the uninterrupted trajectory
+        ds.step = start_step
+        last_step = start_step + args.steps - 1
+        for step in range(start_step, start_step + args.steps):
             batch = next(ds)
             t_s = time.perf_counter()
             if runtime is None:
@@ -213,6 +351,7 @@ def main() -> None:
                     wall = telemetry_src.wall_time(
                         step, controller.schedule, controller.scheduler_cfg,
                         runtime.last_phase, solve_times=controller.times,
+                        run_base=run_base,
                     )
                 else:
                     jax.block_until_ready(m["loss"])
@@ -223,12 +362,32 @@ def main() -> None:
                 if event is not None:
                     print(f"adapt: {event.describe()}")
                     if event.changed:
+                        new_layout = None
+                        if repartitioner is not None:
+                            # ALWAYS stage the layout the controller's
+                            # installed view assumes — an earlier
+                            # partition swap may have been superseded
+                            # before it installed, and a schedule solved
+                            # for partition B must never compile against
+                            # layout A.  prepare_swap no-ops the repack
+                            # when this equals the installed layout.
+                            new_layout = build_bucket_layout(
+                                params_abs, controller.bucket_of,
+                                controller.times.n,
+                                shard_count=dp if fsdp else 1,
+                            )
+                        if event.partition_changed:
+                            run_base = repartitioner.base_times_for(
+                                event.partition
+                            )
                         runtime.prepare_swap(
                             event.schedule, state,
                             batch_spec(cfg, args.batch, args.seq),
                             background=True,
+                            layout=new_layout,
                         )
-            if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            if (step - start_step) % max(args.steps // 10, 1) == 0 \
+                    or step == last_step:
                 print(f"step {step:4d} loss={float(m['loss']):.4f} "
                       f"updated={bool(m['updated'])}")
         dt = time.time() - t0
@@ -237,8 +396,14 @@ def main() -> None:
         if runtime is not None and args.adapt:
             st = runtime.stats()
             print(f"adapt: {st['replans']} replans, {st['hot_swaps']} "
-                  f"hot-swaps, {st['cached_phases']} cached phases, "
+                  f"hot-swaps ({st['layout_swaps']} layout-changing), "
+                  f"{st['cached_phases']} cached phases, "
                   f"{st['steps_per_s']:.2f} steps/s (dispatch)")
+            for sw in st["swap_log"]:
+                if sw.get("repack_s") is not None:
+                    print(f"  repack @ step {sw['step']}: "
+                          f"{sw['n_buckets']} buckets, 1/{sw['shards']} "
+                          f"shards, {sw['repack_s'] * 1e3:.1f} ms")
             for ev in (controller.events if controller else []):
                 print(f"  {ev.describe()}")
 
@@ -246,7 +411,15 @@ def main() -> None:
         # checkpoint boundary: the flat-resident runtime state unflattens
         # to the tree form HERE and nowhere in the steady-state loop
         tree_state = runtime.state_to_tree(state) if runtime else state
-        path = save_ckpt(args.ckpt, args.steps, tree_state)
+        path = save_ckpt(args.ckpt, last_step + 1, tree_state)
+        if runtime is not None:
+            # the layout sidecar lets a later run restore this state
+            # under a DIFFERENT partition / shard count (DESIGN.md §9)
+            save_layout_descriptor(
+                args.ckpt, last_step + 1, runtime.layout,
+                next_phase=runtime.phase_in_cycle(last_step + 1),
+                digest=schedule_digest(runtime.schedule),
+            )
         print(f"checkpoint -> {path}")
 
 

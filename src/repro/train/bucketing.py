@@ -18,7 +18,7 @@ active fraction (top-k / n_experts).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +78,30 @@ def leaf_active_fraction(cfg: ArchConfig, keys: Tuple[str, ...]) -> float:
     return 1.0
 
 
+def greedy_fill_partition(
+    order: Sequence[int],
+    elems: Sequence[int],
+    partition_elems: int,
+) -> Tuple[Tuple[int, ...], int]:
+    """THE greedy model-order fill: walk ``order``, open a new bucket
+    whenever the running element count reaches ``partition_elems``.
+    Shared by :func:`assign_buckets` (params tree) and
+    :meth:`LeafTimeModel.partition` (frozen atoms) so the online
+    repartitioner's candidate grid can never drift from the partitions
+    the real layouts are built with."""
+    bucket_of = [0] * len(elems)
+    b, acc = 0, 0
+    for idx in order:
+        bucket_of[idx] = b
+        acc += elems[idx]
+        if acc >= partition_elems:
+            b += 1
+            acc = 0
+    # if the last bucket ended exactly on a boundary, b overshoots by one
+    n_buckets = max(set(bucket_of)) + 1
+    return tuple(bucket_of), n_buckets
+
+
 def assign_buckets(
     params,
     cfg: ArchConfig,
@@ -86,21 +110,11 @@ def assign_buckets(
     """Greedy fill in model order.  Returns (bucket_of_leaf aligned with
     tree_flatten leaf order, n_buckets); bucket 0 is input-most."""
     leaves = jax.tree_util.tree_flatten(params)[0]
-    order = ordered_leaf_indices(params)
-    bucket_of = [0] * len(leaves)
-    b, acc = 0, 0
-    for idx in order:
-        n = int(np.prod(leaves[idx].shape))
-        bucket_of[idx] = b
-        acc += n
-        if acc >= partition_elems:
-            b += 1
-            acc = 0
-    n_buckets = b + (1 if acc > 0 else 0)
-    n_buckets = max(n_buckets, 1)
-    # if the last bucket ended exactly on a boundary, b overshoots by one
-    n_buckets = max(set(bucket_of)) + 1
-    return tuple(bucket_of), n_buckets
+    return greedy_fill_partition(
+        ordered_leaf_indices(params),
+        [int(np.prod(l.shape)) for l in leaves],
+        partition_elems,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -279,18 +293,283 @@ def leaf_bucket_times(
     per_device_batch: int,
 ) -> BucketTimes:
     """Analytical fwd/bwd/comm seconds per leaf-bucket."""
+    model = build_leaf_time_model(params, cfg, hw, seq_len, per_device_batch)
+    return model.bucket_times(bucket_of_leaf, n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf time model (repartitioning input)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LeafTimeModel:
+    """Per-leaf timing atoms from which bucket times for ANY partition of
+    the same parameter tree can be regenerated.
+
+    ``leaf_bucket_times`` bakes the partition into its output; the online
+    repartitioning path (adapt/repartition.py) instead needs "what would
+    this OTHER partition's BucketTimes be under the calibrated hardware"
+    — so the per-leaf fwd seconds and element counts are frozen once (a
+    pure-Python tuple dataclass; jax is only touched at construction) and
+    every candidate partition re-aggregates them.
+
+    ``comm_scale`` folds in the uniform coverage-rate rescale the train
+    driver applies (build_schedule's synthetic-CR knob), so regenerated
+    times stay comparable with the times the installed plan was solved
+    from.  ``bucket_times(..., comp_scale=, comm_scale=)`` additionally
+    applies calibration scales on top (adapt/calibrate.py semantics).
+    """
+
+    order: Tuple[int, ...]       # model-order traversal of flat leaf idx
+    fwd_s: Tuple[float, ...]     # per leaf (flat idx), analytic fwd seconds
+    elems: Tuple[int, ...]       # per leaf (flat idx), element count
+    hw: HardwareModel
+    comm_scale: float = 1.0      # uniform CR rescale folded into comm
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.fwd_s)
+
+    def with_comm_scale(self, scale: float) -> "LeafTimeModel":
+        return dataclasses.replace(self, comm_scale=scale)
+
+    def with_coverage_rate(
+        self,
+        bucket_of_leaf: Sequence[int],
+        n_buckets: int,
+        coverage_rate: float,
+    ) -> "LeafTimeModel":
+        """Fold the synthetic-CR rescale into the model so that
+        ``bucket_times(bucket_of_leaf, n_buckets)`` hits ``coverage_rate``
+        — the ONE place the rescale math lives, keeping candidate pricing
+        commensurable with the times the installed plan was solved from
+        (see :func:`coverage_rescale`)."""
+        t = self.bucket_times(bucket_of_leaf, n_buckets)
+        return self.with_comm_scale(
+            self.comm_scale * coverage_rescale(t, coverage_rate)
+        )
+
+    def partition(
+        self, partition_elems: int
+    ) -> Tuple[Tuple[int, ...], int]:
+        """Greedy model-order fill at ``partition_elems`` — literally
+        :func:`assign_buckets`' walk (shared via
+        :func:`greedy_fill_partition`), without the params tree."""
+        return greedy_fill_partition(self.order, self.elems,
+                                     partition_elems)
+
+    def bucket_times(
+        self,
+        bucket_of_leaf: Sequence[int],
+        n_buckets: int,
+        *,
+        comp_scale: float = 1.0,
+        comm_scale: float = 1.0,
+    ) -> BucketTimes:
+        """BucketTimes of an arbitrary partition of this tree, optionally
+        under calibrated effective scales."""
+        fwd = [0.0] * n_buckets
+        comm_elems = [0] * n_buckets
+        for i, b in enumerate(bucket_of_leaf):
+            fwd[b] += self.fwd_s[i]
+            comm_elems[b] += self.elems[i]
+        fwd = [f * comp_scale for f in fwd]
+        bwd = [2.0 * f for f in fwd]
+        c_scale = self.comm_scale * comm_scale
+        comm = [self.hw.allreduce_time(e) * c_scale for e in comm_elems]
+        return BucketTimes(tuple(fwd), tuple(bwd), tuple(comm))
+
+
+def build_leaf_time_model(
+    params,
+    cfg: ArchConfig,
+    hw: HardwareModel,
+    seq_len: int,
+    per_device_batch: int,
+) -> LeafTimeModel:
+    """Freeze the per-leaf timing atoms of a parameter tree (shapes only —
+    an ``eval_shape`` tree works)."""
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     tokens = per_device_batch * seq_len
-    fwd = [0.0] * n_buckets
-    comm_elems = [0] * n_buckets
-    for i, (path, leaf) in enumerate(flat):
+    fwd_s: List[float] = []
+    elems: List[int] = []
+    for path, leaf in flat:
         keys = _path_keys(path)
-        b = bucket_of_leaf[i]
-        elems = int(np.prod(leaf.shape))
+        n = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
         active = leaf_active_fraction(cfg, keys)
-        flops = 2.0 * elems * active * tokens if leaf.ndim >= 2 else 0.0
-        fwd[b] += hw.compute_time(flops)
-        comm_elems[b] += elems
-    bwd = [2.0 * f for f in fwd]
-    comm = [hw.allreduce_time(e) for e in comm_elems]
-    return BucketTimes(tuple(fwd), tuple(bwd), tuple(comm))
+        flops = 2.0 * n * active * tokens if len(leaf.shape) >= 2 else 0.0
+        fwd_s.append(hw.compute_time(flops))
+        elems.append(n)
+    return LeafTimeModel(
+        order=tuple(ordered_leaf_indices(params)),
+        fwd_s=tuple(fwd_s),
+        elems=tuple(elems),
+        hw=hw,
+    )
+
+
+def coverage_rescale(times: BucketTimes, coverage_rate: float) -> float:
+    """The uniform comm multiplier that pins ``times`` to a target
+    coverage rate — shared by the train driver's synthetic-CR knob, the
+    repartitioning leaf model and the examples, so the copies cannot
+    drift apart and silently bias candidate pricing."""
+    return (
+        coverage_rate
+        * (times.fwd_total + times.bwd_total)
+        / max(times.comm_total, 1e-12)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layout transitions (cycle-boundary re-pack between two BucketLayouts)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SpanCopy:
+    """One contiguous copy of a layout transition: ``length`` elements
+    from offset ``src_off`` of src bucket ``src_bucket`` land at offset
+    ``dst_off`` of the dst bucket this copy belongs to."""
+
+    src_bucket: int
+    src_off: int
+    dst_off: int
+    length: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutTransition:
+    """Static per-leaf span remap between two :class:`BucketLayout`\\ s of
+    the SAME parameter tree (DESIGN.md §9).
+
+    Built once at replan time (pure Python over the two layouts' offset
+    tables), consumed by :func:`repack_buffers` as a traced gather: every
+    dst buffer is a static concatenation of slices of src buffers plus a
+    zero tail.  Adjacent leaves contiguous in both layouts merge into one
+    :class:`SpanCopy`, so a transition that only changes the shard count
+    (identical partition, different padding unit) compiles to one slice
+    per bucket.
+
+    ``identical[b]`` marks dst buckets whose allocated buffer is
+    byte-identical to one src buffer (same single full-range copy, same
+    padded length): :func:`repack_buffers` passes those through untouched,
+    which lets XLA alias the donated src buffer instead of copying it.
+    """
+
+    src: BucketLayout
+    dst: BucketLayout
+    copies: Tuple[Tuple[SpanCopy, ...], ...]   # per dst bucket
+    identical: Tuple[bool, ...]                # per dst bucket
+
+    @property
+    def moved_elems(self) -> int:
+        """Valid elements actually gathered (identical buckets excluded)."""
+        return sum(
+            c.length
+            for b, spans in enumerate(self.copies)
+            if not self.identical[b]
+            for c in spans
+        )
+
+    def reverse(self) -> "LayoutTransition":
+        return build_layout_transition(self.dst, self.src)
+
+
+def build_layout_transition(
+    src: BucketLayout, dst: BucketLayout
+) -> LayoutTransition:
+    """Compile the static span remap ``src`` -> ``dst``.
+
+    Both layouts must cover the same leaf set (identical ``shapes``);
+    everything else — bucket count, leaf->bucket assignment, padding,
+    shard count — may differ.
+    """
+    if src.shapes != dst.shapes:
+        raise ValueError(
+            f"layout transition needs the same parameter tree on both "
+            f"sides: src has {len(src.shapes)} leaves, dst "
+            f"{len(dst.shapes)} (or shapes differ)"
+        )
+    # leaf idx -> (src bucket, src offset)
+    src_pos: Dict[int, Tuple[int, int]] = {}
+    for b in range(src.n_buckets):
+        for i, off in zip(src.leaves[b], src.offsets[b]):
+            src_pos[i] = (b, off)
+    copies: List[Tuple[SpanCopy, ...]] = []
+    identical: List[bool] = []
+    for b in range(dst.n_buckets):
+        spans: List[SpanCopy] = []
+        run: Optional[List[int]] = None   # [src_bucket, src_off, dst_off, len]
+        for i, d_off in zip(dst.leaves[b], dst.offsets[b]):
+            sb, s_off = src_pos[i]
+            shape = dst.shapes[i]
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            if (
+                run is not None
+                and run[0] == sb
+                and run[1] + run[3] == s_off
+                and run[2] + run[3] == d_off
+            ):
+                run[3] += n
+            else:
+                if run is not None:
+                    spans.append(SpanCopy(*run))
+                run = [sb, s_off, d_off, n]
+        if run is not None:
+            spans.append(SpanCopy(*run))
+        copies.append(tuple(spans))
+        identical.append(
+            len(spans) == 1
+            and spans[0].src_off == 0
+            and spans[0].dst_off == 0
+            and spans[0].length == dst.sizes[b]
+            and src.sizes[spans[0].src_bucket] == dst.sizes[b]
+            and src.buf_sizes[spans[0].src_bucket] == dst.buf_sizes[b]
+        )
+    return LayoutTransition(
+        src=src, dst=dst, copies=tuple(copies), identical=tuple(identical)
+    )
+
+
+def repack_buffers(
+    transition: LayoutTransition, src_bufs: Sequence[jax.Array]
+) -> List[jax.Array]:
+    """Apply a layout transition to per-bucket buffers: the single traced
+    gather pass of :meth:`DeftRuntime.repack_state`.
+
+    Buffers are remapped along their LAST axis (1-D param/moment buffers
+    and ``(accum_devices, size)`` accumulator stacks both work); leading
+    axes pass through.  Byte-identical buckets are returned as the src
+    array itself so a donating jit can alias instead of copying; the
+    padded dst tail is zero by construction (src valid spans are copied,
+    src tails — zero by the flat engines' invariant — are never read).
+    """
+    dst = transition.dst
+    out: List[jax.Array] = []
+    for b in range(dst.n_buckets):
+        if transition.identical[b]:
+            out.append(src_bufs[transition.copies[b][0].src_bucket])
+            continue
+        lead = src_bufs[0].shape[:-1]
+        # pad fills match the src dtype — an f32 zero concatenated into
+        # e.g. a bf16 buffer would silently promote the whole dst buffer
+        dtype = src_bufs[0].dtype
+        parts: List[jax.Array] = []
+        cursor = 0
+        for c in transition.copies[b]:
+            if c.dst_off > cursor:   # cannot happen (offsets are dense)
+                parts.append(
+                    jnp.zeros(lead + (c.dst_off - cursor,), dtype)
+                )
+            parts.append(
+                jax.lax.slice_in_dim(
+                    src_bufs[c.src_bucket], c.src_off, c.src_off + c.length,
+                    axis=len(lead),
+                )
+            )
+            cursor = c.dst_off + c.length
+        pad = dst.buf_sizes[b] - cursor
+        if pad:
+            parts.append(jnp.zeros(lead + (pad,), dtype))
+        out.append(
+            parts[0] if len(parts) == 1
+            else jnp.concatenate(parts, axis=len(lead))
+        )
+    return out

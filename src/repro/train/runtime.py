@@ -36,10 +36,12 @@ tree-state fused path remains available via ``flat_state=False``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -63,7 +65,10 @@ from repro.sharding import (
 )
 from repro.train.bucketing import (
     BucketLayout,
+    LayoutTransition,
+    build_layout_transition,
     flatten_buckets,
+    repack_buffers,
     unflatten_buckets,
 )
 from repro.train.steps import (
@@ -326,6 +331,7 @@ def _deft_body_flat_rs(
     unroll: bool = False,
     update_impl: Optional[str] = None,
     compute_dtype=None,
+    gather_reuse: Optional[Tuple[bool, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase with params and optimizer moments SHARDED over
     ``shard_axis``: each device holds one contiguous 1/N span of every
@@ -333,6 +339,13 @@ def _deft_body_flat_rs(
 
     * the forward all-gathers the updated param shards into full flat
       buffers and reads the tree through the usual static views;
+      with ``gather_reuse[b]`` set (the gather-skip path, DESIGN.md §9)
+      bucket ``b``'s gather is skipped and the full buffer is read from
+      the ``pgather`` cache the previous phase stored — valid exactly
+      when no update touched the params since that stored gather, a
+      per-bucket generation tag that is STATIC per cycle position
+      (updates are scheduled, not data-dependent), so the skip costs
+      zero runtime bookkeeping;
     * scheduled syncs are hierarchical by construction — reduce-scatter
       over ``shard_axis`` into shard-local buffers, all-reduce over the
       outer (pod/DCN) axes, all-gather back ONLY when the synced buffer
@@ -360,13 +373,20 @@ def _deft_body_flat_rs(
     # is elementwise so the params are bit-identical, and the param
     # all-gather (the engine's dominant per-phase comm term) moves half
     # the bytes in bf16 instead of shipping f32 and casting after.
+    # Buckets flagged in ``gather_reuse`` skip the collective entirely
+    # and read the previous phase's stored gather (bit-identical: params
+    # did not change in between, by the static schedule).
     if compute_dtype is not None and compute_dtype != jnp.float32:
         gather_src = [s.astype(compute_dtype) for s in pbuf_sh]
     else:
         gather_src = pbuf_sh
+    cache = state.get("pgather")
+    reuse = gather_reuse if (cache is not None and gather_reuse) \
+        else (False,) * layout.n_buckets
     pbuf = [
-        jax.lax.all_gather(s, shard_axis, axis=0, tiled=True)
-        for s in gather_src
+        cache[b] if reuse[b]
+        else jax.lax.all_gather(s, shard_axis, axis=0, tiled=True)
+        for b, s in enumerate(gather_src)
     ]
     params = jax.tree_util.tree_unflatten(
         treedef, unflatten_buckets(layout, pbuf)
@@ -465,6 +485,11 @@ def _deft_body_flat_rs(
         "cur": tuple(c[None] for c in new_cur),
         "fut": tuple(f[None] for f in new_fut),
     }
+    if cache is not None:
+        # store this phase's gathered buffers for the next phase's skip
+        # decision (stale after an update — the static reuse mask never
+        # reads a stale entry)
+        new_state["pgather"] = tuple(pbuf)
     return new_state, metrics
 
 
@@ -508,7 +533,12 @@ def _flat_rs_state_specs(
         lambda _: P(dp_axes if len(dp_axes) > 1 else dp_axes[0]),
         {"cur": state["cur"], "fut": state["fut"]},
     )
-    return {**shard, **acc}
+    out = {**shard, **acc}
+    if "pgather" in state:
+        # the gather cache holds full (post-all-gather) buffers — the
+        # same value on every device, i.e. replicated
+        out["pgather"] = jax.tree.map(lambda _: P(), state["pgather"])
+    return out
 
 
 def _shard_phase(body, specs_fn, state, batch, mesh, dp_axes):
@@ -581,6 +611,7 @@ def deft_rs_phase_step_flat(
     unroll: bool = False,
     update_impl: Optional[str] = None,
     compute_dtype=None,
+    gather_reuse: Optional[Tuple[bool, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Sharded flat-resident DeFT phase (the FSDP/RS engine): manual over
     every DP axis, param/moment buffers split 1/N over the innermost
@@ -618,6 +649,7 @@ def deft_rs_phase_step_flat(
         unroll=unroll,
         update_impl=update_impl,
         compute_dtype=compute_dtype,
+        gather_reuse=gather_reuse,
     )
     specs_fn = lambda s, axes: _flat_rs_state_specs(s, axes, shard_axis)
     return _shard_phase(body, specs_fn, state, batch, mesh, dp_axes)
@@ -734,10 +766,12 @@ def _abstractify(x):
 
 
 class _PhaseEntry:
-    """One unique PhaseSpec's executable lifecycle: the donated jitted
-    callable, its AOT-compiled executable (once built) and stats.  Entries
-    live in the runtime's *persistent* phase cache — a replanned schedule
-    that reuses a PhaseSpec reuses its compiled executable verbatim."""
+    """One unique (layout, PhaseSpec, gather-mask) executable lifecycle:
+    the donated jitted callable, its AOT-compiled executable (once built)
+    and stats.  Entries live in the runtime's *persistent* phase cache —
+    a replanned schedule that reuses a PhaseSpec under the same layout
+    reuses its compiled executable verbatim, including across layout
+    swaps that later return to a previously-seen layout."""
 
     __slots__ = ("spec", "jitted", "compiled", "stats")
 
@@ -746,6 +780,21 @@ class _PhaseEntry:
         self.jitted = jitted
         self.compiled: Optional[Callable] = None
         self.stats = PhaseStats()
+
+
+@dataclasses.dataclass
+class _PendingSwap:
+    """A fully-compiled staged schedule, armed for the next cycle
+    boundary.  ``layout`` is None for the classic same-layout hot-swap;
+    otherwise ``repack`` is the AOT-compiled single-pass gather/scatter
+    that re-flattens the donated train state from the installed layout
+    into ``layout`` (DESIGN.md §9)."""
+
+    schedule: DeftSchedule
+    layout: Optional[BucketLayout] = None
+    segments: Optional[BucketSegments] = None
+    transition: Optional[LayoutTransition] = None
+    repack: Optional[Callable] = None
 
 
 class DeftRuntime:
@@ -764,9 +813,12 @@ class DeftRuntime:
        are lowered + compiled (optionally on a background thread while
        training continues), previously-seen phases are reused from the
        persistent cache, and the new schedule is installed atomically at
-       the next cycle boundary — the donated train state carries across
-       untouched because a replan over the same :class:`BucketLayout`
-       leaves every buffer shape and sharding unchanged.
+       the next cycle boundary.  Over the same :class:`BucketLayout` the
+       donated train state carries across untouched (every buffer keeps
+       its shape and sharding); with ``layout=`` the state is re-packed
+       through a compiled :class:`LayoutTransition` at that boundary
+       (DESIGN.md §9), so a replan may change the bucket partition or
+       the shard count mid-run with no restart.
 
     All phase executables donate the train state: callers MUST treat the
     state passed to :meth:`step` as consumed and continue with the
@@ -790,6 +842,7 @@ class DeftRuntime:
         flat_state: Optional[bool] = None,
         update_impl: Optional[str] = None,
         compute_dtype=None,
+        gather_skip: Optional[bool] = None,
     ):
         self.cfg = cfg
         self.opt_spec = opt_spec
@@ -847,23 +900,93 @@ class DeftRuntime:
         self.accum_devices = 1
         for a in self.dp_axes:
             self.accum_devices *= int(shape[a])
+        # ZeRO gather skip (DESIGN.md §9): default ON for the sharded
+        # flat engine — phases not preceded by an update reuse the
+        # previous phase's stored param gather instead of re-all-gathering.
+        # The cache rides the donated state, so it is only worth carrying
+        # when the installed schedule actually HAS a reusable position;
+        # otherwise every phase would haul an unread (hence undonatable)
+        # full-param cache through each step for nothing.
+        if gather_skip and not (fsdp and self.flat_state):
+            raise ValueError(
+                "gather_skip only applies to the sharded flat engine "
+                "(fsdp=True, flat_state=True) — the other engines never "
+                "all-gather params"
+            )
+        self._gather_skip = bool(
+            gather_skip if gather_skip is not None
+            else (fsdp and self.flat_state
+                  and self._schedule_has_reuse(schedule))
+        )
 
-        # persistent phase cache: PhaseSpec -> executable entry.  Survives
-        # hot-swaps; schedules only reference into it.
-        self._entries: Dict[PhaseSpec, _PhaseEntry] = {}
+        # persistent phase cache: (layout, PhaseSpec, gather-mask) ->
+        # executable entry.  Survives hot-swaps — including layout
+        # changes; schedules only reference into it.
+        self._entries: Dict[Tuple, _PhaseEntry] = {}
+        # jitted repack callables, keyed per transition (repack_state)
+        self._repack_cache: Dict[LayoutTransition, Callable] = {}
         # hot-swap state
         self._cycle_base = 0               # step at which the cycle restarts
-        self._pending: Optional[DeftSchedule] = None
+        self._pending: Optional[_PendingSwap] = None
         self._swap_gen = 0                 # stale background builds don't publish
         self._swap_thread: Optional[threading.Thread] = None
         self.replans = 0                   # schedules staged via prepare_swap
         self.hot_swaps = 0                 # schedules actually installed
+        self.layout_swaps = 0              # hot-swaps that re-packed state
         self.swap_log: List[Dict[str, Any]] = []
         self.last_phase = 0                # cycle phase of the last dispatch
         self._install(schedule)
 
     # ---- schedule installation ------------------------------------------
-    def _make_jitted(self, phase: PhaseSpec) -> Callable:
+    @staticmethod
+    def _schedule_has_reuse(schedule: DeftSchedule) -> bool:
+        """True when at least one cycle position can skip its param
+        gather (a phase whose predecessor did not update)."""
+        return any(
+            not schedule.phases[t - 1].do_update
+            for t in range(1, schedule.period)
+        )
+
+    def _gather_reuse_masks(
+        self, schedule: DeftSchedule
+    ) -> List[Optional[Tuple[bool, ...]]]:
+        """Per cycle position, the per-bucket gather-skip mask of the
+        sharded flat engine (None when the skip is off).  A bucket's
+        stored gather is valid iff no update touched its params since
+        the previous phase stored it — with the fused whole-state update
+        that is simply "the previous phase did not update"; position 0
+        always gathers (a swap or a fresh/restored cycle lands there
+        with an unwarmed cache)."""
+        if not self._gather_skip:
+            return [None] * schedule.period
+        masks: List[Optional[Tuple[bool, ...]]] = []
+        for t, ph in enumerate(schedule.phases):
+            nb = len(ph.route_new)
+            fresh = t == 0 or schedule.phases[t - 1].do_update
+            masks.append(((not fresh),) * nb)
+        return masks
+
+    def _schedule_keys(
+        self,
+        schedule: DeftSchedule,
+        layout: Optional[BucketLayout] = None,
+    ) -> List[Tuple]:
+        """Entry-cache keys, one per cycle position: the executable
+        identity is (layout, PhaseSpec, gather-skip mask)."""
+        layout = layout or self.layout
+        masks = self._gather_reuse_masks(schedule)
+        return [
+            (layout, ph, masks[t])
+            for t, ph in enumerate(schedule.phases)
+        ]
+
+    def _make_jitted(
+        self,
+        phase: PhaseSpec,
+        layout: BucketLayout,
+        segments: Optional[BucketSegments],
+        gather_reuse: Optional[Tuple[bool, ...]],
+    ) -> Callable:
         if self.flat_state:
             step_impl = (
                 deft_rs_phase_step_flat if self.fsdp
@@ -878,7 +1001,7 @@ class DeftRuntime:
             cfg=self.cfg,
             opt_spec=self.opt_spec,
             phase=phase,
-            layout=self.layout,
+            layout=layout,
             mesh=self.mesh,
             remat=self._remat,
             loss_chunk=self._loss_chunk,
@@ -886,11 +1009,13 @@ class DeftRuntime:
         )
         if self.flat_state:
             kw.update(
-                segments=self._segments,
+                segments=segments,
                 treedef=self._treedef,
                 update_impl=self.update_impl,
                 compute_dtype=self.compute_dtype,
             )
+        if self.flat_state and self.fsdp:
+            kw["gather_reuse"] = gather_reuse
         if not self.fsdp:
             kw["multi_pod"] = self.multi_pod
         return jax.jit(
@@ -899,32 +1024,47 @@ class DeftRuntime:
         )
 
     def _ensure_entries(
-        self, schedule: DeftSchedule
+        self,
+        schedule: DeftSchedule,
+        layout: Optional[BucketLayout] = None,
+        segments: Optional[BucketSegments] = None,
     ) -> Tuple[List[_PhaseEntry], int]:
-        """Create cache entries for the schedule's unseen PhaseSpecs.
-        Returns (entries needing compile, number reused from cache)."""
+        """Create cache entries for the schedule's unseen executables
+        under ``layout`` (default: the installed one).  Returns (entries
+        needing compile, number reused from cache)."""
+        layout = layout or self.layout
+        segments = segments if segments is not None else self._segments
         fresh: List[_PhaseEntry] = []
         reused = 0
-        for phase in schedule.phases:
-            if phase in self._entries:
+        for key in self._schedule_keys(schedule, layout):
+            if key in self._entries:
                 reused += 1
                 continue
-            entry = _PhaseEntry(phase, self._make_jitted(phase))
-            self._entries[phase] = entry
+            _, phase, mask = key
+            entry = _PhaseEntry(
+                phase, self._make_jitted(phase, layout, segments, mask)
+            )
+            self._entries[key] = entry
             fresh.append(entry)
         return fresh, reused
 
     def _install(self, schedule: DeftSchedule) -> None:
         self._ensure_entries(schedule)
         self.schedule = schedule
-        self._unique: List[PhaseSpec] = []
-        index_of: Dict[PhaseSpec, int] = {}
-        for phase in schedule.phases:
-            if phase not in index_of:
-                index_of[phase] = len(self._unique)
-                self._unique.append(phase)
+        self._unique: List[Tuple] = []
+        # entry objects resolved ONCE here: hashing a full BucketLayout
+        # (thousands of nested ints) on every step() dispatch would put
+        # tens of microseconds of pure-Python work on the hot path
+        self._unique_entries: List[_PhaseEntry] = []
+        index_of: Dict[Tuple, int] = {}
+        keys = self._schedule_keys(schedule)
+        for key in keys:
+            if key not in index_of:
+                index_of[key] = len(self._unique)
+                self._unique.append(key)
+                self._unique_entries.append(self._entries[key])
         self.phase_of_step: Tuple[int, ...] = tuple(
-            index_of[p] for p in schedule.phases
+            index_of[key] for key in keys
         )
 
     # ---- state ----------------------------------------------------------
@@ -942,6 +1082,13 @@ class DeftRuntime:
         schedules (the persistent cache's size)."""
         return len(self._entries)
 
+    def reset_cycle(self, step: int) -> None:
+        """Restart the schedule cycle at ``step``: a restored run begins
+        a fresh cycle there (position 0, which always re-gathers), so
+        resuming at an arbitrary global step keeps phase bookkeeping
+        aligned."""
+        self._cycle_base = step
+
     def phase_in_cycle(self, i: int) -> int:
         """Cycle phase step ``i`` will dispatch.  Correct across swaps:
         a staged schedule installs exactly at a boundary, where both the
@@ -953,7 +1100,7 @@ class DeftRuntime:
         AOT-compiled one when :meth:`compile` ran, else the jitted
         callable.  Public handle for benchmarks/tools that dispatch one
         phase directly without the :meth:`step` bookkeeping."""
-        entry = self._entries[self._unique[self.phase_of_step[offset]]]
+        entry = self._unique_entries[self.phase_of_step[offset]]
         return entry.compiled if entry.compiled is not None else entry.jitted
 
     def init_state(self, key, dtype=jnp.float32) -> TrainState:
@@ -1006,18 +1153,31 @@ class DeftRuntime:
             opt_shardings = jax.tree.map(
                 lambda x: rep if x.ndim == 0 else buf, opt
             )
-            return {
+            state = {
                 "pbuf": jax.device_put(pbuf, buf),
                 "opt": jax.tree.map(jax.device_put, opt, opt_shardings),
                 "cur": jax.device_put(acc["cur"], split),
                 "fut": jax.device_put(acc["fut"], split),
             }
+            if self._gather_skip:
+                state["pgather"] = jax.device_put(
+                    self._init_pgather(self.layout), rep
+                )
+            return state
         return {
             "params": jax.device_put(params, rep),
             "opt": jax.device_put(init_opt_state(self.opt_spec, params), rep),
             "cur": jax.device_put(acc["cur"], split),
             "fut": jax.device_put(acc["fut"], split),
         }
+
+    def _init_pgather(self, layout: BucketLayout) -> Tuple[jax.Array, ...]:
+        """Cold gather cache for ``layout``: zeros in the compute dtype.
+        Safe because cycle position 0 (where every fresh/restored/swapped
+        cycle starts) always re-gathers — the cache is never read before
+        a phase stored it."""
+        dt = self.compute_dtype or jnp.float32
+        return tuple(jnp.zeros((s,), dt) for s in layout.buf_sizes)
 
     # ---- checkpoint / eval boundary (tree <-> flat) ---------------------
     def params_tree(self, state: TrainState):
@@ -1033,7 +1193,12 @@ class DeftRuntime:
 
     def state_to_tree(self, state: TrainState) -> TrainState:
         """Checkpoint-friendly tree form {params, opt{step,m[,v]}} of a
-        train state (accumulators pass through unchanged)."""
+        train state.  Params and moments become layout-agnostic pytrees;
+        the ``cur``/``fut`` accumulators (and the ``pgather`` cache of
+        the gather-skip engine) stay per-bucket flat buffers BOUND TO
+        this runtime's layout — :meth:`tree_to_state` routes them through
+        a :class:`LayoutTransition` when restoring under a different
+        layout (``src_layout``)."""
         if not self.flat_state:
             return state
         unflat = lambda bufs: jax.tree_util.tree_unflatten(
@@ -1043,14 +1208,39 @@ class DeftRuntime:
                                "m": unflat(state["opt"]["m"])}
         if "v" in state["opt"]:
             opt["v"] = unflat(state["opt"]["v"])
-        return {"params": self.params_tree(state), "opt": opt,
-                "cur": state["cur"], "fut": state["fut"]}
+        out = {"params": self.params_tree(state), "opt": opt,
+               "cur": state["cur"], "fut": state["fut"]}
+        if "pgather" in state:
+            # the gather cache is part of a mid-cycle resume's state: a
+            # reuse-phase position would otherwise read a cold cache
+            out["pgather"] = state["pgather"]
+        return out
 
-    def tree_to_state(self, tree_state: TrainState) -> TrainState:
+    def tree_to_state(
+        self,
+        tree_state: TrainState,
+        src_layout: Optional[BucketLayout] = None,
+    ) -> TrainState:
         """Inverse of :meth:`state_to_tree` — restore a checkpointed tree
-        into the runtime's resident representation."""
+        into the runtime's resident representation.
+
+        ``src_layout`` names the :class:`BucketLayout` the checkpoint was
+        written under; when it differs from this runtime's layout the
+        flat accumulators are routed through the
+        :class:`LayoutTransition` span remap (params/moments are
+        layout-agnostic trees and simply re-flatten), so a run can be
+        resumed under a different partition or shard count than it was
+        saved with.  A cross-layout restore resets the gather cache —
+        the restored run starts a fresh cycle at position 0, which
+        always re-gathers."""
+        cur, fut = tree_state["cur"], tree_state["fut"]
+        cross = src_layout is not None and src_layout != self.layout
+        if cross:
+            tr = build_layout_transition(src_layout, self.layout)
+            cur = tuple(repack_buffers(tr, cur))
+            fut = tuple(repack_buffers(tr, fut))
         if not self.flat_state:
-            return tree_state
+            return {**tree_state, "cur": cur, "fut": fut}
         flat = lambda t: tuple(
             flatten_buckets(self.layout, jax.tree_util.tree_leaves(t))
         )
@@ -1058,8 +1248,55 @@ class DeftRuntime:
                                "m": flat(tree_state["opt"]["m"])}
         if "v" in tree_state["opt"]:
             opt["v"] = flat(tree_state["opt"]["v"])
-        return {"pbuf": flat(tree_state["params"]), "opt": opt,
-                "cur": tree_state["cur"], "fut": tree_state["fut"]}
+        out = {"pbuf": flat(tree_state["params"]), "opt": opt,
+               "cur": cur, "fut": fut}
+        if self._gather_skip:
+            if not cross and "pgather" in tree_state:
+                out["pgather"] = tree_state["pgather"]
+            else:
+                out["pgather"] = self._init_pgather(self.layout)
+        return out
+
+    def checkpoint_struct(
+        self,
+        src_layout: Optional[BucketLayout] = None,
+        *,
+        with_pgather: Optional[bool] = None,
+    ) -> TrainState:
+        """ShapeDtypeStruct pytree of :meth:`state_to_tree` output as
+        written under ``src_layout`` (default: this runtime's layout) —
+        the ``like`` argument :func:`repro.checkpoint.checkpoint.restore`
+        needs to verify shapes of a checkpoint possibly written under a
+        DIFFERENT layout before :meth:`tree_to_state` re-packs it.
+
+        ``with_pgather`` says whether the checkpoint carries the
+        gather-skip cache; the default reads it only for a same-layout
+        restore on a gather-skip runtime (a cross-layout restore resets
+        the cache anyway, so the saved one — if any — is left unread)."""
+        if not self.flat_state:
+            raise ValueError("checkpoint_struct needs a flat-state runtime")
+        lay = src_layout or self.layout
+        cross = lay != self.layout
+        if with_pgather is None:
+            with_pgather = self._gather_skip and not cross
+        leaves = [jax.ShapeDtypeStruct(s, jnp.float32) for s in lay.shapes]
+        tree = lambda: jax.tree_util.tree_unflatten(self._treedef, leaves)
+        opt: Dict[str, Any] = {
+            "step": jax.ShapeDtypeStruct((), jnp.int32), "m": tree()
+        }
+        if self.opt_spec.name == "adamw":
+            opt["v"] = tree()
+        acc = lambda: tuple(
+            jax.ShapeDtypeStruct((self.accum_devices, n), jnp.float32)
+            for n in lay.buf_sizes
+        )
+        out = {"params": tree(), "opt": opt, "cur": acc(), "fut": acc()}
+        if with_pgather:
+            dt = self.compute_dtype or jnp.float32
+            out["pgather"] = tuple(
+                jax.ShapeDtypeStruct((n,), dt) for n in lay.buf_sizes
+            )
+        return out
 
     # ---- AOT phase cache ------------------------------------------------
     def _compile_entries(
@@ -1087,9 +1324,166 @@ class DeftRuntime:
         ``state``/``batch`` may be concrete arrays or ShapeDtypeStructs.
         Returns {phase_index: seconds} wall-clock compile times.
         """
-        return self._compile_entries(
-            [self._entries[p] for p in self._unique], state, batch
+        return self._compile_entries(self._unique_entries, state, batch)
+
+    # ---- layout re-pack -------------------------------------------------
+    @staticmethod
+    @contextlib.contextmanager
+    def _partial_donation_ok():
+        """A repack between different bucket counts cannot alias every
+        donated src buffer into a dst buffer (the allocation sizes
+        changed — that is the point); XLA's partial-donation warning is
+        expected there, not a lost optimization, so it is silenced for
+        the repack compile only."""
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            yield
+
+    def _state_placement(self, rep, buf, split):
+        """(replicated, buffer, accumulator) sharding choices shared by
+        repack outputs and swap-state avals."""
+        return {
+            "rep": rep,
+            "buf": buf if (self.flat_state and self.fsdp) else rep,
+            "split": split,
+        }
+
+    def _repack_jitted(self, transition: LayoutTransition) -> Callable:
+        """Donated jitted single-pass gather/scatter applying a
+        :class:`LayoutTransition` to a whole train state: params/moment
+        buffers and both accumulator stacks re-flatten span-by-span;
+        byte-identical buckets pass through so XLA aliases their donated
+        buffers instead of copying.  Output shardings re-commit the
+        dst-layout placement (on the sharded engine a shard-count change
+        is just a different split of the same global buffers)."""
+        hit = self._repack_cache.get(transition)
+        if hit is not None:
+            return hit
+        from jax.sharding import NamedSharding
+
+        dst = transition.dst
+        dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        place = self._state_placement(
+            NamedSharding(self.mesh, P()),
+            NamedSharding(self.mesh, P("data")),
+            NamedSharding(self.mesh, P(dp)),
         )
+        rep, buf, split = place["rep"], place["buf"], place["split"]
+        flat_state = self.flat_state
+        gather_skip = self._gather_skip
+        compute_dtype = self.compute_dtype or jnp.float32
+        adam = self.opt_spec.name == "adamw"
+
+        def fn(state):
+            out: Dict[str, Any] = {}
+            if flat_state:
+                out["pbuf"] = tuple(repack_buffers(transition, state["pbuf"]))
+                opt: Dict[str, Any] = {
+                    "step": state["opt"]["step"],
+                    "m": tuple(repack_buffers(transition, state["opt"]["m"])),
+                }
+                if "v" in state["opt"]:
+                    opt["v"] = tuple(
+                        repack_buffers(transition, state["opt"]["v"])
+                    )
+                out["opt"] = opt
+            else:
+                out["params"] = state["params"]
+                out["opt"] = state["opt"]
+            out["cur"] = tuple(repack_buffers(transition, state["cur"]))
+            out["fut"] = tuple(repack_buffers(transition, state["fut"]))
+            if gather_skip:
+                # the gather cache is layout-bound and derived: reset cold
+                # (post-swap cycle position 0 always re-gathers)
+                out["pgather"] = tuple(
+                    jnp.zeros((n,), compute_dtype) for n in dst.buf_sizes
+                )
+            return out
+
+        out_sh: Dict[str, Any] = {"cur": split, "fut": split}
+        if flat_state:
+            out_sh["pbuf"] = buf
+            opt_sh: Dict[str, Any] = {"step": rep, "m": buf}
+            if adam:
+                opt_sh["v"] = buf
+            out_sh["opt"] = opt_sh
+        else:
+            out_sh["params"] = rep
+            out_sh["opt"] = rep
+        if gather_skip:
+            out_sh["pgather"] = rep
+        jitted = jax.jit(
+            fn,
+            donate_argnums=(0,) if self.donate else (),
+            out_shardings=out_sh,
+        )
+        self._repack_cache[transition] = jitted
+        return jitted
+
+    def repack_state(
+        self, state: TrainState, transition: LayoutTransition
+    ) -> TrainState:
+        """Re-flatten a train state between two bucket layouts in ONE
+        jitted gather/scatter pass (DESIGN.md §9).  Pure data movement —
+        the returned state is bit-identical to flatten(unflatten(state))
+        under the dst layout.  Consumes ``state`` when donation is on.
+        Normally driven by the staged swap in :meth:`step`; public for
+        cross-layout checkpoint restores, tests and benchmarks."""
+        if transition.dst.shapes != self.layout.shapes:
+            raise ValueError(
+                "transition targets a different parameter tree than this "
+                "runtime's layout"
+            )
+        with self._partial_donation_ok():
+            return self._repack_jitted(transition)(state)
+
+    def _swap_state_struct(self, state_abs, layout: BucketLayout):
+        """Abstract post-repack train state under ``layout`` — what the
+        staged schedule's fresh phases are compiled against while the old
+        cycle keeps training on the old layout."""
+        from jax.sharding import NamedSharding
+
+        dp = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        place = self._state_placement(
+            NamedSharding(self.mesh, P()),
+            NamedSharding(self.mesh, P("data")),
+            NamedSharding(self.mesh, P(dp)),
+        )
+        rep, buf, split = place["rep"], place["buf"], place["split"]
+
+        def sds(shape, dtype, sharding):
+            try:
+                return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+            except TypeError:   # older jax: no sharding kwarg
+                return jax.ShapeDtypeStruct(shape, dtype)
+
+        out = dict(state_abs)
+        out["cur"] = tuple(
+            sds((self.accum_devices, n), jnp.float32, split)
+            for n in layout.buf_sizes
+        )
+        out["fut"] = tuple(
+            sds((self.accum_devices, n), jnp.float32, split)
+            for n in layout.buf_sizes
+        )
+        if self.flat_state:
+            bufs = lambda: tuple(
+                sds((n,), jnp.float32, buf) for n in layout.buf_sizes
+            )
+            out["pbuf"] = bufs()
+            opt: Dict[str, Any] = {"step": state_abs["opt"]["step"],
+                                   "m": bufs()}
+            if "v" in state_abs["opt"]:
+                opt["v"] = bufs()
+            out["opt"] = opt
+        if self._gather_skip:
+            dt = self.compute_dtype or jnp.float32
+            out["pgather"] = tuple(
+                sds((n,), dt, rep) for n in layout.buf_sizes
+            )
+        return out
 
     # ---- hot-swap -------------------------------------------------------
     def prepare_swap(
@@ -1099,48 +1493,100 @@ class DeftRuntime:
         batch,
         *,
         background: bool = False,
+        layout: Optional[BucketLayout] = None,
     ) -> Dict[str, Any]:
         """Stage a replanned schedule for installation at the next cycle
         boundary.
 
-        Unseen PhaseSpecs are lowered + compiled against the current
+        Unseen executables are lowered + compiled against the current
         state/batch shapes (``lower`` only reads avals — it never consumes
-        the donated buffers); PhaseSpecs already in the persistent cache
-        reuse their compiled executables.  With ``background=True`` the
-        compile happens on a daemon thread while training keeps stepping
-        the old schedule; the swap arms only once compilation finishes, so
-        :meth:`step` never blocks on a half-built schedule.
+        the donated buffers); executables already in the persistent cache
+        are reused.  With ``background=True`` the compile happens on a
+        daemon thread while training keeps stepping the old schedule; the
+        swap arms only once compilation finishes, so :meth:`step` never
+        blocks on a half-built schedule.
 
-        The swap itself (see :meth:`step`) is a pure Python pointer flip
+        With ``layout`` (a different :class:`BucketLayout` over the SAME
+        parameter tree — a new bucket partition and/or shard count) the
+        swap becomes a layout-changing one (DESIGN.md §9): a
+        :class:`LayoutTransition` is compiled alongside, the staged
+        phases compile against the POST-repack state avals and segment
+        maps of the new layout, and :meth:`step` runs the single-pass
+        re-pack at the cycle boundary before dispatching phase 0 of the
+        new schedule — an adaptive repartition needs no restart and no
+        checkpoint round-trip.
+
+        For a same-layout swap the install is a pure Python pointer flip
         at ``(i - cycle_base) % period == 0``: the donated train state
-        carries across untouched because every replan shares this
-        runtime's :class:`BucketLayout` — params, opt moments and both
-        per-bucket accumulator sets keep their shapes and shardings.
+        carries across untouched because every buffer keeps its shape
+        and sharding.
         """
-        fresh, reused = self._ensure_entries(schedule)
+        new_layout: Optional[BucketLayout] = None
+        transition: Optional[LayoutTransition] = None
+        new_segments: Optional[BucketSegments] = None
+        if layout is not None and layout != self.layout:
+            if self.flat_state and self.fsdp:
+                shape = dict(zip(self.mesh.axis_names,
+                                 self.mesh.devices.shape))
+                if layout.shards != int(shape["data"]):
+                    raise ValueError(
+                        f"layout swap on the sharded engine: proposed "
+                        f"layout has shard_count={layout.shards} but the "
+                        f"mesh 'data' axis is {shape['data']}-way"
+                    )
+            new_layout = layout
+            transition = build_layout_transition(self.layout, new_layout)
+            if self.flat_state:
+                new_segments = build_segments(new_layout, self.opt_spec)
+        fresh, reused = self._ensure_entries(
+            schedule, new_layout, new_segments
+        )
         self.replans += 1
         info: Dict[str, Any] = {
             "new_phases": len(fresh),
             "reused_phases": reused,
             "background": background,
+            "layout_change": new_layout is not None,
         }
+        if new_layout is not None:
+            info["n_buckets"] = (self.layout.n_buckets, new_layout.n_buckets)
+            info["shards"] = (self.layout.shards, new_layout.shards)
+            info["moved_elems"] = transition.moved_elems
         # snapshot avals NOW: the caller keeps training, and donation
         # deletes the concrete state buffers under the background thread
         state_abs = jax.tree.map(_abstractify, state)
         batch_abs = jax.tree.map(_abstractify, batch)
+        if new_layout is not None:
+            compile_state_abs = self._swap_state_struct(state_abs, new_layout)
+        else:
+            compile_state_abs = state_abs
         self._swap_gen += 1
         gen = self._swap_gen
         self._pending = None   # a newer replan supersedes any armed one
 
         def _build() -> None:
             t0 = time.perf_counter()
-            self._compile_entries(fresh, state_abs, batch_abs)
+            self._compile_entries(fresh, compile_state_abs, batch_abs)
+            repack = None
+            if transition is not None:
+                # AOT-compile the repack pass too: the cycle-boundary
+                # install must not pay a trace+compile on the hot path
+                with jax.set_mesh(self.mesh), self._partial_donation_ok():
+                    repack = self._repack_jitted(transition).lower(
+                        state_abs
+                    ).compile()
             info["compile_s"] = time.perf_counter() - t0
             # publish last — step() sees the schedule only fully compiled —
             # and only if no NEWER prepare_swap superseded this one (a slow
             # older compile must not overwrite a fresher staged schedule)
             if self._swap_gen == gen:
-                self._pending = schedule
+                self._pending = _PendingSwap(
+                    schedule=schedule,
+                    layout=new_layout,
+                    segments=new_segments,
+                    transition=transition,
+                    repack=repack,
+                )
 
         if background:
             self._swap_thread = threading.Thread(
@@ -1169,19 +1615,34 @@ class DeftRuntime:
         """Run training step ``i`` (cycle phase ``(i - cycle_base) %
         period``).  Consumes ``state`` when donation is on.  If a staged
         schedule is armed and ``i`` lands on a cycle boundary, it is
-        installed first and ``i`` becomes step 0 of the new cycle."""
+        installed first and ``i`` becomes step 0 of the new cycle; a
+        layout-changing swap additionally re-packs the donated state
+        through the staged transition before dispatching (the one-time
+        repack cost is recorded in ``swap_log``)."""
         if self._pending is not None and (i - self._cycle_base) % self.period == 0:
             pending, self._pending = self._pending, None
-            self._install(pending)
+            repack_s = None
+            if pending.layout is not None:
+                t0 = time.perf_counter()
+                state = pending.repack(state)
+                jax.block_until_ready(jax.tree_util.tree_leaves(state))
+                repack_s = time.perf_counter() - t0
+                self.layout = pending.layout
+                self._segments = pending.segments
+                self.layout_swaps += 1
+            self._install(pending.schedule)
             self._cycle_base = i
             self.hot_swaps += 1
             self.swap_log.append(
-                {"step": i, "period": pending.period,
-                 "updates_per_period": pending.updates_per_period}
+                {"step": i, "period": pending.schedule.period,
+                 "updates_per_period": pending.schedule.updates_per_period,
+                 "n_buckets": self.layout.n_buckets,
+                 "shards": self.layout.shards,
+                 "repack_s": repack_s}
             )
         off = (i - self._cycle_base) % self.period
         self.last_phase = off
-        entry = self._entries[self._unique[self.phase_of_step[off]]]
+        entry = self._unique_entries[self.phase_of_step[off]]
         t0 = time.perf_counter()
         if entry.compiled is not None:
             out = entry.compiled(state, batch)
@@ -1234,6 +1695,8 @@ class DeftRuntime:
             "steps_per_s": n / total_dispatch if total_dispatch > 0 else 0.0,
             "replans": self.replans,
             "hot_swaps": self.hot_swaps,
+            "layout_swaps": self.layout_swaps,
+            "gather_skip": self._gather_skip,
             "swap_log": list(self.swap_log),
             "collectives_per_phase": coll,
             "max_collectives_in_a_phase": max(

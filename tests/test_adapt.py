@@ -276,6 +276,102 @@ def test_knapsack_memo_cache_reused_across_consecutive_replans():
 
 
 # ---------------------------------------------------------------------------
+# Candidate-partition path (pure Python; the runtime side lives in
+# tests/test_repack.py)
+# ---------------------------------------------------------------------------
+def _leaf_model_setup(pe=20_000, cr=1.8):
+    from repro.train import build_leaf_time_model
+
+    cfg = _tiny_cfg()
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    model = build_leaf_time_model(params, cfg, HardwareModel(dp_degree=4),
+                                  32, 4)
+    bo, nb = model.partition(pe)
+    model = model.with_coverage_rate(bo, nb, cr)
+    return model, bo, nb, model.bucket_times(bo, nb)
+
+
+def test_feedback_solve_candidates_gate_and_hysteresis():
+    """The winner is Preserver-ok (or the baseline itself), and an
+    impossible min_gain pins the choice to the baseline — near-ties
+    must never pay a re-pack."""
+    from repro.adapt import RepartitionConfig, Repartitioner
+    from repro.core.deft import feedback_solve_candidates
+
+    model, bo, nb, times = _leaf_model_setup()
+    rp = Repartitioner(model, RepartitionConfig(base_partition_elems=20_000))
+    pairs = [(c.tag, rp.times_for(c, comm_scale=3.0))
+             for c in rp.candidates(bo, nb)]
+    best, solves = feedback_solve_candidates(
+        pairs, WALK, baseline_tag="current", min_gain=0.02
+    )
+    assert len(solves) == len(pairs)
+    assert best.verdict.ok or best.tag == "current"
+    assert all(s.iteration_time > 0 for s in solves)
+    # the winner actually wins on simulated iteration time
+    ok = [s for s in solves if s.verdict.ok]
+    assert best.iteration_time == min(s.iteration_time for s in ok)
+    pinned, _ = feedback_solve_candidates(
+        pairs, WALK, baseline_tag="current", min_gain=10.0
+    )
+    assert pinned.tag == "current"
+
+
+def test_controller_repartitions_on_bandwidth_drop():
+    """A 3x bandwidth drop calibrates to a profile under which a
+    different partition wins -> the replan is partition-changing, the
+    adopted candidate is Preserver-gated, and the controller's installed
+    view (times.n, bucket_of) follows the new partition."""
+    from repro.adapt import RepartitionConfig, Repartitioner
+
+    model, bo, nb, times = _leaf_model_setup()
+    schedule, _, scfg, _ = feedback_solve(times, WALK)
+    rp = Repartitioner(model, RepartitionConfig(base_partition_elems=20_000))
+    drop = BandwidthDrop(step=40, comm_scale=3.0)
+    ctrl = AdaptiveController(times, schedule, scfg, walk=WALK,
+                              repartitioner=rp, bucket_of=bo)
+    events = run_control_loop(
+        ctrl, SyntheticTelemetrySource(times, drop), 140,
+        run_base_fn=lambda e: rp.base_times_for(e.partition),
+    )
+    assert events and all(e.step >= drop.step for e in events)
+    reparts = [e for e in events if e.partition_changed]
+    assert reparts, "calibrated drop profile favored no other partition"
+    ev = reparts[0]
+    assert ev.verdict.ok
+    assert ev.new_n_buckets == ev.partition.n_buckets != ev.old_n_buckets
+    assert ev.changed and "REPARTITION" in ev.describe()
+    assert len(ev.candidate_solves) >= 2
+    assert ctrl.stats()["repartitions"] == len(reparts)
+    assert ctrl.bucket_of == reparts[-1].partition.bucket_of
+    assert ctrl.times.n == reparts[-1].new_n_buckets
+
+
+def test_controller_without_repartitioner_never_repartitions():
+    times = _toy_times()
+    schedule, _, scfg, _ = feedback_solve(times, WALK)
+    ctrl = AdaptiveController(times, schedule, scfg, walk=WALK)
+    events = run_control_loop(
+        ctrl, SyntheticTelemetrySource(
+            times, BandwidthDrop(step=40, comm_scale=3.0)), 120,
+    )
+    assert events
+    assert all(not e.partition_changed for e in events)
+    assert ctrl.stats()["repartitions"] == 0
+
+
+def test_controller_repartitioner_requires_bucket_of():
+    from repro.adapt import RepartitionConfig, Repartitioner
+
+    model, bo, nb, times = _leaf_model_setup()
+    schedule, _, scfg, _ = feedback_solve(times, WALK)
+    rp = Repartitioner(model, RepartitionConfig(base_partition_elems=20_000))
+    with pytest.raises(ValueError, match="bucket_of"):
+        AdaptiveController(times, schedule, scfg, walk=WALK,
+                           repartitioner=rp)
+
+
+# ---------------------------------------------------------------------------
 # The acceptance test: detect -> replan -> hot-swap on the real runtime,
 # bit-matching a reference run of the same effective phase sequence.
 # ---------------------------------------------------------------------------

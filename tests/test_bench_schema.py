@@ -84,6 +84,21 @@ def test_checked_in_bench_files_validate(name):
     assert validate_file(path) == []
 
 
+def test_bench_repack_entry_floor():
+    """The checked-in repack entry exists and the cycle-boundary re-pack
+    stays an amortization-friendly one-off: well under the cost of one
+    step at a replan-every-100-steps cadence.  Wall clock on a shared
+    CPU is load-noisy, so the floors are deliberately loose — the hard
+    semantics (bitwise repack identity) live in tests/test_repack.py."""
+    path = os.path.join(_ROOT, "BENCH_runtime.json")
+    rp = json.load(open(path))["repack"]
+    assert rp["n_buckets_a"] != rp["n_buckets_b"]
+    assert rp["moved_elems_a_to_b"] > 0
+    assert 0 < rp["repack_ms_a_to_b"]
+    # one repack per ~100 steps must stay a small fraction of the run
+    assert rp["amortized_overhead_at_replan_every_100_steps"] < 0.5, rp
+
+
 def test_check_script_cli():
     """scripts/check_bench_schema.py: exit 0 on the checked-in files,
     exit 1 (with SCHEMA ERROR on stderr) on a broken payload."""
