@@ -85,6 +85,16 @@ _REPACK = {
     "amortized_overhead_at_replan_every_100_steps": None,
 }
 
+_ELASTIC_PLAN = {
+    "n_shards": None,
+    "action": None,
+    "period": None,
+    "updates_per_period": None,
+    "preserver_ratio": None,
+    "preserver_ok": None,
+    "plan_s": None,
+}
+
 SCHEMAS: Dict[str, Dict[str, Any]] = {
     "BENCH_runtime.json": {
         "solver": {
@@ -116,6 +126,26 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
         "detection_latency_steps": None,
         "replan_events": None,
         "knapsack_cache_trail": None,
+    },
+    "BENCH_elastic.json": {
+        "scenario": {"n_shards": None, "drop_step": None,
+                     "drop_shards": None, "straggler_shard": None,
+                     "straggler_factor": None, "coverage_rate": None,
+                     "steps": None},
+        "initial_plan": _ELASTIC_PLAN,
+        "detection": {"device_drop_step": None,
+                      "device_drop_latency_steps": None,
+                      "straggler_step": None,
+                      "straggler_latency_steps": None},
+        "steps_per_s_before_fault": None,
+        "steps_per_s_during_fault": None,
+        "steps_per_s_after_repack": None,
+        "after_over_during_fault": None,
+        "scale_down_plan": _ELASTIC_PLAN,
+        "scale_up_plan": _ELASTIC_PLAN,
+        "repack": {"n_buckets_a": None, "n_buckets_b": None,
+                   "total_elems": None, "migrate_ms_a_to_b": None,
+                   "migrate_ms_b_to_a": None},
     },
 }
 

@@ -21,7 +21,7 @@ sys.path.insert(0, _ROOT)
 
 
 def _sections(smoke: bool):
-    from benchmarks import adapt_bench, runtime_bench
+    from benchmarks import adapt_bench, elastic_bench, runtime_bench
 
     runtime = (
         "runtime (fused DeftRuntime + solver, BENCH_runtime.json)",
@@ -31,8 +31,12 @@ def _sections(smoke: bool):
         "adapt (static vs adaptive replan, BENCH_adapt.json)",
         adapt_bench.run,
     )
+    elastic = (
+        "elastic (fault detection + scale-down repack, BENCH_elastic.json)",
+        elastic_bench.run,
+    )
     if smoke:
-        return [runtime, adapt]
+        return [runtime, adapt, elastic]
 
     from benchmarks import (
         fig10_time_to_solution,
@@ -56,6 +60,7 @@ def _sections(smoke: bool):
         ("roofline (dry-run)", roofline.run),
         runtime,
         adapt,
+        elastic,
     ]
 
 

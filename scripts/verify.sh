@@ -13,6 +13,9 @@
 #   scripts/verify.sh --multidevice # the multidevice-marked subprocess
 #                                   # suite on forced host devices (the
 #                                   # CI multidevice job)
+#   scripts/verify.sh --chaos       # fault-injection recovery suite:
+#                                   # elastic scale-down/up on forced
+#                                   # devices (the CI chaos-smoke job)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -40,6 +43,20 @@ if [[ "$mode" == "--multidevice" ]]; then
     exit "$rc"
   fi
   echo "verify.sh --multidevice: OK"
+  exit 0
+fi
+
+if [[ "$mode" == "--chaos" ]]; then
+  echo "== chaos suite (fault injection -> elastic recovery) =="
+  # the chaos tests spawn subprocesses that force their own device
+  # counts, same pattern as --multidevice
+  rc=0
+  python -m pytest -q -m chaos || rc=$?
+  if [[ "$rc" -ne 0 ]]; then
+    echo "verify.sh: chaos tests FAILED (exit $rc)" >&2
+    exit "$rc"
+  fi
+  echo "verify.sh --chaos: OK"
   exit 0
 fi
 

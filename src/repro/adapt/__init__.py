@@ -26,7 +26,12 @@ from repro.adapt.scenario import (
     SyntheticTelemetrySource,
     run_control_loop,
 )
-from repro.adapt.telemetry import StepSample, Telemetry, TelemetryConfig
+from repro.adapt.telemetry import (
+    ShardTelemetry,
+    StepSample,
+    Telemetry,
+    TelemetryConfig,
+)
 
 __all__ = [
     "AdaptConfig",
@@ -37,6 +42,7 @@ __all__ = [
     "RepartitionConfig",
     "Repartitioner",
     "ReplanEvent",
+    "ShardTelemetry",
     "StepSample",
     "SyntheticTelemetrySource",
     "Telemetry",

@@ -126,3 +126,108 @@ class Telemetry:
 
     def __len__(self) -> int:
         return len(self._ring)
+
+
+class ShardTelemetry:
+    """Per-shard step-time and collective-latency store (DESIGN.md §10).
+
+    :class:`Telemetry` is schedule-relative — it keys EMAs by cycle
+    phase and cannot say *which device* is slow.  The elastic health
+    monitor instead needs a per-shard view: one EMA of step wall time
+    and one of collective latency per data-parallel shard, plus the
+    monotonic-clock timestamp of each shard's last heartbeat (the
+    absolute-timeout dead-device policy reads it).
+
+    The clock is injected (``now``), never sampled — fault scenarios
+    replay deterministically.  ``warmup_steps`` samples per shard are
+    heartbeat-only (recorded but excluded from the EMAs) so compile
+    jitter after a start or a mesh change never reads as a straggler.
+    """
+
+    def __init__(self, n_shards: int, cfg: Optional[TelemetryConfig] = None):
+        self.cfg = cfg or TelemetryConfig()
+        self.rebase(n_shards)
+
+    # ---- lifecycle ------------------------------------------------------
+    def rebase(self, n_shards: int) -> None:
+        """Re-key for a new shard count (elastic scale-down/up) and
+        re-arm the per-shard warm-up."""
+        self.n_shards = n_shards
+        self._step_ema: List[Optional[float]] = [None] * n_shards
+        self._coll_ema: List[Optional[float]] = [None] * n_shards
+        self._n: List[int] = [0] * n_shards
+        self._seen: List[int] = [0] * n_shards
+        self._last_seen: List[Optional[float]] = [None] * n_shards
+
+    # ---- recording ------------------------------------------------------
+    def record(
+        self,
+        shard: int,
+        wall_s: float,
+        collective_s: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> None:
+        """One heartbeat from ``shard``: its step wall seconds, optional
+        collective-phase seconds, and the monotonic clock it arrived at."""
+        if not 0 <= shard < self.n_shards:
+            raise IndexError(f"shard {shard} out of range 0..{self.n_shards - 1}")
+        if now is not None:
+            self._last_seen[shard] = now
+        self._seen[shard] += 1
+        if self._seen[shard] <= self.cfg.warmup_steps:
+            return                                  # warm-up skip
+        a = self.cfg.ema_alpha
+
+        def ema(prev: Optional[float], x: float) -> float:
+            return x if prev is None else a * x + (1.0 - a) * prev
+
+        self._step_ema[shard] = ema(self._step_ema[shard], wall_s)
+        if collective_s is not None:
+            self._coll_ema[shard] = ema(self._coll_ema[shard], collective_s)
+        self._n[shard] += 1
+
+    def heartbeat(self, shard: int, now: float) -> None:
+        """Timestamp-only liveness signal (no timing sample) — a shard
+        that is alive but produced no usable measurement this step."""
+        self._last_seen[shard] = now
+
+    # ---- queries --------------------------------------------------------
+    def step_time(self, shard: int) -> Optional[float]:
+        return self._step_ema[shard]
+
+    def collective_time(self, shard: int) -> Optional[float]:
+        return self._coll_ema[shard]
+
+    def last_seen(self, shard: int) -> Optional[float]:
+        return self._last_seen[shard]
+
+    def samples(self, shard: int) -> int:
+        """Post-warm-up samples recorded for ``shard``."""
+        return self._n[shard]
+
+    def median_step_time(
+        self, shards: Optional[List[int]] = None
+    ) -> Optional[float]:
+        """Median step-time EMA over ``shards`` (default: all) — the
+        straggler policy's 'healthy peer' reference.  A median (not a
+        mean) keeps one runaway shard from dragging its own yardstick."""
+        idx = range(self.n_shards) if shards is None else shards
+        xs = sorted(
+            t for i in idx if (t := self._step_ema[i]) is not None
+        )
+        if not xs:
+            return None
+        m = len(xs) // 2
+        return xs[m] if len(xs) % 2 else 0.5 * (xs[m - 1] + xs[m])
+
+    def median_collective_time(
+        self, shards: Optional[List[int]] = None
+    ) -> Optional[float]:
+        idx = range(self.n_shards) if shards is None else shards
+        xs = sorted(
+            t for i in idx if (t := self._coll_ema[i]) is not None
+        )
+        if not xs:
+            return None
+        m = len(xs) // 2
+        return xs[m] if len(xs) % 2 else 0.5 * (xs[m - 1] + xs[m])

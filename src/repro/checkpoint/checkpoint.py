@@ -2,16 +2,25 @@
 
 Leaves are flattened with '/'-joined key paths into a single compressed
 .npz; the tree structure, dtypes and non-array leaves live in a sidecar
-json.  Restore rebuilds the exact pytree (tuples stay tuples).  Writes are
-atomic (tmp + rename) so a crashed save never corrupts the latest step.
+json.  Restore rebuilds the exact pytree (tuples stay tuples).
+
+Writes are atomic AND ordered (DESIGN.md §10): both files are staged in
+a private temp dir on the same filesystem, then renamed into place npz
+first, json sidecar LAST — the sidecar is the commit marker.  A crash at
+any point leaves either the previous step intact or an uncommitted
+orphan; :func:`latest_step` only ever returns steps that pass
+:func:`is_complete` (sidecar present, npz readable, every sidecar key
+present in the archive), so a kill mid-save can never poison a resume.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
 import tempfile
-from typing import Any, Dict, Optional
+import zipfile
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -40,15 +49,24 @@ def save(directory: str, step: int, tree, *, name: str = "ckpt") -> str:
     treedef = jax.tree_util.tree_structure(tree)
     meta = {"step": step, "treedef": str(treedef), "keys": sorted(arrays)}
     base = os.path.join(directory, f"{name}_{step:08d}")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
-    # write through the handle — np.savez would silently append ".npz" to a
-    # path not ending in it, leaving the temp file empty after the rename
-    with os.fdopen(fd, "wb") as f:
-        np.savez_compressed(f, **arrays)
-    os.replace(tmp, base + ".npz")
-    with open(base + ".json.tmp", "w") as f:
-        json.dump(meta, f)
-    os.replace(base + ".json.tmp", base + ".json")
+    # stage BOTH files in a temp dir, then rename npz first and the json
+    # sidecar last: the sidecar commits the step (is_complete), so a
+    # crash between the two renames leaves an orphan npz that
+    # latest_step skips, never a half-trusted checkpoint
+    tmpdir = tempfile.mkdtemp(dir=directory, prefix=f".{name}_{step:08d}_")
+    try:
+        npz_tmp = os.path.join(tmpdir, "arrays.npz")
+        # write through a handle — np.savez would silently append ".npz"
+        # to a path not ending in it
+        with open(npz_tmp, "wb") as f:
+            np.savez_compressed(f, **arrays)
+        json_tmp = os.path.join(tmpdir, "meta.json")
+        with open(json_tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(npz_tmp, base + ".npz")
+        os.replace(json_tmp, base + ".json")
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
     return base + ".npz"
 
 
@@ -80,13 +98,98 @@ def saved_keys(directory: str, step: int, *, name: str = "ckpt") -> list:
         return list(json.load(f)["keys"])
 
 
-def latest_step(directory: str, *, name: str = "ckpt") -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
+def is_complete(directory: str, step: int, *, name: str = "ckpt") -> bool:
+    """A checkpoint step is complete iff its json sidecar exists (the
+    commit marker), its npz opens as a zip (a truncated write loses the
+    central directory at the END of the file), and every key the sidecar
+    promises is present in the archive."""
+    base = os.path.join(directory, f"{name}_{step:08d}")
+    if not (os.path.isfile(base + ".npz") and os.path.isfile(base + ".json")):
+        return False
+    try:
+        with open(base + ".json") as f:
+            meta = json.load(f)
+        with zipfile.ZipFile(base + ".npz") as z:
+            names = set(z.namelist())
+        # npz archive members carry a ".npy" suffix
+        return all(f"{k}.npy" in names for k in meta.get("keys", []))
+    except Exception:
+        return False
+
+
+def _steps_on_disk(directory: str, name: str) -> List[int]:
     pat = re.compile(rf"{re.escape(name)}_(\d+)\.npz$")
-    steps = [
+    return sorted({
         int(m.group(1))
         for f in os.listdir(directory)
         if (m := pat.match(f))
+    })
+
+
+def valid_steps(directory: str, *, name: str = "ckpt") -> List[int]:
+    """All COMPLETE checkpoint steps, ascending — the hardened resume
+    walks this newest-first with per-step fallback."""
+    if not os.path.isdir(directory):
+        return []
+    return [
+        s for s in _steps_on_disk(directory, name)
+        if is_complete(directory, s, name=name)
     ]
-    return max(steps) if steps else None
+
+
+def latest_step(directory: str, *, name: str = "ckpt") -> Optional[int]:
+    """Newest complete checkpoint step; incomplete/corrupt steps (a
+    crash mid-save, a torn npz) are skipped, never returned."""
+    steps = valid_steps(directory, name=name)
+    return steps[-1] if steps else None
+
+
+# ---------------------------------------------------------------------------
+# Layout / schedule sidecars (cross-layout + mid-cycle resume, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def schedule_digest(schedule) -> str:
+    """Deterministic fingerprint of a schedule's phase structure —
+    PhaseSpecs are frozen dataclasses of primitives, so their repr is
+    stable across processes."""
+    import hashlib
+
+    return hashlib.sha1(repr(schedule.phases).encode()).hexdigest()[:16]
+
+
+def save_layout_descriptor(
+    directory: str, step: int, layout, next_phase: int = 0,
+    digest: str = "",
+) -> None:
+    """Sidecar json naming the BucketLayout a checkpoint was written
+    under, so a restore under a DIFFERENT layout (changed partition or
+    shard count) can route the flat accumulators through a
+    LayoutTransition (DESIGN.md §9).  ``next_phase`` + the schedule
+    ``digest`` record the cycle position the next step would have run,
+    letting a resume under the IDENTICAL schedule continue mid-cycle
+    (the accumulators were saved mid-generation) instead of restarting
+    the cycle."""
+    path = os.path.join(directory, f"layout_{step:08d}.json")
+    with open(path + ".tmp", "w") as f:
+        json.dump({"bucket_of": list(layout.bucket_of_leaf),
+                   "n_buckets": layout.n_buckets,
+                   "shards": layout.shards,
+                   "next_phase": next_phase,
+                   "schedule_digest": digest}, f)
+    os.replace(path + ".tmp", path)
+
+
+def load_layout_descriptor(directory: str, step: int, params_abs):
+    """Rebuild the checkpoint's BucketLayout + cycle position + schedule
+    digest from its sidecar; (None, 0, "") when the checkpoint predates
+    descriptors."""
+    from repro.train.bucketing import build_bucket_layout
+
+    path = os.path.join(directory, f"layout_{step:08d}.json")
+    if not os.path.exists(path):
+        return None, 0, ""
+    with open(path) as f:
+        d = json.load(f)
+    layout = build_bucket_layout(params_abs, tuple(d["bucket_of"]),
+                                 d["n_buckets"], shard_count=d["shards"])
+    return layout, int(d.get("next_phase", 0)), \
+        str(d.get("schedule_digest", ""))

@@ -1,0 +1,57 @@
+"""Fault-tolerant elastic control plane (DESIGN.md §10).
+
+The adaptive loop (repro.adapt) re-plans when the hardware gets
+*slower*; this layer re-plans when the hardware gets *smaller*: per-shard
+health monitoring detects stragglers and dead/preempted devices, an
+:class:`ElasticController` prices the surviving mesh through the same
+calibrated ``LeafTimeModel`` / ``feedback_solve_candidates`` /
+Preserver path, and the :class:`ElasticCoordinator` executes the
+cycle-boundary ``repack_state`` scale-down (and symmetric scale-up) with
+zero restart.  Every recovery path replays deterministically through
+:class:`FaultScenario`.
+"""
+from repro.elastic.controller import (
+    ElasticConfig,
+    ElasticController,
+    ElasticPlan,
+)
+from repro.elastic.coordinator import (
+    ElasticCoordinator,
+    ElasticHalt,
+    fold_accum_rows,
+    migrate_state,
+)
+from repro.elastic.faults import (
+    BandwidthCollapse,
+    CapacityReturn,
+    DeviceDrop,
+    FaultScenario,
+    KillMidCheckpoint,
+    PreemptionNotice,
+    ShardObservation,
+    StragglerSlowdown,
+    truncate_checkpoint,
+)
+from repro.elastic.health import FaultEvent, HealthConfig, HealthMonitor
+
+__all__ = [
+    "BandwidthCollapse",
+    "CapacityReturn",
+    "DeviceDrop",
+    "ElasticConfig",
+    "ElasticController",
+    "ElasticCoordinator",
+    "ElasticHalt",
+    "ElasticPlan",
+    "FaultEvent",
+    "FaultScenario",
+    "HealthConfig",
+    "HealthMonitor",
+    "KillMidCheckpoint",
+    "PreemptionNotice",
+    "ShardObservation",
+    "StragglerSlowdown",
+    "fold_accum_rows",
+    "migrate_state",
+    "truncate_checkpoint",
+]

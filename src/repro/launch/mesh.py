@@ -29,6 +29,30 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=_auto_axis_types(len(axes)))
 
 
+def make_elastic_mesh(device_rows):
+    """Mesh over an EXPLICIT device subset — the elastic control plane's
+    scale-down/up builds these (DESIGN.md §10): ``device_rows[i]`` is
+    the tuple of model-axis devices of data-parallel shard ``i``, so a
+    4->2 scale-down passes the two surviving rows and the dead devices
+    simply stop appearing in any sharding.
+
+    ``jax.make_mesh`` always spans ``jax.devices()``; this constructs
+    ``jax.sharding.Mesh`` directly from the survivor array instead."""
+    import numpy as np
+
+    arr = np.array(device_rows, dtype=object)
+    if arr.ndim == 1:
+        arr = arr.reshape(-1, 1)
+    try:
+        return jax.sharding.Mesh(
+            arr, ("data", "model"), axis_types=_auto_axis_types(2)
+        )
+    except (TypeError, AttributeError):
+        # older jax: Mesh has no axis_types kwarg, or expects a dict form
+        # — match what the make_mesh compat shim produces (all-Auto)
+        return jax.sharding.Mesh(arr, ("data", "model"))
+
+
 def make_debug_mesh(data: int = 4, model: int = 2, pod: int = 0):
     """Small CPU mesh for tests/examples (needs forced host device count)."""
     if pod:

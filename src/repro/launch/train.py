@@ -12,6 +12,7 @@ a multi-device mesh); pointed at a TPU slice it drives the same code over
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -25,8 +26,16 @@ from repro.adapt import (
     Repartitioner,
     SyntheticTelemetrySource,
 )
-from repro.checkpoint.checkpoint import latest_step, save as save_ckpt
-from repro.checkpoint.checkpoint import restore as restore_ckpt, saved_keys
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    load_layout_descriptor,
+    restore as restore_ckpt,
+    save as save_ckpt,
+    save_layout_descriptor,
+    saved_keys,
+    schedule_digest,
+    valid_steps,
+)
 from repro.configs import ARCH_NAMES, get_config, reduce_for_smoke
 from repro.core.bucket import BucketTimes
 from repro.core.deft import feedback_solve
@@ -34,6 +43,16 @@ from repro.core.preserver import WalkParams
 from repro.core.profiler import HardwareModel
 from repro.core.scheduler import SchedulerConfig
 from repro.data.pipeline import SyntheticDataset, batch_spec
+from repro.elastic import (
+    CapacityReturn,
+    DeviceDrop,
+    ElasticController,
+    ElasticCoordinator,
+    ElasticHalt,
+    FaultScenario,
+    HealthMonitor,
+    StragglerSlowdown,
+)
 from repro.models.model import init_params
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.optim.optimizers import adamw
@@ -47,58 +66,6 @@ from repro.train.bucketing import (
 )
 from repro.train.runtime import DeftRuntime, make_ddp_step
 from repro.train.steps import init_train_state
-
-
-def schedule_digest(schedule) -> str:
-    """Deterministic fingerprint of a schedule's phase structure —
-    PhaseSpecs are frozen dataclasses of primitives, so their repr is
-    stable across processes."""
-    import hashlib
-
-    return hashlib.sha1(repr(schedule.phases).encode()).hexdigest()[:16]
-
-
-def save_layout_descriptor(
-    directory: str, step: int, layout, next_phase: int = 0,
-    digest: str = "",
-) -> None:
-    """Sidecar json naming the BucketLayout a checkpoint was written
-    under, so a restore under a DIFFERENT layout (changed partition or
-    shard count) can route the flat accumulators through a
-    LayoutTransition (DESIGN.md §9).  ``next_phase`` + the schedule
-    ``digest`` record the cycle position the next step would have run,
-    letting a resume under the IDENTICAL schedule continue mid-cycle
-    (the accumulators were saved mid-generation) instead of restarting
-    the cycle."""
-    import json
-    import os
-
-    path = os.path.join(directory, f"layout_{step:08d}.json")
-    with open(path + ".tmp", "w") as f:
-        json.dump({"bucket_of": list(layout.bucket_of_leaf),
-                   "n_buckets": layout.n_buckets,
-                   "shards": layout.shards,
-                   "next_phase": next_phase,
-                   "schedule_digest": digest}, f)
-    os.replace(path + ".tmp", path)
-
-
-def load_layout_descriptor(directory: str, step: int, params_abs):
-    """Rebuild the checkpoint's BucketLayout + cycle position + schedule
-    digest from its sidecar; (None, 0, "") when the checkpoint predates
-    descriptors."""
-    import json
-    import os
-
-    path = os.path.join(directory, f"layout_{step:08d}.json")
-    if not os.path.exists(path):
-        return None, 0, ""
-    with open(path) as f:
-        d = json.load(f)
-    layout = build_bucket_layout(params_abs, tuple(d["bucket_of"]),
-                                 d["n_buckets"], shard_count=d["shards"])
-    return layout, int(d.get("next_phase", 0)), \
-        str(d.get("schedule_digest", ""))
 
 
 def build_schedule(
@@ -137,6 +104,77 @@ def build_schedule(
     return bucket_of, nb, times, schedule, verdict, scfg
 
 
+def restore_runtime_state(runtime, ckpt_dir: str, params_abs):
+    """Restore the newest *usable* checkpoint into ``runtime``'s resident
+    state.  Returns ``(state, start_step)`` or ``(None, 0)`` when nothing
+    on disk restores.
+
+    Hardened resume semantics (DESIGN.md §10):
+
+    * incomplete/torn checkpoints (a writer killed mid-save) never appear
+      — ``valid_steps`` admits only atomically-committed steps;
+    * a step that still fails to restore (e.g. a stale sidecar naming a
+      layout the arrays don't match) falls back to the previous valid
+      step with a warning instead of aborting the run;
+    * a schedule-digest mismatch in the sidecar means the saved
+      mid-cycle accumulator position is meaningless under the running
+      schedule: the gather cache is dropped and the cycle restarts at
+      the checkpoint step (cycle-start restore) with a clear warning —
+      never a crash, never a silent mid-cycle misread.
+    """
+    layout = runtime.layout
+    run_digest = schedule_digest(runtime.schedule)
+    for last in reversed(valid_steps(ckpt_dir)):
+        try:
+            src_layout, next_phase, src_digest = \
+                load_layout_descriptor(ckpt_dir, last, params_abs)
+            if src_layout is None:
+                src_layout, next_phase, src_digest = layout, 0, ""
+            digest_ok = (not src_digest) or src_digest == run_digest
+            # read the gather cache only if the checkpoint has one AND
+            # the layout + schedule both match (tree_to_state re-inits
+            # it cold otherwise; a digest mismatch restarts the cycle,
+            # which re-gathers anyway)
+            has_pg = any(k.startswith("pgather")
+                         for k in saved_keys(ckpt_dir, last))
+            ts = restore_ckpt(
+                ckpt_dir, last,
+                runtime.checkpoint_struct(
+                    src_layout,
+                    with_pgather=(has_pg and src_layout == layout
+                                  and digest_ok),
+                ),
+            )
+            # cross-layout restores route cur/fut through the
+            # LayoutTransition span remap inside tree_to_state
+            state = runtime.tree_to_state(ts, src_layout=src_layout)
+        except Exception as e:      # torn arrays, stale sidecar, ...
+            print(f"resume: checkpoint step {last} unusable "
+                  f"({type(e).__name__}: {e}); trying the previous one")
+            continue
+        # continue mid-cycle ONLY under the byte-identical schedule (a
+        # phase sequence that merely shares the period would misread the
+        # mid-generation accumulators), and only if the gather cache the
+        # resumed position may read was actually saved
+        same_cycle = (
+            src_layout == layout
+            and src_digest == run_digest
+            and (not runtime.stats()["gather_skip"] or has_pg)
+        )
+        runtime.reset_cycle(last - next_phase if same_cycle else last)
+        if src_digest and not digest_ok:
+            print(f"resume: WARNING schedule digest mismatch at step "
+                  f"{last} (saved {src_digest}, running {run_digest}) — "
+                  f"gather cache dropped, cycle restarted at the "
+                  f"checkpoint step")
+        print(f"resumed checkpoint step {last}"
+              + (" (re-packed from a different layout)"
+                 if src_layout != layout else "")
+              + ("" if same_cycle else " (cycle restarted)"))
+        return state, last
+    return None, 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="gemma2-2b")
@@ -161,6 +199,28 @@ def main() -> None:
                     help="with --adapt: replans may change the bucket "
                          "partition itself — the runtime re-packs the "
                          "flat state at a cycle boundary, no restart")
+    ap.add_argument("--elastic", action="store_true",
+                    help="fault-tolerant control plane: per-shard health "
+                         "monitoring -> Preserver-gated mesh scale-down/up "
+                         "via a cycle-boundary repack, zero restart")
+    ap.add_argument("--elastic-drop-step", type=int, default=0,
+                    help="with --elastic: inject a device-drop fault at "
+                         "this step (0 = none)")
+    ap.add_argument("--elastic-drop-shards", default="",
+                    help="comma-separated origin shard ids the injected "
+                         "drop kills (default: the last data row)")
+    ap.add_argument("--elastic-return-step", type=int, default=0,
+                    help="with --elastic: the dropped shards come back at "
+                         "this step (scale-up trigger; 0 = never)")
+    ap.add_argument("--elastic-straggler-step", type=int, default=0,
+                    help="with --elastic: one shard starts running slow "
+                         "at this step (0 = none)")
+    ap.add_argument("--elastic-straggler-shard", type=int, default=0)
+    ap.add_argument("--elastic-straggler-factor", type=float, default=3.0)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="auto-checkpoint cadence in steps (0 = only at "
+                         "the end); with --elastic this bounds lost work "
+                         "on an unsurvivable fault")
     ap.add_argument("--compute-dtype", choices=["f32", "bf16"],
                     default="f32",
                     help="forward/backward precision of the flat engines "
@@ -176,6 +236,13 @@ def main() -> None:
                          "different bucket layout is re-packed through "
                          "the LayoutTransition)")
     args = ap.parse_args()
+    if args.elastic and args.adapt:
+        ap.error("--elastic and --adapt are mutually exclusive: the "
+                 "elastic controller owns replanning while it owns the "
+                 "mesh (DESIGN.md §10)")
+    if args.elastic and args.scheduler != "deft":
+        ap.error("--elastic needs --scheduler deft (the migration path "
+                 "repacks the flat DeFT state)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -236,46 +303,9 @@ def main() -> None:
                                   fsdp=fsdp, compute_dtype=compute_dtype)
             state = None
             if args.resume and args.ckpt:
-                last = latest_step(args.ckpt)
-                if last is not None:
-                    src_layout, next_phase, src_digest = \
-                        load_layout_descriptor(args.ckpt, last, params_abs)
-                    if src_layout is None:
-                        src_layout, next_phase, src_digest = layout, 0, ""
-                    # read the gather cache only if the checkpoint has
-                    # one AND the layout matches (tree_to_state re-inits
-                    # it cold otherwise)
-                    has_pg = any(k.startswith("pgather")
-                                 for k in saved_keys(args.ckpt, last))
-                    ts = restore_ckpt(
-                        args.ckpt, last,
-                        runtime.checkpoint_struct(
-                            src_layout,
-                            with_pgather=has_pg and src_layout == layout,
-                        ),
-                    )
-                    # cross-layout restores route cur/fut through the
-                    # LayoutTransition span remap inside tree_to_state
-                    state = runtime.tree_to_state(ts, src_layout=src_layout)
-                    start_step = last
-                    # continue mid-cycle ONLY under the byte-identical
-                    # schedule (a phase sequence that merely shares the
-                    # period would misread the mid-generation
-                    # accumulators), and only if the gather cache the
-                    # resumed position may read was actually saved
-                    same_cycle = (
-                        src_layout == layout
-                        and src_digest == schedule_digest(runtime.schedule)
-                        and (not runtime.stats()["gather_skip"] or has_pg)
-                    )
-                    runtime.reset_cycle(
-                        start_step - next_phase if same_cycle
-                        else start_step
-                    )
-                    print(f"resumed checkpoint step {last}"
-                          + (" (re-packed from a different layout)"
-                             if src_layout != layout else "")
-                          + ("" if same_cycle else " (cycle restarted)"))
+                state, start_step = restore_runtime_state(
+                    runtime, args.ckpt, params_abs
+                )
             if state is None:
                 state = runtime.init_state(
                     key, dtype=compute_dtype or jnp.float32
@@ -333,19 +363,126 @@ def main() -> None:
                       f"x{args.adapt_drop_scale} at step "
                       f"{args.adapt_drop_step}")
 
+        # ---- fault-tolerant elastic control plane (--elastic) ---------
+        elastic = None
+        scenario = None
+        if args.elastic and runtime is not None:
+
+            def model_for(width: int):
+                m = build_leaf_time_model(
+                    params_abs, cfg, HardwareModel(dp_degree=width),
+                    args.seq, max(args.batch // width, 1),
+                )
+                if args.coverage_rate > 0:
+                    m = m.with_coverage_rate(bucket_of, nb,
+                                             args.coverage_rate)
+                return m
+
+            walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0,
+                              batch=256)
+            elastic = ElasticCoordinator(
+                runtime,
+                ElasticController(model_for, bucket_of, nb, walk=walk,
+                                  scheduler_cfg=scfg),
+                HealthMonitor(dp),
+                params_abs=params_abs,
+                batch_spec=batch_spec(cfg, args.batch, args.seq),
+                checkpoint_dir=args.ckpt,
+            )
+            faults = []
+            if args.elastic_drop_step > 0:
+                shards = tuple(
+                    int(s) for s in args.elastic_drop_shards.split(",") if s
+                ) or (dp - 1,)
+                faults.append(DeviceDrop(args.elastic_drop_step, shards))
+                if args.elastic_return_step > 0:
+                    faults.append(
+                        CapacityReturn(args.elastic_return_step, shards)
+                    )
+            if args.elastic_straggler_step > 0:
+                faults.append(StragglerSlowdown(
+                    args.elastic_straggler_step,
+                    args.elastic_straggler_shard,
+                    args.elastic_straggler_factor,
+                ))
+            if faults:
+                scenario = FaultScenario(n_shards=dp, events=tuple(faults))
+                print("elastic: injected faults: " + "; ".join(
+                    f"{type(e).__name__}@{e.step}" for e in faults))
+
+        # a preemption signal (SIGTERM/SIGUSR1, what cluster managers
+        # send before reclaiming the host) checkpoints and exits cleanly
+        preempted = {"sig": None}
+        if args.elastic or args.ckpt:
+            def _on_preempt(signum, frame):
+                preempted["sig"] = signum
+
+            signal.signal(signal.SIGTERM, _on_preempt)
+            signal.signal(signal.SIGUSR1, _on_preempt)
+
         t0 = time.time()
         # a resumed run continues the data stream where it left off —
         # otherwise steps N.. would retrain on batches 0.. and diverge
         # from the uninterrupted trajectory
         ds.step = start_step
         last_step = start_step + args.steps - 1
+        halted = False
         for step in range(start_step, start_step + args.steps):
+            if preempted["sig"] is not None:
+                print(f"preemption signal {preempted['sig']}: "
+                      f"checkpointing and exiting cleanly")
+                if args.ckpt:
+                    if elastic is not None:
+                        path = elastic.emergency_checkpoint(step, state)
+                    else:
+                        tree_state = (runtime.state_to_tree(state)
+                                      if runtime else state)
+                        path = save_ckpt(args.ckpt, step, tree_state)
+                        if runtime is not None:
+                            save_layout_descriptor(
+                                args.ckpt, step, runtime.layout,
+                                next_phase=runtime.phase_in_cycle(step),
+                                digest=schedule_digest(runtime.schedule),
+                            )
+                    print(f"checkpoint -> {path}")
+                halted = True
+                last_step = step - 1
+                break
             batch = next(ds)
             t_s = time.perf_counter()
-            if runtime is None:
-                state, m = step_fn(state, batch)
-            else:
-                state, m = runtime.step(step, state, batch)
+            try:
+                if runtime is None:
+                    state, m = step_fn(state, batch)
+                elif elastic is not None:
+                    state, m = elastic.step(step, state, batch)
+                    runtime = elastic.runtime   # migrations swap it
+                else:
+                    state, m = runtime.step(step, state, batch)
+            except ElasticHalt as e:
+                # the degradation ladder bottomed out; the emergency
+                # checkpoint (if --ckpt) is on disk — exit cleanly
+                print(f"elastic: {e}")
+                halted = True
+                last_step = step - 1
+                break
+            if elastic is not None:
+                jax.block_until_ready(m["loss"])
+                wall = time.perf_counter() - t_s
+                if scenario is not None:
+                    obs = scenario.observe(step, wall)
+                    if obs.notices:
+                        for ev in elastic.notice_preemption(
+                                step, obs.notices):
+                            print(f"elastic: {ev.describe()}")
+                    if obs.returned:
+                        elastic.notice_capacity(step, obs.returned)
+                        print(f"elastic: capacity returned: "
+                              f"shards {obs.returned}")
+                    walls = obs.walls
+                else:
+                    walls = (wall,) * elastic.n_origin
+                for ev in elastic.observe(step, walls):
+                    print(f"elastic: {ev.describe()}")
             if controller is not None:
                 if telemetry_src is not None:
                     wall = telemetry_src.wall_time(
@@ -386,6 +523,17 @@ def main() -> None:
                             background=True,
                             layout=new_layout,
                         )
+            if args.ckpt and args.ckpt_every > 0 \
+                    and (step + 1 - start_step) % args.ckpt_every == 0:
+                tree_state = (runtime.state_to_tree(state)
+                              if runtime else state)
+                save_ckpt(args.ckpt, step + 1, tree_state)
+                if runtime is not None:
+                    save_layout_descriptor(
+                        args.ckpt, step + 1, runtime.layout,
+                        next_phase=runtime.phase_in_cycle(step + 1),
+                        digest=schedule_digest(runtime.schedule),
+                    )
             if (step - start_step) % max(args.steps // 10, 1) == 0 \
                     or step == last_step:
                 print(f"step {step:4d} loss={float(m['loss']):.4f} "
@@ -406,8 +554,23 @@ def main() -> None:
                           f"shards, {sw['repack_s'] * 1e3:.1f} ms")
             for ev in (controller.events if controller else []):
                 print(f"  {ev.describe()}")
+        if elastic is not None:
+            st = elastic.stats()
+            print(f"elastic: members={st['members']} "
+                  f"spares={st['spares']} "
+                  f"{len(st['migrations'])} migrations, "
+                  f"{len(st['fault_events'])} fault events")
+            for mig in st["migrations"]:
+                if mig["action"] == "checkpoint-halt":
+                    print(f"  halt @ step {mig['step']} "
+                          f"({mig['trigger']})")
+                else:
+                    print(f"  {mig['action']} @ step {mig['step']}: "
+                          f"{mig['old_shards']}->{mig['new_shards']} "
+                          f"shards (detected step {mig['detected_step']}, "
+                          f"repack {mig['repack_s'] * 1e3:.1f} ms)")
 
-    if args.ckpt:
+    if args.ckpt and not halted:
         # checkpoint boundary: the flat-resident runtime state unflattens
         # to the tree form HERE and nowhere in the steady-state loop
         tree_state = runtime.state_to_tree(state) if runtime else state

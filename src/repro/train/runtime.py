@@ -933,6 +933,8 @@ class DeftRuntime:
         self.replans = 0                   # schedules staged via prepare_swap
         self.hot_swaps = 0                 # schedules actually installed
         self.layout_swaps = 0              # hot-swaps that re-packed state
+        self.swap_failures = 0             # background compile attempts failed
+        self.last_swap_error: Optional[str] = None
         self.swap_log: List[Dict[str, Any]] = []
         self.last_phase = 0                # cycle phase of the last dispatch
         self._install(schedule)
@@ -1494,6 +1496,8 @@ class DeftRuntime:
         *,
         background: bool = False,
         layout: Optional[BucketLayout] = None,
+        retries: int = 2,
+        retry_backoff_s: float = 0.05,
     ) -> Dict[str, Any]:
         """Stage a replanned schedule for installation at the next cycle
         boundary.
@@ -1505,6 +1509,15 @@ class DeftRuntime:
         daemon thread while training keeps stepping the old schedule; the
         swap arms only once compilation finishes, so :meth:`step` never
         blocks on a half-built schedule.
+
+        A compile failure NEVER silently strands the staged swap: the
+        exception is recorded in ``swap_log`` (``event:
+        'swap-compile-failed'``) and counted in ``swap_failures``, then
+        the build retries up to ``retries`` times with linear backoff
+        (``retry_backoff_s * attempt``; already-compiled phases are not
+        recompiled).  When the budget is exhausted the swap is abandoned
+        — training keeps stepping the installed schedule and a later
+        :meth:`prepare_swap` starts clean (DESIGN.md §10).
 
         With ``layout`` (a different :class:`BucketLayout` over the SAME
         parameter tree — a new bucket partition and/or shard count) the
@@ -1566,16 +1579,39 @@ class DeftRuntime:
 
         def _build() -> None:
             t0 = time.perf_counter()
-            self._compile_entries(fresh, compile_state_abs, batch_abs)
-            repack = None
-            if transition is not None:
-                # AOT-compile the repack pass too: the cycle-boundary
-                # install must not pay a trace+compile on the hot path
-                with jax.set_mesh(self.mesh), self._partial_donation_ok():
-                    repack = self._repack_jitted(transition).lower(
-                        state_abs
-                    ).compile()
+            attempt = 0
+            while True:
+                try:
+                    self._compile_entries(fresh, compile_state_abs, batch_abs)
+                    repack = None
+                    if transition is not None:
+                        # AOT-compile the repack pass too: the
+                        # cycle-boundary install must not pay a
+                        # trace+compile on the hot path
+                        with jax.set_mesh(self.mesh), \
+                                self._partial_donation_ok():
+                            repack = self._repack_jitted(transition).lower(
+                                state_abs
+                            ).compile()
+                    break
+                except Exception as e:   # noqa: BLE001 — surfaced, retried
+                    attempt += 1
+                    self.swap_failures += 1
+                    err = f"{type(e).__name__}: {e}"
+                    self.last_swap_error = err
+                    retrying = attempt <= retries and self._swap_gen == gen
+                    # failures SURFACE in swap_log — a background-thread
+                    # exception must never silently strand a staged swap
+                    self.swap_log.append({
+                        "step": None, "event": "swap-compile-failed",
+                        "error": err, "attempt": attempt,
+                        "retrying": retrying,
+                    })
+                    if not retrying:
+                        return       # abandoned; old schedule keeps running
+                    time.sleep(retry_backoff_s * attempt)
             info["compile_s"] = time.perf_counter() - t0
+            info["compile_attempts"] = attempt + 1
             # publish last — step() sees the schedule only fully compiled —
             # and only if no NEWER prepare_swap superseded this one (a slow
             # older compile must not overwrite a fresher staged schedule)
@@ -1607,6 +1643,43 @@ class DeftRuntime:
         if self._swap_thread is not None:
             self._swap_thread.join(timeout)
         return self.swap_ready()
+
+    # ---- elastic / degraded-mode dispatch -------------------------------
+    def spawn(
+        self,
+        *,
+        mesh=None,
+        schedule: Optional[DeftSchedule] = None,
+        layout: Optional[BucketLayout] = None,
+        fsdp: Optional[bool] = None,
+        gather_skip: Optional[bool] = None,
+        donate: Optional[bool] = None,
+    ) -> "DeftRuntime":
+        """Sibling runtime: same arch/optimizer/engine knobs, overriding
+        mesh, schedule, layout and/or engine.  The elastic control plane
+        builds these for mesh scale-down/up and for the
+        sharded->replicated degraded-mode fallback (DESIGN.md §10);
+        state moves over via :func:`repro.elastic.coordinator.migrate_state`.
+        The phase cache is NOT shared — executables are mesh-bound."""
+        new_mesh = self.mesh if mesh is None else mesh
+        return DeftRuntime(
+            self.cfg,
+            self.opt_spec,
+            self.schedule if schedule is None else schedule,
+            self.layout if layout is None else layout,
+            new_mesh,
+            multi_pod=(self.multi_pod if mesh is None
+                       else "pod" in new_mesh.axis_names),
+            fsdp=self.fsdp if fsdp is None else fsdp,
+            remat=self._remat,
+            loss_chunk=self._loss_chunk,
+            unroll=self._unroll,
+            donate=self.donate if donate is None else donate,
+            flat_state=self.flat_state,
+            update_impl=self.update_impl,
+            compute_dtype=self.compute_dtype,
+            gather_skip=gather_skip,
+        )
 
     # ---- dispatch -------------------------------------------------------
     def step(
@@ -1696,6 +1769,8 @@ class DeftRuntime:
             "replans": self.replans,
             "hot_swaps": self.hot_swaps,
             "layout_swaps": self.layout_swaps,
+            "swap_failures": self.swap_failures,
+            "last_swap_error": self.last_swap_error,
             "gather_skip": self._gather_skip,
             "swap_log": list(self.swap_log),
             "collectives_per_phase": coll,

@@ -1,0 +1,708 @@
+"""Fault-tolerant elastic control plane (DESIGN.md §10).
+
+* HealthMonitor policies: absolute-timeout dead detection, EWMA-ratio
+  straggler detection + recovery, uniform-drift-is-not-a-straggler, the
+  explicit preemption notice.
+* FaultScenario determinism and the KillMidCheckpoint damage model.
+* Accumulator-row folding preserves the global-mean gradient across any
+  mesh width change.
+* ElasticController degradation ladder: scale-down (sharded) ->
+  fallback-replicated -> checkpoint-halt, all Preserver-gated.
+* Atomic checkpoints: a truncated (killed-mid-write) newest step is
+  skipped and resume picks the previous complete one.
+* Hardened resume: a schedule-digest mismatch falls back to cycle-start
+  restore instead of misreading mid-generation accumulators.
+* prepare_swap failure paths: an injected background compile exception
+  surfaces in swap_log and retries; an exhausted retry budget leaves the
+  old plan running and a later replan succeeds.
+* Engine-fallback migration (sharded -> replicated flat) on one device
+  matches a reference run compiled directly for the fallback engine.
+* Chaos (subprocess, forced devices): device-drop 4->2 scale-down whose
+  post-fault trajectory matches a from-scratch 2-shard run from the
+  repacked state, the symmetric 2->4 scale-up, the A->B->A state round
+  trip, and a straggler-triggered 4->3 scale-down.
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (
+    is_complete,
+    latest_step,
+    restore,
+    save,
+    save_layout_descriptor,
+    schedule_digest,
+    valid_steps,
+)
+from repro.configs import get_config
+from repro.core.bucket import BucketTimes
+from repro.core.deft import feedback_solve
+from repro.core.preserver import WalkParams
+from repro.core.profiler import HardwareModel
+from repro.data.pipeline import make_batch
+from repro.elastic import (
+    BandwidthCollapse,
+    CapacityReturn,
+    DeviceDrop,
+    ElasticController,
+    ElasticCoordinator,
+    ElasticHalt,
+    FaultScenario,
+    HealthConfig,
+    HealthMonitor,
+    StragglerSlowdown,
+    fold_accum_rows,
+    migrate_state,
+    truncate_checkpoint,
+)
+from repro.launch.train import restore_runtime_state
+from repro.models.model import init_params
+from repro.optim.optimizers import adamw
+from repro.train import (
+    DeftRuntime,
+    assign_buckets,
+    build_bucket_layout,
+    build_leaf_time_model,
+    leaf_bucket_times,
+)
+
+WALK = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+B, S = 4, 32
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor policies
+# ---------------------------------------------------------------------------
+def test_dead_detection_by_heartbeat_timeout():
+    mon = HealthMonitor(4)
+    events = []
+    for step in range(30):
+        walls = [1.0, None if step >= 6 else 1.0, 1.0, 1.0]
+        events += mon.observe(step, walls)
+    dead = [e for e in events if e.kind == "dead"]
+    assert [e.shard for e in dead] == [1], events
+    assert mon.status[1] == "dead"
+    assert mon.alive_shards() == [0, 2, 3]
+    # terminal until reset: no duplicate events on continued silence
+    assert len(dead) == 1
+    mon.reset(2)
+    assert mon.status == ["healthy", "healthy"]
+    assert mon.events, "the event trail survives a reset"
+
+
+def test_straggler_detection_and_recovery():
+    mon = HealthMonitor(4)
+    events = []
+    for step in range(40):
+        slow = 3.0 if 5 <= step < 15 else 1.0
+        events += mon.observe(step, [1.0, 1.0, slow, 1.0])
+    kinds = [(e.kind, e.shard) for e in events]
+    assert ("straggler", 2) in kinds
+    assert ("recovered", 2) in kinds
+    assert kinds.index(("straggler", 2)) < kinds.index(("recovered", 2))
+    assert mon.status[2] == "healthy"
+    assert not any(e.kind == "dead" for e in events)
+
+
+def test_uniform_slowdown_is_bandwidth_not_straggler():
+    """Every shard slowing together is drift for the adaptive replanner
+    (informational 'bandwidth'), never a straggler/dead verdict."""
+    mon = HealthMonitor(4)
+    events = []
+    for step in range(30):
+        wall = 3.0 if step >= 10 else 1.0
+        coll = 0.6 if step >= 10 else 0.2
+        events += mon.observe(step, [wall] * 4, [coll] * 4)
+    assert all(e.kind == "bandwidth" for e in events), events
+    assert len([e for e in events if e.kind == "bandwidth"]) == 1
+    assert mon.alive_shards() == [0, 1, 2, 3]
+
+
+def test_preemption_notice_is_immediate_and_single():
+    mon = HealthMonitor(2)
+    ev = mon.notice_preemption(7, 1, detail="spot reclaim")
+    assert ev is not None and ev.kind == "preemption" and ev.shard == 1
+    assert mon.status[1] == "preempted"
+    assert mon.notice_preemption(8, 1) is None   # already terminal
+    assert mon.alive_shards() == [0]
+
+
+# ---------------------------------------------------------------------------
+# FaultScenario determinism
+# ---------------------------------------------------------------------------
+def test_fault_scenario_replays_deterministically():
+    scen = FaultScenario(4, (
+        DeviceDrop(5, (3,)),
+        StragglerSlowdown(2, 1, 2.5, end_step=8),
+        BandwidthCollapse(6, 3.0, end_step=10),
+        CapacityReturn(12, (3,)),
+    ))
+    for step in (0, 2, 5, 6, 9, 12, 20):
+        assert scen.observe(step, 1.0, 0.2) == scen.observe(step, 1.0, 0.2)
+    assert scen.dead_at(4) == frozenset()
+    assert scen.dead_at(5) == frozenset({3})
+    assert scen.dead_at(12) == frozenset()       # capacity returned
+    obs = scen.observe(3, 1.0)
+    assert obs.walls[1] == pytest.approx(2.5)    # straggler multiplies
+    assert obs.walls[0] == pytest.approx(1.0)
+    obs = scen.observe(7, 1.0, 0.2)
+    assert obs.walls[3] is None                  # dead: missed heartbeat
+    assert obs.comm_scale == 3.0
+    # the collective excursion rides every live shard's critical path
+    assert obs.walls[0] == pytest.approx(1.0 + 0.2 * 2.0)
+    assert scen.observe(12, 1.0).returned == (3,)
+
+
+# ---------------------------------------------------------------------------
+# Accumulator-row folding
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_old,n_new", [(4, 2), (4, 3), (2, 4), (3, 4)])
+def test_fold_accum_rows_preserves_global_mean(n_old, n_new):
+    """psum(rows)/n — the global-mean gradient the delayed update
+    consumes — survives any width change under a constant global batch."""
+    rows = jnp.asarray(
+        np.random.RandomState(0).randn(n_old, 33).astype(np.float32)
+    )
+    out = fold_accum_rows(rows, n_new)
+    assert out.shape == (n_new, 33)
+    np.testing.assert_allclose(
+        np.asarray(out).sum(0) / n_new,
+        np.asarray(rows).sum(0) / n_old,
+        rtol=0, atol=1e-6,
+    )
+    assert fold_accum_rows(rows, n_old) is rows   # width unchanged: no-op
+
+
+# ---------------------------------------------------------------------------
+# ElasticController degradation ladder
+# ---------------------------------------------------------------------------
+def _tiny_cfg():
+    base = get_config("qwen3-4b")
+    return dataclasses.replace(
+        base, name="qwen3-tiny", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+    )
+
+
+def _controller(cfg, params, pe=20_000):
+    bo, nb = assign_buckets(params, cfg, partition_elems=pe)
+
+    def model_for(width):
+        m = build_leaf_time_model(
+            params, cfg, HardwareModel(dp_degree=width), S,
+            max(B // width, 1),
+        )
+        return m.with_coverage_rate(bo, nb, 1.8)
+
+    return ElasticController(model_for, bo, nb, walk=WALK), bo, nb
+
+
+def test_controller_degradation_ladder():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ctrl, bo, nb = _controller(cfg, params)
+
+    down = ctrl.propose(10, 2, "dead")
+    assert down.action == "scale-down" and down.sharded
+    assert down.schedule is not None and down.verdict is not None
+    assert down.n_shards == 2 and down.plan_s > 0
+    assert down.bucket_of == bo and down.n_buckets == nb
+
+    repl = ctrl.propose(11, 1, "dead")
+    assert repl.action == "fallback-replicated" and not repl.sharded
+    assert repl.schedule is not None
+
+    halt = ctrl.propose(12, 0, "preemption")
+    assert halt.action == "checkpoint-halt" and halt.n_shards == 0
+
+    up = ctrl.propose(13, 4, "scale-up")
+    assert up.action == "scale-up" and up.sharded
+
+    ctrl.adopt(down)
+    assert ctrl.scheduler_cfg == down.scheduler_cfg
+    assert len(ctrl.plans) == 4
+
+
+# ---------------------------------------------------------------------------
+# Atomic checkpoints: kill-mid-write never poisons a resume
+# ---------------------------------------------------------------------------
+def _tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": r.randn(5, 3).astype(np.float32),
+            "b": r.randn(7).astype(np.float32)}
+
+
+def test_truncated_newest_checkpoint_resume_picks_previous(tmp_path):
+    d = str(tmp_path)
+    t5, t9 = _tree(5), _tree(9)
+    save(d, 5, t5)
+    save(d, 9, t9)
+    assert latest_step(d) == 9
+    truncate_checkpoint(d, 9)                 # the KillMidCheckpoint damage
+    assert not is_complete(d, 9)
+    assert valid_steps(d) == [5]
+    assert latest_step(d) == 5
+    got = restore(d, 5, t5)
+    np.testing.assert_array_equal(np.asarray(got["w"]), t5["w"])
+    # a fresh save of the damaged step fully recovers it
+    save(d, 9, t9)
+    assert latest_step(d) == 9
+
+
+def test_missing_sidecar_means_incomplete(tmp_path):
+    d = str(tmp_path)
+    save(d, 3, _tree())
+    os.remove(os.path.join(d, "ckpt_00000003.json"))
+    assert not is_complete(d, 3)
+    assert latest_step(d) is None
+    # no staging leftovers either way
+    assert not [f for f in os.listdir(d) if f.startswith(".ckpt_")]
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level paths (single device)
+# ---------------------------------------------------------------------------
+def _plan(cfg, params, partition_elems, cr=1.8):
+    bucket_of, nb = assign_buckets(params, cfg,
+                                   partition_elems=partition_elems)
+    t = leaf_bucket_times(params, cfg, bucket_of, nb,
+                          HardwareModel(dp_degree=2), S, B)
+    scale = cr * (t.fwd_total + t.bwd_total) / t.comm_total
+    t = BucketTimes(t.fwd, t.bwd, tuple(c * scale for c in t.comm))
+    sched, _, scfg, _ = feedback_solve(t, WALK)
+    return bucket_of, nb, t, sched, scfg
+
+
+def _runtime(cfg, mesh, pe=20_000, cr=1.8, fsdp=False):
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    bo, nb, _, sched, scfg = _plan(cfg, params, pe, cr=cr)
+    layout = build_bucket_layout(params, bo, nb, shard_count=1)
+    rt = DeftRuntime(cfg, opt, sched, layout, mesh, fsdp=fsdp)
+    return rt, rt.init_state(key), params
+
+
+def test_prepare_swap_compile_failure_retries_then_succeeds(single_mesh):
+    """An injected background compile exception surfaces in swap_log and
+    the retry loop recovers — the staged swap is never silently lost."""
+    cfg = _tiny_cfg()
+    rt, state, params = _runtime(cfg, single_mesh)
+    _, _, _, sched_b, _ = _plan(cfg, params, 20_000, cr=3.5)
+    assert schedule_digest(sched_b) != schedule_digest(rt.schedule)
+    orig = rt._compile_entries
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError("injected compile failure")
+        return orig(*a, **k)
+
+    rt._compile_entries = flaky
+    with jax.set_mesh(single_mesh):
+        for step in range(2):
+            state, _ = rt.step(step, state, make_batch(cfg, 0, step, B, S))
+        rt.prepare_swap(sched_b, state, make_batch(cfg, 0, 0, B, S),
+                        background=True, retries=3, retry_backoff_s=0.01)
+        assert rt.wait_swap_ready(timeout=300)
+        del rt.__dict__["_compile_entries"]
+        fails = [e for e in rt.swap_log
+                 if e.get("event") == "swap-compile-failed"]
+        assert len(fails) == 2 and all(e["retrying"] for e in fails)
+        assert rt.swap_failures == 2
+        assert "injected compile failure" in rt.last_swap_error
+        # the retried swap installs at the next cycle boundary
+        for step in range(2, 2 * rt.period + 2):
+            state, m = rt.step(step, state, make_batch(cfg, 0, step, B, S))
+    assert rt.hot_swaps == 1 and rt.schedule == sched_b
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_prepare_swap_failure_exhausted_keeps_old_plan(single_mesh):
+    """Retry budget exhausted: the runtime keeps stepping the old plan,
+    the failure is on record, and a subsequent replan succeeds."""
+    cfg = _tiny_cfg()
+    rt, state, params = _runtime(cfg, single_mesh)
+    _, _, _, sched_b, _ = _plan(cfg, params, 20_000, cr=3.5)
+    old_period = rt.period
+
+    def always_fail(*a, **k):
+        raise RuntimeError("injected compile failure")
+
+    rt._compile_entries = always_fail
+    with jax.set_mesh(single_mesh):
+        rt.prepare_swap(sched_b, state, make_batch(cfg, 0, 0, B, S),
+                        background=True, retries=1, retry_backoff_s=0.01)
+        rt.wait_swap_ready(timeout=300)
+        assert not rt.swap_ready()
+        fails = [e for e in rt.swap_log
+                 if e.get("event") == "swap-compile-failed"]
+        assert len(fails) == 2                  # first try + one retry
+        assert not fails[-1]["retrying"]
+        assert "injected compile failure" in rt.last_swap_error
+        # old plan keeps stepping across what would have been the boundary
+        for step in range(2 * old_period + 1):
+            state, m = rt.step(step, state, make_batch(cfg, 0, step, B, S))
+        assert rt.hot_swaps == 0 and rt.period == old_period
+        assert bool(jnp.isfinite(m["loss"]))
+        # the world recovers: the next replan compiles and installs
+        del rt.__dict__["_compile_entries"]
+        step0 = 2 * old_period + 1
+        rt.prepare_swap(sched_b, state, make_batch(cfg, 0, 0, B, S),
+                        background=True)
+        assert rt.wait_swap_ready(timeout=300)
+        for step in range(step0, step0 + old_period + 1):
+            state, m = rt.step(step, state, make_batch(cfg, 0, step, B, S))
+    assert rt.hot_swaps == 1 and rt.schedule == sched_b
+
+
+def test_resume_digest_mismatch_restarts_cycle(single_mesh, tmp_path):
+    """A checkpoint whose sidecar names a different schedule digest
+    restores at cycle start (satellite: resume hardening) — the saved
+    mid-cycle position is meaningless under the running schedule."""
+    d = str(tmp_path)
+    cfg = _tiny_cfg()
+    rt_a, state, params = _runtime(cfg, single_mesh, cr=5.0)  # period 5
+    k = rt_a.period + 2                         # mid-cycle save point
+    with jax.set_mesh(single_mesh):
+        for step in range(k):
+            state, _ = rt_a.step(step, state, make_batch(cfg, 0, step, B, S))
+        save(d, k, rt_a.state_to_tree(state))
+        save_layout_descriptor(
+            d, k, rt_a.layout, next_phase=rt_a.phase_in_cycle(k),
+            digest=schedule_digest(rt_a.schedule),
+        )
+        assert rt_a.phase_in_cycle(k) == 2
+
+        # same layout, different schedule -> digest mismatch
+        rt_b, _, _ = _runtime(cfg, single_mesh, cr=3.5)  # period 2
+        assert rt_b.layout == rt_a.layout
+        assert schedule_digest(rt_b.schedule) != schedule_digest(rt_a.schedule)
+        assert k % rt_b.period != 0     # the assertion below is non-trivial
+        got, start = restore_runtime_state(rt_b, d, params)
+        assert start == k and got is not None
+        assert rt_b.phase_in_cycle(k) == 0      # cycle-start fallback
+        state_b, m = rt_b.step(k, got, make_batch(cfg, 0, k, B, S))
+        assert bool(jnp.isfinite(m["loss"]))
+
+        # control: the identical schedule resumes mid-cycle
+        rt_c, _, _ = _runtime(cfg, single_mesh, cr=5.0)
+        _, start = restore_runtime_state(rt_c, d, params)
+        assert start == k and rt_c.phase_in_cycle(k) == 2
+
+
+def test_resume_skips_torn_step_falls_back(single_mesh, tmp_path):
+    """restore_runtime_state walks valid steps newest-first: a torn
+    newest checkpoint resumes from the previous complete one."""
+    d = str(tmp_path)
+    cfg = _tiny_cfg()
+    rt, state, params = _runtime(cfg, single_mesh)
+    with jax.set_mesh(single_mesh):
+        for step in range(3):
+            state, _ = rt.step(step, state, make_batch(cfg, 0, step, B, S))
+            save(d, step + 1, rt.state_to_tree(state))
+            save_layout_descriptor(
+                d, step + 1, rt.layout,
+                next_phase=rt.phase_in_cycle(step + 1),
+                digest=schedule_digest(rt.schedule),
+            )
+        truncate_checkpoint(d, 3)
+        rt2, _, _ = _runtime(cfg, single_mesh)
+        got, start = restore_runtime_state(rt2, d, params)
+    assert start == 2 and got is not None
+
+
+def test_engine_fallback_migration_matches_reference(single_mesh):
+    """Sharded -> replicated flat engine fallback via migrate_state: the
+    degraded-mode trajectory matches a reference runtime compiled
+    directly for the replicated engine from the same state."""
+    cfg = _tiny_cfg()
+    rt_a, state, params = _runtime(cfg, single_mesh, cr=3.5, fsdp=True)
+    k = rt_a.period * 2          # a cycle boundary (period 2 at cr=3.5)
+    with jax.set_mesh(single_mesh):
+        for step in range(k):
+            state, _ = rt_a.step(step, state, make_batch(cfg, 0, step, B, S))
+        snap = jax.tree.map(np.array, rt_a.state_to_tree(state))
+
+        rt_b = rt_a.spawn(fsdp=False)
+        assert not rt_b.fsdp and rt_b.layout == rt_a.layout
+        state_b = migrate_state(rt_a, rt_b, state)
+        rt_b.reset_cycle(k)
+        losses = []
+        for step in range(k, 2 * k):
+            state_b, m = rt_b.step(step, state_b,
+                                   make_batch(cfg, 0, step, B, S))
+            losses.append(float(m["loss"]))
+
+        rt_ref = DeftRuntime(cfg, rt_a.opt_spec, rt_a.schedule, rt_a.layout,
+                             single_mesh, fsdp=False)
+        state_r = rt_ref.tree_to_state(jax.tree.map(jnp.asarray, snap))
+        rt_ref.reset_cycle(k)
+        losses_ref = []
+        for step in range(k, 2 * k):
+            state_r, m = rt_ref.step(step, state_r,
+                                     make_batch(cfg, 0, step, B, S))
+            losses_ref.append(float(m["loss"]))
+    np.testing.assert_allclose(losses, losses_ref, rtol=0, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(rt_b.params_tree(state_b)),
+                    jax.tree.leaves(rt_ref.params_tree(state_r))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+
+
+def test_coordinator_halt_emergency_checkpoint_and_resume(
+        single_mesh, tmp_path):
+    """The ladder's bottom rung: every shard preempted -> emergency
+    checkpoint + ElasticHalt; a fresh runtime resumes from it."""
+    d = str(tmp_path)
+    cfg = _tiny_cfg()
+    rt, state, params = _runtime(cfg, single_mesh)
+    ctrl, _, _ = _controller(cfg, params)
+    coord = ElasticCoordinator(
+        rt, ctrl, HealthMonitor(1), params_abs=params, checkpoint_dir=d,
+    )
+    with jax.set_mesh(single_mesh):
+        for step in range(3):
+            state, _ = coord.step(step, state,
+                                  make_batch(cfg, 0, step, B, S))
+        ref = jax.tree.map(np.array, rt.state_to_tree(state))
+        events = coord.notice_preemption(3, [0])
+        assert [e.kind for e in events] == ["preemption"]
+        with pytest.raises(ElasticHalt) as err:
+            coord.step(3, state, make_batch(cfg, 0, 3, B, S))
+        assert err.value.step == 3 and err.value.checkpoint_path
+        assert coord.log[-1]["action"] == "checkpoint-halt"
+
+        assert latest_step(d) == 3
+        rt2, _, _ = _runtime(cfg, single_mesh)
+        got, start = restore_runtime_state(rt2, d, params)
+    assert start == 3
+    for a, b in zip(jax.tree.leaves(rt2.state_to_tree(got)),
+                    jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Chaos: end-to-end recovery on forced devices (subprocess)
+# ---------------------------------------------------------------------------
+_COMMON = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import get_config
+from repro.core.bucket import BucketTimes
+from repro.core.deft import feedback_solve
+from repro.core.preserver import WalkParams
+from repro.core.profiler import HardwareModel
+from repro.data.pipeline import batch_spec, make_batch
+from repro.elastic import (CapacityReturn, DeviceDrop, ElasticController,
+                           ElasticCoordinator, FaultScenario, HealthConfig,
+                           HealthMonitor, StragglerSlowdown, migrate_state)
+from repro.launch.mesh import make_debug_mesh, make_elastic_mesh
+from repro.models.model import init_params
+from repro.optim.optimizers import adamw
+from repro.train import (DeftRuntime, assign_buckets, build_bucket_layout,
+                         build_leaf_time_model, leaf_bucket_times)
+
+S = 32
+WALK = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+
+def tiny_cfg():
+    base = get_config("qwen3-4b")
+    return dataclasses.replace(
+        base, name="qwen3-tiny", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512)
+
+def setup(B):
+    cfg = tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bo, nb = assign_buckets(params, cfg, partition_elems=20_000)
+    def model_for(width):
+        m = build_leaf_time_model(params, cfg,
+                                  HardwareModel(dp_degree=width), S,
+                                  max(B // width, 1))
+        return m.with_coverage_rate(bo, nb, 1.8)
+    times4 = model_for(4).bucket_times(bo, nb)
+    sched, verdict, scfg, _ = feedback_solve(times4, WALK)
+    mesh4 = make_debug_mesh(data=4, model=1)
+    layout4 = build_bucket_layout(params, bo, nb, shard_count=4)
+    rt = DeftRuntime(cfg, adamw(1e-3), sched, layout4, mesh4, fsdp=True)
+    ctrl = ElasticController(model_for, bo, nb, walk=WALK,
+                             scheduler_cfg=scfg)
+    mon = HealthMonitor(4, HealthConfig(warmup_steps=1, timeout_factor=3.0,
+                                        straggler_ratio=1.5,
+                                        straggler_patience=2))
+    coord = ElasticCoordinator(rt, ctrl, mon, params_abs=params,
+                               batch_spec=batch_spec(cfg, B, S))
+    return cfg, params, rt, coord, sched, mesh4
+"""
+
+_DROP_SCRIPT = _COMMON + r"""
+B = 8
+cfg, params, rt, coord, sched, mesh4 = setup(B)
+DROP = 4
+scen = FaultScenario(4, (DeviceDrop(DROP, (2, 3)),))
+N1 = DROP + 4 * sched.period
+
+with jax.set_mesh(mesh4):
+    state = rt.init_state(jax.random.PRNGKey(0))
+    losses, snap_tree, m_step = [], None, None
+    for step in range(N1):
+        state = coord.maybe_migrate(step, state)
+        if coord.runtime is not rt and snap_tree is None:
+            m_step = step    # post-migration, pre-step: the repacked state
+            snap_tree = jax.tree.map(np.array,
+                                     coord.runtime.state_to_tree(state))
+        state, m = coord.runtime.step(step, state,
+                                      make_batch(cfg, 0, step, B, S))
+        losses.append(float(m["loss"]))
+        coord.observe(step, list(scen.observe(step, 1.0).walls))
+    assert m_step is not None, "scale-down never executed"
+    mig = coord.log[0]
+    assert mig["action"] == "scale-down" and mig["trigger"] == "dead"
+    assert (mig["old_shards"], mig["new_shards"]) == (4, 2)
+    assert mig["preserver_ok"], mig
+    assert coord.members == [0, 1] and sorted(coord.spares) == [2, 3]
+    assert coord.runtime.phase_in_cycle(m_step) == 0
+    det = mig["detected_step"]
+    assert DROP < det <= m_step, (DROP, det, m_step)
+    print("ELASTIC_DOWN_OK", m_step, det, flush=True)
+
+    # ---- reference: from-scratch 2-shard run from the repacked state
+    plan = [p for p in coord.controller.plans if p.action == "scale-down"][-1]
+    mesh2 = make_elastic_mesh([tuple(mesh4.devices[0, :]),
+                               tuple(mesh4.devices[1, :])])
+    layout2 = build_bucket_layout(params, plan.bucket_of, plan.n_buckets,
+                                  shard_count=2)
+    rt_ref = DeftRuntime(cfg, adamw(1e-3), plan.schedule, layout2, mesh2,
+                         fsdp=True)
+    with jax.set_mesh(mesh2):
+        state_r = rt_ref.tree_to_state(jax.tree.map(jnp.asarray, snap_tree))
+        rt_ref.reset_cycle(m_step)
+        losses_ref = []
+        for step in range(m_step, N1):
+            state_r, m = rt_ref.step(step, state_r,
+                                     make_batch(cfg, 0, step, B, S))
+            losses_ref.append(float(m["loss"]))
+    np.testing.assert_allclose(losses[m_step:], losses_ref,
+                               rtol=0, atol=1e-5)
+    for a, b in zip(
+            jax.tree.leaves(coord.runtime.params_tree(state)),
+            jax.tree.leaves(rt_ref.params_tree(state_r))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+    print("ELASTIC_REF_MATCH", flush=True)
+
+    # ---- capacity returns: symmetric 2 -> 4 scale-up, zero restart
+    coord.notice_capacity(N1, [2, 3])
+    N2 = N1 + 3 * coord.runtime.period
+    for step in range(N1, N2):
+        state = coord.maybe_migrate(step, state)
+        state, m = coord.runtime.step(step, state,
+                                      make_batch(cfg, 0, step, B, S))
+        coord.observe(step, [1.0] * 4)
+    up = coord.log[-1]
+    assert up["action"] == "scale-up"
+    assert (up["old_shards"], up["new_shards"]) == (2, 4)
+    assert coord.members == [0, 1, 2, 3] and coord.spares == []
+    assert np.isfinite(float(m["loss"]))
+    print("ELASTIC_UP_OK", flush=True)
+
+    # ---- A -> B -> A round trip through migrate_state/repack_state:
+    # params + optimizer state are bitwise; the folded accumulator rows
+    # preserve the global-mean gradient (DESIGN.md S10 fold semantics)
+    rt4 = coord.runtime
+    orig = jax.tree.map(np.array, state)
+    rt2 = rt4.spawn(mesh=mesh2, schedule=plan.schedule, layout=layout2,
+                    fsdp=True)
+    rt4b = rt2.spawn(mesh=rt4.mesh, schedule=rt4.schedule, layout=rt4.layout,
+                     fsdp=True)
+    down = migrate_state(rt4, rt2, jax.tree.map(jnp.asarray, orig))
+    back = migrate_state(rt2, rt4b, down)
+    for key in back:
+        if key in ("cur", "fut"):
+            for got, want in zip(back[key], orig[key]):
+                np.testing.assert_allclose(
+                    np.asarray(got).sum(0), np.asarray(want).sum(0),
+                    rtol=0, atol=2e-5)
+        elif key != "pgather":   # derived cache, recreated per repack
+            for got, want in zip(jax.tree.leaves(back[key]),
+                                 jax.tree.leaves(orig[key])):
+                assert np.array_equal(np.asarray(got), np.asarray(want)), key
+    print("ELASTIC_ROUNDTRIP_OK", flush=True)
+"""
+
+_STRAGGLER_SCRIPT = _COMMON + r"""
+B = 12    # divisible by 4 and by the surviving 3 shards
+cfg, params, rt, coord, sched, mesh4 = setup(B)
+ONSET = 3
+scen = FaultScenario(4, (StragglerSlowdown(ONSET, 1, 4.0),))
+N = ONSET + 4 * sched.period
+
+with jax.set_mesh(mesh4):
+    state = rt.init_state(jax.random.PRNGKey(0))
+    for step in range(N):
+        state = coord.maybe_migrate(step, state)
+        state, m = coord.runtime.step(step, state,
+                                      make_batch(cfg, 0, step, B, S))
+        coord.observe(step, list(scen.observe(step, 1.0).walls))
+    assert coord.log, "straggler removal never executed"
+    mig = coord.log[0]
+    assert mig["action"] == "scale-down" and mig["trigger"] == "straggler"
+    assert (mig["old_shards"], mig["new_shards"]) == (4, 3)
+    assert coord.members == [0, 2, 3] and coord.spares == [1]
+    assert coord.runtime.accum_devices == 3
+    assert np.isfinite(float(m["loss"]))
+    print("STRAGGLER_OK", flush=True)
+"""
+
+
+def _run_chaos(tmp_path, script):
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    path = tmp_path / "run.py"
+    path.write_text(script)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, str(path), src],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_chaos_device_drop_scale_down_up_roundtrip(tmp_path):
+    """The acceptance scenario: drop 2 of 4 shards mid-run -> detection
+    -> Preserver-gated 4->2 scale-down repack at a cycle boundary with
+    zero restart; the post-fault trajectory matches a from-scratch
+    2-shard run from the repacked state within 1e-5; capacity returns
+    and the mesh scales back 2->4; A->B->A round-trips params/opt
+    bitwise with the accumulator global mean preserved."""
+    out = _run_chaos(tmp_path, _DROP_SCRIPT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    for marker in ("ELASTIC_DOWN_OK", "ELASTIC_REF_MATCH",
+                   "ELASTIC_UP_OK", "ELASTIC_ROUNDTRIP_OK"):
+        assert marker in out.stdout, (marker, out.stdout[-2000:])
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_chaos_straggler_scale_down_4_to_3(tmp_path):
+    """A 4x straggler is planned out of the mesh: 4->3 scale-down (a
+    non-power-of-two survivor count) and training continues."""
+    out = _run_chaos(tmp_path, _STRAGGLER_SCRIPT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "STRAGGLER_OK" in out.stdout, out.stdout[-2000:]
