@@ -165,10 +165,21 @@ class ElasticCoordinator:
         )
         self.n_origin = len(self._rows)
         # origin ids currently IN the mesh, mesh order, and the spare
-        # pool capacity returns draw from
+        # pool capacity returns draw from.  An armed (not yet executed)
+        # plan's membership is always `(members | returning) - spares`:
+        # faulted members sit in BOTH `members` and `spares` until the
+        # plan executes; capacity returnees sit in `returning` until
+        # they land in `members`.  Every mutation re-arms the plan from
+        # that one invariant, so cascading faults, straggler recoveries
+        # and capacity returns compose instead of clobbering each other.
         self.members: List[int] = list(range(self.n_origin))
         self.spares: List[int] = []
+        self._returning: List[int] = []
+        # origin id -> the fault kind that planned it out (cleared when
+        # the shard is restored or drawn back from the spare pool)
+        self._out_reason: Dict[int, str] = {}
         self._pending: Optional[ElasticPlan] = None
+        self._pending_members: List[int] = []
         self._halt: Optional[ElasticPlan] = None
         self.log: List[Dict[str, Any]] = []
         self.fault_events: List[FaultEvent] = []
@@ -219,49 +230,86 @@ class ElasticCoordinator:
         return events
 
     def notice_capacity(self, step: int, shards: Sequence[int]) -> None:
-        """Origin ``shards`` became available again — plan the symmetric
-        scale-up (executed at the next cycle boundary, like any plan)."""
+        """Origin ``shards`` became available again.  A shard whose
+        removal is still armed (in ``spares`` AND ``members``) is simply
+        restored — its removal cancels; a shard already migrated out
+        joins ``returning`` and the symmetric scale-up arms.  Either way
+        the plan is re-armed from the membership invariant, MERGING with
+        (never clobbering) any armed fault plan."""
         fresh = [o for o in shards if o in self.spares]
         if not fresh:
             return
+        trigger = "scale-up"
         for o in fresh:
             self.spares.remove(o)
-        target = sorted(self.members + fresh)
-        plan = self.controller.propose(step, len(target), "scale-up")
-        self._pending = plan
-        self._pending_members = target
+            self._out_reason.pop(o, None)
+            if o not in self.members:
+                self._returning.append(o)
+        if not any(o in self._returning for o in fresh):
+            # pure cancellation of armed removals: if removals for OTHER
+            # shards remain armed, keep their fault trigger on the plan
+            trigger = self._remaining_trigger() or trigger
+        self._rearm(step, trigger)
 
     # ---- fault handling -------------------------------------------------
     def _handle(self, step: int, events: List[FaultEvent]) -> None:
         self.fault_events.extend(events)
-        lost: List[int] = []
+        lost: List[Tuple[int, str]] = []
+        restored = False
         for ev in events:
             if ev.kind in ("dead", "preemption", "straggler"):
-                lost.append(self.members[ev.shard])
-            # 'bandwidth' and 'recovered' are informational here: uniform
-            # drift is the adaptive replanner's job, and a straggler that
-            # recovers before its removal executes is handled below
-            if ev.kind == "recovered" and self._pending is not None:
                 o = self.members[ev.shard]
-                if (self._pending.trigger == "straggler"
-                        and o in getattr(self, "_pending_lost", ())):
-                    self._pending = None   # cancel the armed removal
-        if not lost:
+                # a shard already planned out (armed earlier this cycle
+                # window) must not be re-lost: it is in `spares`, and
+                # counting it again would double-book the removal
+                if o not in self.spares and all(o != p for p, _ in lost):
+                    lost.append((o, ev.kind))
+            # 'bandwidth' is informational here: uniform drift is the
+            # adaptive replanner's job
+            elif ev.kind == "recovered":
+                o = self.members[ev.shard]
+                # a straggler that recovers before its armed removal
+                # executes is restored: out of the spare pool, removal
+                # cancelled (dead/preempted shards never emit 'recovered')
+                if o in self.spares and self._out_reason.get(o) == "straggler":
+                    self.spares.remove(o)
+                    self._out_reason.pop(o, None)
+                    restored = True
+        if not lost and not restored:
             return
-        survivors = [o for o in self.members if o not in lost]
-        trigger = events[-1].kind
-        plan = self.controller.propose(step, len(survivors), trigger)
+        # shards planned out of the mesh move to the spare pool the
+        # moment the plan arms — capacity returns can bring them back
+        for o, kind in lost:
+            self.spares.append(o)
+            self._out_reason[o] = kind
+        trigger = lost[-1][1] if lost else (self._remaining_trigger()
+                                            or "scale-up")
+        self._rearm(step, trigger)
+
+    def _remaining_trigger(self) -> Optional[str]:
+        """Fault kind of the latest still-armed removal, if any."""
+        out = [o for o in self.members if o in self.spares]
+        return self._out_reason.get(out[-1]) if out else None
+
+    def _rearm(self, step: int, trigger: str) -> None:
+        """Recompute the armed plan from the membership invariant
+        ``(members | returning) - spares``; a target identical to the
+        current membership disarms (nothing left to migrate)."""
+        target = sorted(
+            (set(self.members) | set(self._returning)) - set(self.spares)
+        )
+        if target == sorted(self.members):
+            self._pending = None
+            self._pending_members = []
+            return
+        plan = self.controller.propose(step, len(target), trigger)
         if plan.action == "checkpoint-halt":
             self._halt = plan
             self._pending = None
+            self._pending_members = []
             return
         self._pending = plan
-        self._pending_members = survivors
-        self._pending_lost = tuple(lost)
-        # shards planned out of the mesh move to the spare pool the
-        # moment the plan arms — capacity returns can bring them back
-        for o in lost:
-            self.spares.append(o)
+        self._pending_members = target
 
     # ---- migration ------------------------------------------------------
     def maybe_migrate(self, i: int, state):
@@ -311,6 +359,11 @@ class ElasticCoordinator:
         old_rt = self.runtime
         members = sorted(self._pending_members)
         assert len(members) == plan.n_shards, (members, plan)
+        assert len(set(members)) == len(members), members
+        # a plan must never re-seat a shard still in the spare pool — a
+        # cascading fault or capacity return that mutated the pool after
+        # this plan armed would have re-armed it (see _rearm)
+        assert set(members).isdisjoint(self.spares), (members, self.spares)
         rows = [self._rows[o] for o in members]
         new_mesh = self._mesh_for(rows)
         new_layout = build_bucket_layout(
@@ -345,6 +398,8 @@ class ElasticCoordinator:
             "members": tuple(members),
         })
         self.members = members
+        self._returning = [o for o in self._returning if o not in members]
+        self._pending_members = []
         self.runtime = new_rt
         self.monitor.reset(len(members))
         self.controller.adopt(plan)
@@ -356,6 +411,7 @@ class ElasticCoordinator:
             "n_origin": self.n_origin,
             "members": tuple(self.members),
             "spares": tuple(self.spares),
+            "returning": tuple(self._returning),
             "migrations": list(self.log),
             "fault_events": [
                 dataclasses.asdict(e) for e in self.fault_events

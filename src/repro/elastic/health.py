@@ -93,15 +93,24 @@ class HealthMonitor:
         self.reset(n_shards)
 
     # ---- lifecycle ------------------------------------------------------
-    def reset(self, n_shards: int) -> None:
+    def reset(self, n_shards: int, now: Optional[float] = None) -> None:
         """Re-arm for a new shard set (after an elastic mesh change).
-        The event trail survives; all telemetry and status are fresh."""
+        The event trail survives; all telemetry and status are fresh.
+
+        The clock is CONTINUOUS across resets (``now`` overrides it),
+        and every shard gets a liveness stamp at the reset instant — so
+        a shard that never heartbeats after the mesh change (e.g. a
+        returnee that fails to actually come back) accumulates silence
+        from the reset and is declared dead, instead of being skipped
+        forever on ``last_seen is None``."""
         self.n_shards = n_shards
         self.telemetry.rebase(n_shards)
         self.status: List[str] = ["healthy"] * n_shards
         self._slow_streak = [0] * n_shards
         self._ok_streak = [0] * n_shards
-        self._clock = 0.0
+        self._clock = now if now is not None else getattr(self, "_clock", 0.0)
+        for i in range(n_shards):
+            self.telemetry.heartbeat(i, self._clock)
         self._bandwidth_flagged = False
         self._coll_baseline: Optional[float] = None
 
@@ -162,7 +171,7 @@ class HealthMonitor:
         if timeout > 0:
             for i in alive:
                 seen = self.telemetry.last_seen(i)
-                if seen is None:
+                if seen is None:       # unreachable: reset() stamps all
                     continue
                 silence = now - seen
                 if silence > timeout:

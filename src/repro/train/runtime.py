@@ -1608,7 +1608,20 @@ class DeftRuntime:
                         "retrying": retrying,
                     })
                     if not retrying:
-                        return       # abandoned; old schedule keeps running
+                        # abandoned; old schedule keeps running.  Close
+                        # the books so callers reading `info` can tell
+                        # an abandoned build from one that never started
+                        elapsed = time.perf_counter() - t0
+                        info["compile_s"] = elapsed
+                        info["compile_attempts"] = attempt
+                        info["abandoned"] = True
+                        self.swap_log.append({
+                            "step": None, "event": "swap-abandoned",
+                            "error": err, "attempts": attempt,
+                            "elapsed_s": elapsed,
+                            "superseded": self._swap_gen != gen,
+                        })
+                        return
                     time.sleep(retry_backoff_s * attempt)
             info["compile_s"] = time.perf_counter() - t0
             info["compile_attempts"] = attempt + 1

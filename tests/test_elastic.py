@@ -8,6 +8,9 @@
   mesh width change.
 * ElasticController degradation ladder: scale-down (sharded) ->
   fallback-replicated -> checkpoint-halt, all Preserver-gated.
+* Coordinator armed-plan invariants: cascading faults extend (never
+  resurrect), capacity returns merge with (never clobber) a pending
+  fault plan, straggler recovery fully restores the shard.
 * Atomic checkpoints: a truncated (killed-mid-write) newest step is
   skipped and resume picks the previous complete one.
 * Hardened resume: a schedule-digest mismatch falls back to cycle-start
@@ -20,7 +23,8 @@
 * Chaos (subprocess, forced devices): device-drop 4->2 scale-down whose
   post-fault trajectory matches a from-scratch 2-shard run from the
   repacked state, the symmetric 2->4 scale-up, the A->B->A state round
-  trip, and a straggler-triggered 4->3 scale-down.
+  trip, a straggler-triggered 4->3 scale-down, and a cascading
+  two-preemption window folding into one 4->2 scale-down.
 """
 import dataclasses
 import os
@@ -126,6 +130,23 @@ def test_uniform_slowdown_is_bandwidth_not_straggler():
     assert mon.alive_shards() == [0, 1, 2, 3]
 
 
+def test_silent_after_reset_is_declared_dead():
+    """reset() stamps every shard's liveness at the reset instant (clock
+    continuous), so a shard that never heartbeats after a mesh change —
+    e.g. a returnee that fails to actually come back — accumulates
+    silence from the reset and is declared dead, not skipped forever."""
+    mon = HealthMonitor(4)
+    for step in range(8):
+        mon.observe(step, [1.0] * 4)
+    mon.reset(4)
+    events = []
+    for step in range(8, 48):
+        events += mon.observe(step, [1.0, 1.0, 1.0, None])
+    dead = [e for e in events if e.kind == "dead"]
+    assert [e.shard for e in dead] == [3], events
+    assert mon.alive_shards() == [0, 1, 2]
+
+
 def test_preemption_notice_is_immediate_and_single():
     mon = HealthMonitor(2)
     ev = mon.notice_preemption(7, 1, detail="spot reclaim")
@@ -229,6 +250,103 @@ def test_controller_degradation_ladder():
     ctrl.adopt(down)
     assert ctrl.scheduler_cfg == down.scheduler_cfg
     assert len(ctrl.plans) == 4
+
+
+# ---------------------------------------------------------------------------
+# Coordinator armed-plan invariants (planning only, no migration executes)
+# ---------------------------------------------------------------------------
+class _StubMesh:
+    axis_names = ("data", "model")
+
+    def __init__(self, n):
+        self.devices = np.empty((n, 1), dtype=object)
+
+
+class _StubRuntime:
+    """Planning-only stand-in: phase_in_cycle never hits a boundary, so
+    armed plans stay armed and no real mesh/state is needed."""
+
+    flat_state = True
+
+    def __init__(self, n):
+        self.mesh = _StubMesh(n)
+
+    def phase_in_cycle(self, i):
+        return 1
+
+
+def _stub_coord(n=4, hc=None):
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ctrl, _, _ = _controller(cfg, params)
+    return ElasticCoordinator(
+        _StubRuntime(n), ctrl, HealthMonitor(n, hc), params_abs=params,
+    )
+
+
+def test_cascading_faults_never_resurrect_lost_shards():
+    """A second fault while a removal is armed extends the plan from the
+    surviving set — the first casualty (in the spare pool, still in
+    members) must not reappear in the pending membership."""
+    coord = _stub_coord()
+    coord.notice_preemption(5, [3])
+    assert coord._pending is not None and coord._pending.n_shards == 3
+    assert coord._pending_members == [0, 1, 2]
+    coord.notice_preemption(6, [2])
+    assert coord._pending.n_shards == 2
+    assert coord._pending_members == [0, 1]
+    assert set(coord._pending_members).isdisjoint(coord.spares)
+    assert sorted(coord.spares) == [2, 3]
+    # re-noticing an already-planned-out shard changes nothing
+    coord.notice_preemption(7, [3])
+    assert coord._pending.n_shards == 2 and sorted(coord.spares) == [2, 3]
+
+
+def test_capacity_return_merges_with_armed_fault_plan():
+    """Capacity returning for one armed-out shard cancels just that
+    removal; the other fault's removal stays armed — no duplicate
+    members, no clobbered fault plan."""
+    coord = _stub_coord()
+    coord.notice_preemption(5, [3])
+    coord.notice_preemption(6, [2])
+    coord.notice_capacity(7, [3])          # 3 restored before execution
+    assert coord._pending is not None
+    assert coord._pending_members == [0, 1, 3]
+    assert len(set(coord._pending_members)) == 3
+    assert coord._pending.n_shards == 3
+    assert coord._pending.trigger == "preemption"  # 2's removal remains
+    assert coord.spares == [2]
+    coord.notice_capacity(8, [2])          # full cancellation: disarm
+    assert coord._pending is None and coord.spares == []
+    assert coord._pending_members == [] and coord._returning == []
+    assert coord.members == [0, 1, 2, 3]
+
+
+def test_straggler_recovery_cancels_and_cleans_spares():
+    """A straggler recovering before its armed removal executes is fully
+    restored: out of the spare pool, plan disarmed, no stale reason —
+    and a later capacity notice naming it is a no-op, not a
+    duplicate-member scale-up plan."""
+    hc = HealthConfig(warmup_steps=1, straggler_ratio=1.5,
+                      straggler_patience=2, recovered_ratio=1.3,
+                      recovered_patience=2)
+    coord = _stub_coord(hc=hc)
+    step = 0
+    while coord._pending is None:
+        coord.observe(step, [1.0, 1.0, 4.0, 1.0])
+        step += 1
+        assert step < 20, "straggler never detected"
+    assert coord._pending.trigger == "straggler"
+    assert coord.spares == [2] and coord._out_reason == {2: "straggler"}
+    while coord._pending is not None:
+        coord.observe(step, [1.0] * 4)
+        step += 1
+        assert step < 60, "straggler never recovered"
+    assert coord.spares == [] and coord._out_reason == {}
+    assert coord._pending_members == []
+    assert coord.stats()["spares"] == ()
+    coord.notice_capacity(step, [2])
+    assert coord._pending is None
 
 
 # ---------------------------------------------------------------------------
@@ -340,8 +458,9 @@ def test_prepare_swap_failure_exhausted_keeps_old_plan(single_mesh):
 
     rt._compile_entries = always_fail
     with jax.set_mesh(single_mesh):
-        rt.prepare_swap(sched_b, state, make_batch(cfg, 0, 0, B, S),
-                        background=True, retries=1, retry_backoff_s=0.01)
+        info = rt.prepare_swap(sched_b, state, make_batch(cfg, 0, 0, B, S),
+                               background=True, retries=1,
+                               retry_backoff_s=0.01)
         rt.wait_swap_ready(timeout=300)
         assert not rt.swap_ready()
         fails = [e for e in rt.swap_log
@@ -349,6 +468,13 @@ def test_prepare_swap_failure_exhausted_keeps_old_plan(single_mesh):
         assert len(fails) == 2                  # first try + one retry
         assert not fails[-1]["retrying"]
         assert "injected compile failure" in rt.last_swap_error
+        # the abandonment closes the books: callers reading `info` can
+        # tell an abandoned build from one that never started
+        assert info["abandoned"] is True
+        assert info["compile_attempts"] == 2 and info["compile_s"] > 0
+        ab = [e for e in rt.swap_log if e.get("event") == "swap-abandoned"]
+        assert len(ab) == 1 and ab[0]["attempts"] == 2
+        assert ab[0]["elapsed_s"] > 0 and not ab[0]["superseded"]
         # old plan keeps stepping across what would have been the boundary
         for step in range(2 * old_period + 1):
             state, m = rt.step(step, state, make_batch(cfg, 0, step, B, S))
@@ -645,6 +771,45 @@ with jax.set_mesh(mesh4):
     print("ELASTIC_ROUNDTRIP_OK", flush=True)
 """
 
+_CASCADE_SCRIPT = _COMMON + r"""
+B = 8
+cfg, params, rt, coord, sched, mesh4 = setup(B)
+
+with jax.set_mesh(mesh4):
+    state = rt.init_state(jax.random.PRNGKey(0))
+    for step in range(2):
+        state = coord.maybe_migrate(step, state)
+        state, m = coord.runtime.step(step, state,
+                                      make_batch(cfg, 0, step, B, S))
+        coord.observe(step, [1.0] * 4)
+
+    # two faults in the same cycle window: the second plan must extend
+    # the armed removal from the surviving set, never re-seat the first
+    # casualty on a dead device
+    coord.notice_preemption(2, [3])
+    assert coord._pending is not None and coord._pending.n_shards == 3
+    coord.notice_preemption(2, [2])
+    assert coord._pending.n_shards == 2
+    assert coord._pending_members == [0, 1]
+    assert set(coord._pending_members).isdisjoint(coord.spares)
+
+    N = 2 + 3 * sched.period
+    for step in range(2, N):
+        state = coord.maybe_migrate(step, state)
+        state, m = coord.runtime.step(step, state,
+                                      make_batch(cfg, 0, step, B, S))
+        coord.observe(step, [1.0] * 4)
+    downs = [e for e in coord.log if e["action"] == "scale-down"]
+    assert len(downs) == 1, coord.log       # ONE migration covers both
+    assert downs[0]["trigger"] == "preemption"
+    assert (downs[0]["old_shards"], downs[0]["new_shards"]) == (4, 2)
+    assert coord.members == [0, 1] and sorted(coord.spares) == [2, 3]
+    # the survivor mesh is rows 0,1 of the origin mesh — no dead devices
+    assert (coord.runtime.mesh.devices == mesh4.devices[:2, :]).all()
+    assert np.isfinite(float(m["loss"]))
+    print("CASCADE_OK", flush=True)
+"""
+
 _STRAGGLER_SCRIPT = _COMMON + r"""
 B = 12    # divisible by 4 and by the surviving 3 shards
 cfg, params, rt, coord, sched, mesh4 = setup(B)
@@ -696,6 +861,17 @@ def test_chaos_device_drop_scale_down_up_roundtrip(tmp_path):
     for marker in ("ELASTIC_DOWN_OK", "ELASTIC_REF_MATCH",
                    "ELASTIC_UP_OK", "ELASTIC_ROUNDTRIP_OK"):
         assert marker in out.stdout, (marker, out.stdout[-2000:])
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_chaos_cascading_faults_one_scale_down(tmp_path):
+    """Two preemptions in the same cycle window fold into ONE armed
+    4->2 scale-down that excludes both casualties; the first lost shard
+    is never resurrected onto the survivor mesh."""
+    out = _run_chaos(tmp_path, _CASCADE_SCRIPT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "CASCADE_OK" in out.stdout, out.stdout[-2000:]
 
 
 @pytest.mark.slow
