@@ -127,6 +127,25 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
         "replan_events": None,
         "knapsack_cache_trail": None,
     },
+    "BENCH_obs.json": {
+        "scenario": {"drop_step": None, "drop_scale": None,
+                     "coverage_rate": None, "steps": None},
+        "closure": {"sim_iteration_time": None, "span_iteration_time": None,
+                    "iteration_time_exact": None, "sim_bubble_fraction": None,
+                    "span_bubble_fraction": None, "bubble_abs_error": None,
+                    "planned_cr": None, "measured_cr": None,
+                    "cr_error": None, "n_spans": None},
+        "attribution": {"comp_scale": None, "comm_scale": None,
+                        "max_divergence": None, "cr_error": None,
+                        "bubble_fraction": None,
+                        "capacity_utilization": None},
+        "divergence_lead": {"ema_replan_step": None,
+                            "divergence_replan_step": None,
+                            "lead_steps": None},
+        "tracing": {"steps_timed": None, "steps_per_s_plain": None,
+                    "steps_per_s_traced": None, "overhead_pct": None,
+                    "spans_recorded": None, "span_kinds": None},
+    },
     "BENCH_elastic.json": {
         "scenario": {"n_shards": None, "drop_step": None,
                      "drop_shards": None, "straggler_shard": None,

@@ -21,7 +21,7 @@ sys.path.insert(0, _ROOT)
 
 
 def _sections(smoke: bool):
-    from benchmarks import adapt_bench, elastic_bench, runtime_bench
+    from benchmarks import adapt_bench, elastic_bench, obs_bench, runtime_bench
 
     runtime = (
         "runtime (fused DeftRuntime + solver, BENCH_runtime.json)",
@@ -35,8 +35,12 @@ def _sections(smoke: bool):
         "elastic (fault detection + scale-down repack, BENCH_elastic.json)",
         elastic_bench.run,
     )
+    obs = (
+        "obs (attribution closure + tracing overhead, BENCH_obs.json)",
+        obs_bench.run,
+    )
     if smoke:
-        return [runtime, adapt, elastic]
+        return [runtime, adapt, elastic, obs]
 
     from benchmarks import (
         fig10_time_to_solution,
@@ -61,6 +65,7 @@ def _sections(smoke: bool):
         runtime,
         adapt,
         elastic,
+        obs,
     ]
 
 
@@ -74,6 +79,7 @@ def main(argv=None) -> None:
     if args.smoke:
         os.environ.setdefault("BENCH_RUNTIME_STEPS", "6")
         os.environ.setdefault("BENCH_ADAPT_STEPS", "120")
+        os.environ.setdefault("BENCH_OBS_STEPS", "20")
 
     t0 = time.time()
     failures = 0

@@ -1,14 +1,49 @@
 """Paper Table I analog: forward/backward/communication time + coverage
 rate, for the paper's three regimes AND every assigned architecture under
-the production hardware model."""
+the production hardware model.
+
+``--measured`` additionally runs each regime's accuracy-checked DeFT
+schedule through the discrete-event simulator and reads the coverage
+rate back from the resulting spans via the observability layer — the
+profile column says what the plan assumed, the measured column says what
+the executed timeline actually transmitted and overlapped."""
 from __future__ import annotations
 
-from benchmarks.common import REGIMES, emit, profile_regime, timed
+from benchmarks.common import (
+    REGIMES,
+    deft_with_preserver,
+    emit,
+    profile_regime,
+    timed,
+)
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.profiler import HardwareModel, profile_arch
 
 
-def run() -> None:
+def _measured_row(regime) -> None:
+    from repro.core.simulator import simulate_deft
+    from repro.obs import sim_metrics_from_spans, spans_from_sim
+
+    def measure():
+        prof = profile_regime(regime)
+        t = prof.times
+        plans, scfg = deft_with_preserver(t)
+        sim = simulate_deft(t, plans, mu=scfg.mu,
+                            heterogeneous=scfg.heterogeneous,
+                            keep_timeline=True)
+        return t, sim_metrics_from_spans(spans_from_sim(sim), mu=scfg.mu)
+
+    (t, m), us = timed(measure)
+    emit(
+        f"table1/measured/{regime.name}", us,
+        f"planned_CR={t.coverage_rate:.2f} measured_CR="
+        f"{m.coverage_rate:.2f} err="
+        f"{abs(m.coverage_rate - t.coverage_rate) / t.coverage_rate:.1%} "
+        f"bubble={m.bubble_fraction:.1%}",
+    )
+
+
+def run(measured: bool = False) -> None:
     for regime in REGIMES:
         prof, us = timed(profile_regime, regime)
         t = prof.times
@@ -18,6 +53,8 @@ def run() -> None:
             f"Tb={t.bwd_total*1e3:.1f}ms Tc={t.comm_total*1e3:.1f}ms "
             f"CR={t.coverage_rate:.2f}",
         )
+        if measured:
+            _measured_row(regime)
     hw = HardwareModel(dp_degree=16)
     for arch in ARCH_NAMES:
         prof, us = timed(
@@ -34,4 +71,10 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", action="store_true",
+                    help="also read the coverage rate back from the "
+                         "simulated timeline via the obs layer")
+    run(measured=ap.parse_args().measured)

@@ -26,6 +26,7 @@ from repro.core.policies import ALL_BASELINES
 from repro.core.profiler import HardwareModel, profile_arch
 from repro.core.scheduler import DeftScheduler
 from repro.core.simulator import simulate_baseline, simulate_deft
+from repro.obs import ManualClock, Tracer, format_event, spans_from_sim
 
 WIDTH = 100
 
@@ -47,7 +48,7 @@ def render(timeline, t_end, label):
 
 
 def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
-                  steps: int) -> None:
+                  steps: int, tracer=None) -> None:
     """Replay the control plane on a synthetic bandwidth drop and print
     every replan event — the terminal view of the Fig. 7 loop acting."""
     from repro.core.deft import feedback_solve
@@ -64,9 +65,10 @@ def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
     src = SyntheticTelemetrySource(
         times, BandwidthDrop(step=drop_step, comm_scale=drop_scale)
     )
-    ctrl = AdaptiveController(times, schedule, scfg, walk=walk)
+    ctrl = AdaptiveController(times, schedule, scfg, walk=walk,
+                              tracer=tracer)
     run_control_loop(ctrl, src, steps,
-                     on_event=lambda e: print(e.describe()))
+                     on_event=lambda e: print(format_event(e)))
     if not ctrl.events:
         print("(no drift detected — no replan events)")
     else:
@@ -74,8 +76,37 @@ def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
               f"{sum(1 for e in ctrl.events if e.changed)} hot-swap(s)")
 
 
+def explore_elastic(steps: int, tracer=None) -> None:
+    """Replay the health monitor on a synthetic fault sequence — one
+    straggler excursion and one silent (dead) shard — printing every
+    detection through the same formatter as the replan/repack surfaces."""
+    from repro.elastic import HealthConfig, HealthMonitor
+
+    print("\n== elastic health replay: straggler @ 1/3, "
+          "silent shard @ 2/3 ==")
+    mon = HealthMonitor(
+        4,
+        HealthConfig(warmup_steps=1, straggler_patience=2,
+                     recovered_patience=2, timeout_factor=4.0),
+        tracer=tracer,
+    )
+    t_strag, t_dead = steps // 3, 2 * steps // 3
+    base = 0.1
+    n_events = 0
+    for i in range(steps):
+        walls = [base] * 4
+        if i >= t_strag:
+            walls[1] = base * (3.0 if i < t_dead else 1.0)
+        if i >= t_dead:
+            walls[3] = None
+        for ev in mon.observe(i, walls):
+            print(format_event(ev))
+            n_events += 1
+    print(f"{n_events} fault event(s), status={mon.status}")
+
+
 def explore_repartition(arch: str, drop_step: int, drop_scale: float,
-                        steps: int) -> None:
+                        steps: int, tracer=None) -> None:
     """Replay the control plane WITH the candidate-partition path on the
     smoke-reduced config: partition-changing replans print old/new
     n_buckets + shard count + the Preserver verdict of the winner, and
@@ -122,6 +153,8 @@ def explore_repartition(arch: str, drop_step: int, drop_scale: float,
           f"CR={times.coverage_rate:.2f}")
 
     def time_repack(event) -> None:
+        from repro.obs import Span
+
         lay_a = build_bucket_layout(params, tuple(ctrl_prev["bucket_of"]),
                                     ctrl_prev["n_buckets"])
         lay_b = build_bucket_layout(params, event.partition.bucket_of,
@@ -142,15 +175,24 @@ def explore_repartition(arch: str, drop_step: int, drop_scale: float,
         t0 = time.perf_counter()
         out = f(bufs1, bufs1, bufs1, bufs2, bufs2)
         jax.block_until_ready(out)
-        ms = (time.perf_counter() - t0) * 1e3
-        print(f"    repack {lay_a.n_buckets}->{lay_b.n_buckets} buckets "
-              f"(1/{lay_a.shards} -> 1/{lay_b.shards} shards, "
-              f"{tr.moved_elems:,} elems moved): {ms:.1f} ms")
+        dt = time.perf_counter() - t0
+        sp = Span(
+            "repack",
+            f"repack {lay_a.n_buckets}->{lay_b.n_buckets} buckets",
+            0.0, dt, step=event.step,
+            attrs=(("moved_elems", tr.moved_elems),
+                   ("shards", f"{lay_a.shards}->{lay_b.shards}")),
+        )
+        print("    " + format_event(sp))
+        if tracer is not None:
+            tr0 = tracer.now()
+            tracer.add("repack", sp.name, tr0, tr0 + dt,
+                       step=event.step, **sp.args)
 
     ctrl_prev = {"bucket_of": bucket_of, "n_buckets": nb}
 
     def on_event(e):
-        print(e.describe())
+        print(format_event(e))
         if e.candidate_solves:
             print(candidate_solve_table(e.candidate_solves))
         if e.partition_changed:
@@ -162,7 +204,8 @@ def explore_repartition(arch: str, drop_step: int, drop_scale: float,
         times, BandwidthDrop(step=drop_step, comm_scale=drop_scale)
     )
     ctrl = AdaptiveController(times, schedule, scfg, walk=walk,
-                              repartitioner=rp, bucket_of=bucket_of)
+                              repartitioner=rp, bucket_of=bucket_of,
+                              tracer=tracer)
     run_control_loop(ctrl, src, steps, on_event=on_event,
                      run_base_fn=lambda e: rp.base_times_for(e.partition))
     reparts = ctrl.stats()["repartitions"]
@@ -185,7 +228,18 @@ def main() -> None:
     ap.add_argument("--drop-step", type=int, default=40)
     ap.add_argument("--drop-scale", type=float, default=3.0)
     ap.add_argument("--adapt-steps", type=int, default=120)
+    ap.add_argument("--elastic", action="store_true",
+                    help="also replay the health monitor on a synthetic "
+                         "fault sequence (straggler + dead shard)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="export the DeFT simulator timeline plus every "
+                         "replayed control-plane event as a Chrome-trace "
+                         "(Perfetto-loadable) JSON")
     args = ap.parse_args()
+    # ManualClock: the explorer is pure replay, so the exported trace is
+    # bit-reproducible; sim spans carry their own sim-time bounds and
+    # control events land after the simulated window
+    tracer = Tracer(clock=ManualClock()) if args.trace else None
 
     cfg = get_config(args.arch)
     hw = HardwareModel(dp_degree=16)
@@ -213,12 +267,25 @@ def main() -> None:
            f"deft: iter={r.iteration_time*1e3:.1f}ms "
            f"bubble={r.bubble_fraction:.2f} "
            f"upd/iter={r.updates_per_iteration:.2f}")
+    if tracer is not None:
+        for sp in spans_from_sim(r):
+            tracer.add(sp.kind, sp.name, sp.t0, sp.t1,
+                       step=sp.step, track=sp.track, **sp.args)
+        tracer.clock.advance(t_end)     # control events after the window
 
     if args.adapt:
-        explore_adapt(t, args.drop_step, args.drop_scale, args.adapt_steps)
+        explore_adapt(t, args.drop_step, args.drop_scale, args.adapt_steps,
+                      tracer=tracer)
         if args.adapt_repartition:
             explore_repartition(args.arch, args.drop_step,
-                                args.drop_scale, args.adapt_steps)
+                                args.drop_scale, args.adapt_steps,
+                                tracer=tracer)
+    if args.elastic:
+        explore_elastic(args.adapt_steps, tracer=tracer)
+
+    if tracer is not None:
+        tracer.export_chrome_trace(args.trace)
+        print(f"\ntrace -> {args.trace} ({len(tracer)} spans)")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,21 @@ if [[ "$mode" == "--smoke" ]]; then
   echo "== smoke benchmarks (BENCH_*.json + schema check) =="
   python benchmarks/run.py --smoke
   python scripts/check_bench_schema.py
+  echo "== traced smoke loop (trace_smoke.json artifact) =="
+  # exercises the live trace path end to end: adaptive drop -> replan ->
+  # hot-swap, exported as a Perfetto-loadable Chrome trace (§11)
+  python -m repro.launch.train --smoke --scheduler deft --steps 56 \
+    --adapt --adapt-repartition --adapt-drop-step 12 \
+    --adapt-drop-scale 6.0 --trace trace_smoke.json
+  python - <<'PY'
+import json
+kinds = {e.get("cat") for e in json.load(open("trace_smoke.json"))["traceEvents"]}
+need = {"step", "phase", "collective-group", "swap-compile",
+        "swap-install", "replan", "repack"}
+missing = need - kinds
+assert not missing, f"trace_smoke.json missing span kinds: {missing}"
+print(f"trace_smoke.json OK ({sorted(k for k in kinds if k)})")
+PY
   echo "verify.sh --smoke: OK"
   exit 0
 fi

@@ -46,6 +46,7 @@ from repro.core.preserver import (
     estimate_walk_params_from_losses,
 )
 from repro.core.scheduler import DeftSchedule, SchedulerConfig
+from repro.obs.trace import Tracer
 
 if TYPE_CHECKING:   # the controller only duck-types the repartitioner
     from repro.adapt.repartition import PartitionCandidate, Repartitioner
@@ -62,6 +63,12 @@ class AdaptConfig:
     # drift detection
     check_every: int = 8          # steps between calibration passes
     drift_threshold: float = 0.25 # |scale - 1| that triggers a replan
+    # what the drift screen + calibration consume (DESIGN.md §11):
+    # 'ema'        — per-phase EMA wall times (legacy; smooth, laggy)
+    # 'divergence' — the obs layer's latest-sample per-phase durations
+    #                (raw predicted-vs-actual divergence; reacts a full
+    #                EMA settling time earlier after a step change)
+    drift_source: str = "ema"
     cooldown_steps: int = 16      # min steps between replans
     min_loss_samples: int = 12    # before the measured-WalkParams check
     # replanning (mirrors plan_deft defaults)
@@ -142,8 +149,10 @@ class AdaptiveController:
         cfg: Optional[AdaptConfig] = None,
         repartitioner: Optional["Repartitioner"] = None,
         bucket_of: Optional[Sequence[int]] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.cfg = cfg or AdaptConfig()
+        self.tracer = tracer
         self.times = times                   # what the installed plan assumed
         self.schedule = schedule
         self.scheduler_cfg = scheduler_cfg
@@ -186,10 +195,13 @@ class AdaptiveController:
         wall_s: float,
         loss: Optional[float] = None,
         updated: bool = False,
+        cold: Optional[bool] = None,
     ) -> Optional[ReplanEvent]:
         """Feed one step's telemetry; returns a ReplanEvent when this step
-        triggered a replan (caller decides whether to hot-swap)."""
-        self.telemetry.record(step, phase, wall_s, loss, updated)
+        triggered a replan (caller decides whether to hot-swap).  ``cold``
+        is the runtime's first-dispatch tag (``last_dispatch_first``) —
+        see :meth:`Telemetry.record`."""
+        self.telemetry.record(step, phase, wall_s, loss, updated, cold=cold)
         if step - self._last_check_step < self.cfg.check_every:
             return None
         if step - self._last_replan_step < self.cfg.cooldown_steps:
@@ -200,9 +212,22 @@ class AdaptiveController:
         return self._check(step)
 
     # ---- drift detection -------------------------------------------------
+    def measured_phase_durations(self) -> List[Optional[float]]:
+        """Per-phase durations the drift screen and calibration consume:
+        the phase EMAs (``drift_source='ema'``) or the obs layer's
+        latest-sample view (``'divergence'`` — no smoothing lag)."""
+        if self.cfg.drift_source == "divergence":
+            # deferred: obs.attribution imports adapt.calibrate, so a
+            # top-level import here would be circular via the packages
+            from repro.obs.attribution import latest_phase_durations
+            return latest_phase_durations(
+                self.telemetry.samples(), self.schedule.period
+            )
+        return self.telemetry.phase_times()
+
     def duration_deviation(self) -> float:
         """Cheap steady-state screen: largest relative deviation of a
-        phase's measured EMA from the planned duration.  Only when this
+        phase's measured duration from the planned one.  Only when this
         exceeds the drift threshold is the full 2-D calibration fit worth
         paying for (both are off the hot path; this keeps the common
         nothing-drifted check at ~zero cost)."""
@@ -210,7 +235,7 @@ class AdaptiveController:
             self.times, self.scheduler_cfg, self.schedule.period
         )
         dev = 0.0
-        for p, m in zip(planned, self.telemetry.phase_times()):
+        for p, m in zip(planned, self.measured_phase_durations()):
             if m is not None and p > 1e-12:
                 dev = max(dev, abs(m - p) / p)
         return dev
@@ -229,7 +254,7 @@ class AdaptiveController:
                 self.times,
                 self.scheduler_cfg,
                 self.schedule.period,
-                self.telemetry.phase_times(),
+                self.measured_phase_durations(),
             )
             if profile.drift > self.cfg.drift_threshold:
                 trigger = "timing-drift"
@@ -249,7 +274,7 @@ class AdaptiveController:
                 self.times,
                 self.scheduler_cfg,
                 self.schedule.period,
-                self.telemetry.phase_times(),
+                self.measured_phase_durations(),
             )
         return self._replan(step, trigger, profile, walk)
 
@@ -272,6 +297,7 @@ class AdaptiveController:
         walk: WalkParams,
     ) -> ReplanEvent:
         t0 = time.perf_counter()
+        tr0 = self.tracer.now() if self.tracer is not None else 0.0
         chosen: Optional["PartitionCandidate"] = None
         solves: Tuple = ()
         new_times = profile.times
@@ -344,6 +370,19 @@ class AdaptiveController:
             partition=chosen,
             candidate_solves=solves,
         )
+        if self.tracer is not None:
+            # the ReplanEvent as a trace span covering the solve
+            self.tracer.add(
+                "replan", trigger, tr0, self.tracer.now(), step=step,
+                comp_scale=profile.comp_scale,
+                comm_scale=profile.comm_scale,
+                old_coverage_rate=event.old_coverage_rate,
+                new_coverage_rate=event.new_coverage_rate,
+                old_period=event.old_period,
+                new_period=event.new_period,
+                changed=event.changed,
+                repartition=event.partition_changed,
+            )
         self.events.append(event)
         self._last_replan_step = step
         # the calibrated profile becomes the baseline the next check

@@ -81,15 +81,29 @@ class Telemetry:
         wall_s: float,
         loss: Optional[float] = None,
         updated: bool = False,
+        cold: Optional[bool] = None,
     ) -> StepSample:
+        """``cold`` is the runtime's first-dispatch tag (DESIGN.md §11):
+        ``True`` means this wall time includes an executable's one-off
+        lazy work and must never enter the EMAs.  When the tag is
+        available (not ``None``) it REPLACES the fixed ``warmup_steps``
+        count — warm samples enter the EMAs immediately — while the
+        rebase ``extra_warmup`` window (``_since_rebase <= 0``) still
+        guards the old schedule's tail steps after a hot-swap.  With
+        ``cold=None`` (no tag) the legacy fixed-count skip applies."""
         sample = StepSample(step, phase, wall_s, loss, updated)
         self._ring.append(sample)
         self.n_recorded += 1
         if loss is not None:
             self._losses.append(float(loss))
         self._since_rebase += 1
-        if self._since_rebase <= self.cfg.warmup_steps:
-            return sample                      # warm-up skip
+        if cold is True:
+            return sample                      # first-dispatch pollution
+        if cold is None:
+            if self._since_rebase <= self.cfg.warmup_steps:
+                return sample                  # warm-up skip (fixed count)
+        elif self._since_rebase <= 0:
+            return sample                      # post-rebase tail window
         if 0 <= phase < self.n_phases:
             prev = self._ema[phase]
             a = self.cfg.ema_alpha

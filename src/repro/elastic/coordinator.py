@@ -54,6 +54,7 @@ from repro.checkpoint.checkpoint import (
 from repro.elastic.controller import ElasticController, ElasticPlan
 from repro.elastic.health import FaultEvent, HealthMonitor
 from repro.launch.mesh import make_elastic_mesh
+from repro.obs.trace import Tracer
 from repro.train.bucketing import (
     build_bucket_layout,
     build_layout_transition,
@@ -138,6 +139,7 @@ class ElasticCoordinator:
         checkpoint_dir: str = "",
         mesh_for: Optional[Callable] = None,
         compile_on_migrate: bool = True,
+        tracer: Optional[Tracer] = None,
     ):
         if not runtime.flat_state:
             raise ValueError(
@@ -183,6 +185,16 @@ class ElasticCoordinator:
         self._halt: Optional[ElasticPlan] = None
         self.log: List[Dict[str, Any]] = []
         self.fault_events: List[FaultEvent] = []
+        # detection -> arm -> migrate lifecycle mirrors into one trace
+        # (DESIGN.md §11): default to the runtime's tracer so elastic
+        # events land next to the step/phase spans they interrupt.
+        # Compare against None, never truthiness — an empty Tracer has
+        # __len__ == 0 and would be silently replaced by a private one
+        if tracer is None:
+            tracer = getattr(runtime, "tracer", None)
+        self.tracer = tracer if tracer is not None else Tracer(capacity=1024)
+        if self.monitor.tracer is None:
+            self.monitor.tracer = self.tracer
         if monitor.n_shards != len(self.members):
             monitor.reset(len(self.members))
 
@@ -299,6 +311,10 @@ class ElasticCoordinator:
             (set(self.members) | set(self._returning)) - set(self.spares)
         )
         if target == sorted(self.members):
+            if self._pending is not None:
+                self.tracer.instant(
+                    "elastic", "disarm", step=step, trigger=trigger,
+                )
             self._pending = None
             self._pending_members = []
             return
@@ -307,9 +323,18 @@ class ElasticCoordinator:
             self._halt = plan
             self._pending = None
             self._pending_members = []
+            self.tracer.instant(
+                "elastic", "arm-checkpoint-halt", step=step,
+                trigger=trigger, detected_step=plan.step,
+            )
             return
         self._pending = plan
         self._pending_members = target
+        self.tracer.instant(
+            "elastic", f"arm-{plan.action}", step=step, trigger=trigger,
+            detected_step=plan.step, new_shards=plan.n_shards,
+            new_period=plan.schedule.period if plan.schedule else None,
+        )
 
     # ---- migration ------------------------------------------------------
     def maybe_migrate(self, i: int, state):
@@ -340,6 +365,10 @@ class ElasticCoordinator:
             "detected_step": plan.step, "trigger": plan.trigger,
             "checkpoint": path,
         })
+        self.tracer.instant(
+            "elastic", "checkpoint-halt", step=i, trigger=plan.trigger,
+            detected_step=plan.step, checkpoint=path,
+        )
         raise ElasticHalt(i, path)
 
     def emergency_checkpoint(self, step: int, state) -> str:
@@ -356,6 +385,7 @@ class ElasticCoordinator:
 
     def _execute(self, i: int, state, plan: ElasticPlan):
         t_mig = time.perf_counter()
+        tr0 = self.tracer.now()
         old_rt = self.runtime
         members = sorted(self._pending_members)
         assert len(members) == plan.n_shards, (members, plan)
@@ -397,6 +427,13 @@ class ElasticCoordinator:
             "migrate_s": time.perf_counter() - t_mig,
             "members": tuple(members),
         })
+        self.tracer.add(
+            "elastic", f"migrate-{plan.action}", tr0, self.tracer.now(),
+            step=i, trigger=plan.trigger, detected_step=plan.step,
+            old_shards=len(self.members), new_shards=plan.n_shards,
+            old_period=old_rt.period, new_period=new_rt.period,
+            repack_s=repack_s, compile_s=compile_s,
+        )
         self.members = members
         self._returning = [o for o in self._returning if o not in members]
         self._pending_members = []

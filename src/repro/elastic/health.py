@@ -33,6 +33,7 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 from repro.adapt.telemetry import ShardTelemetry, TelemetryConfig
+from repro.obs.trace import Tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,8 +81,17 @@ class HealthMonitor:
     Every transition fires exactly one :class:`FaultEvent`.
     """
 
-    def __init__(self, n_shards: int, cfg: Optional[HealthConfig] = None):
+    def __init__(
+        self,
+        n_shards: int,
+        cfg: Optional[HealthConfig] = None,
+        tracer: Optional[Tracer] = None,
+    ):
         self.cfg = cfg or HealthConfig()
+        # detection events mirror into the shared trace (DESIGN.md §11);
+        # timestamps come from the TRACER's clock so one trace stays in
+        # one clock domain — the monitor's replay clock rides as an attr
+        self.tracer = tracer
         self.telemetry = ShardTelemetry(
             n_shards,
             TelemetryConfig(
@@ -91,6 +101,14 @@ class HealthMonitor:
         )
         self.events: List[FaultEvent] = []
         self.reset(n_shards)
+
+    def _emit(self, ev: FaultEvent) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(
+                "elastic", f"detect-{ev.kind}", step=ev.step,
+                shard=ev.shard, metric=ev.metric,
+                monitor_clock=self._clock,
+            )
 
     # ---- lifecycle ------------------------------------------------------
     def reset(self, n_shards: int, now: Optional[float] = None) -> None:
@@ -126,6 +144,7 @@ class HealthMonitor:
         self.status[shard] = "preempted"
         ev = FaultEvent(step, "preemption", shard, detail=detail)
         self.events.append(ev)
+        self._emit(ev)
         return ev
 
     # ---- the per-step hook ----------------------------------------------
@@ -231,6 +250,8 @@ class HealthMonitor:
                 self._bandwidth_flagged = False
 
         self.events.extend(out)
+        for ev in out:
+            self._emit(ev)
         return out
 
     # ---- queries --------------------------------------------------------

@@ -55,6 +55,7 @@ from repro.elastic import (
 )
 from repro.models.model import init_params
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.obs import Tracer, format_event
 from repro.optim.optimizers import adamw
 from repro.sharding.specs import needs_fsdp
 from repro.train.bucketing import (
@@ -229,6 +230,10 @@ def main() -> None:
     ap.add_argument("--data", type=int, default=0, help="debug mesh data axis")
     ap.add_argument("--model", type=int, default=0, help="debug mesh model axis")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record step/phase/collective/control-plane "
+                         "spans and export a Chrome-trace (Perfetto-"
+                         "loadable) JSON to this path")
     ap.add_argument("--ckpt", default="", help="checkpoint dir (optional)")
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest checkpoint from --ckpt "
@@ -247,6 +252,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
+    # one tracer for the whole run: runtime step/phase spans, controller
+    # replans, elastic lifecycle — all in one clock domain (DESIGN.md §11)
+    tracer = Tracer() if args.trace else None
     n_dev = jax.device_count()
     if args.production_mesh:
         mesh = make_production_mesh()
@@ -300,7 +308,8 @@ def main() -> None:
             compute_dtype = (jnp.bfloat16 if args.compute_dtype == "bf16"
                              else None)
             runtime = DeftRuntime(cfg, opt, schedule, layout, mesh,
-                                  fsdp=fsdp, compute_dtype=compute_dtype)
+                                  fsdp=fsdp, compute_dtype=compute_dtype,
+                                  tracer=tracer)
             state = None
             if args.resume and args.ckpt:
                 state, start_step = restore_runtime_state(
@@ -352,6 +361,7 @@ def main() -> None:
                                 cooldown_steps=2 * schedule.period),
                 repartitioner=repartitioner,
                 bucket_of=bucket_of if repartitioner else None,
+                tracer=runtime.tracer,
             )
             if args.adapt_drop_step > 0:
                 telemetry_src = SyntheticTelemetrySource(
@@ -465,6 +475,9 @@ def main() -> None:
                 halted = True
                 last_step = step - 1
                 break
+            if tracer is not None:
+                tracer.add("step", f"step{step}", t_s, tracer.now(),
+                           step=step)
             if elastic is not None:
                 jax.block_until_ready(m["loss"])
                 wall = time.perf_counter() - t_s
@@ -473,7 +486,7 @@ def main() -> None:
                     if obs.notices:
                         for ev in elastic.notice_preemption(
                                 step, obs.notices):
-                            print(f"elastic: {ev.describe()}")
+                            print(format_event(ev))
                     if obs.returned:
                         elastic.notice_capacity(step, obs.returned)
                         print(f"elastic: capacity returned: "
@@ -482,7 +495,7 @@ def main() -> None:
                 else:
                     walls = (wall,) * elastic.n_origin
                 for ev in elastic.observe(step, walls):
-                    print(f"elastic: {ev.describe()}")
+                    print(format_event(ev))
             if controller is not None:
                 if telemetry_src is not None:
                     wall = telemetry_src.wall_time(
@@ -490,14 +503,19 @@ def main() -> None:
                         runtime.last_phase, solve_times=controller.times,
                         run_base=run_base,
                     )
+                    cold = None     # synthetic walls: no dispatch pollution
                 else:
                     jax.block_until_ready(m["loss"])
                     wall = time.perf_counter() - t_s
+                    # first-dispatch tag: a wall that includes an
+                    # executable's one-off lazy work never enters the EMAs
+                    cold = runtime.last_dispatch_first
                 event = controller.observe(
-                    step, runtime.last_phase, wall, loss=float(m["loss"])
+                    step, runtime.last_phase, wall, loss=float(m["loss"]),
+                    cold=cold,
                 )
                 if event is not None:
-                    print(f"adapt: {event.describe()}")
+                    print(format_event(event))
                     if event.changed:
                         new_layout = None
                         if repartitioner is not None:
@@ -548,12 +566,9 @@ def main() -> None:
                   f"{st['cached_phases']} cached phases, "
                   f"{st['steps_per_s']:.2f} steps/s (dispatch)")
             for sw in st["swap_log"]:
-                if sw.get("repack_s") is not None:
-                    print(f"  repack @ step {sw['step']}: "
-                          f"{sw['n_buckets']} buckets, 1/{sw['shards']} "
-                          f"shards, {sw['repack_s'] * 1e3:.1f} ms")
+                print("  " + format_event(sw))
             for ev in (controller.events if controller else []):
-                print(f"  {ev.describe()}")
+                print("  " + format_event(ev))
         if elastic is not None:
             st = elastic.stats()
             print(f"elastic: members={st['members']} "
@@ -561,14 +576,7 @@ def main() -> None:
                   f"{len(st['migrations'])} migrations, "
                   f"{len(st['fault_events'])} fault events")
             for mig in st["migrations"]:
-                if mig["action"] == "checkpoint-halt":
-                    print(f"  halt @ step {mig['step']} "
-                          f"({mig['trigger']})")
-                else:
-                    print(f"  {mig['action']} @ step {mig['step']}: "
-                          f"{mig['old_shards']}->{mig['new_shards']} "
-                          f"shards (detected step {mig['detected_step']}, "
-                          f"repack {mig['repack_s'] * 1e3:.1f} ms)")
+                print("  " + format_event(mig))
 
     if args.ckpt and not halted:
         # checkpoint boundary: the flat-resident runtime state unflattens
@@ -584,6 +592,13 @@ def main() -> None:
                 digest=schedule_digest(runtime.schedule),
             )
         print(f"checkpoint -> {path}")
+
+    if tracer is not None:
+        tracer.export_chrome_trace(args.trace)
+        ts = tracer.stats()
+        dropped = (f", {ts['dropped']} dropped (ring full)"
+                   if ts["dropped"] else "")
+        print(f"trace -> {args.trace} ({ts['retained']} spans{dropped})")
 
 
 if __name__ == "__main__":

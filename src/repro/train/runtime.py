@@ -57,6 +57,7 @@ from repro.kernels.bucket_update import (
     init_flat_opt_state,
 )
 from repro.models.model import init_params, loss_fn
+from repro.obs.trace import Tracer
 from repro.optim.optimizers import OptimizerSpec, apply_updates, init_opt_state
 from repro.sharding import (
     logical_rules,
@@ -843,6 +844,7 @@ class DeftRuntime:
         update_impl: Optional[str] = None,
         compute_dtype=None,
         gather_skip: Optional[bool] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.cfg = cfg
         self.opt_spec = opt_spec
@@ -935,8 +937,16 @@ class DeftRuntime:
         self.layout_swaps = 0              # hot-swaps that re-packed state
         self.swap_failures = 0             # background compile attempts failed
         self.last_swap_error: Optional[str] = None
-        self.swap_log: List[Dict[str, Any]] = []
+        # observability (DESIGN.md §11): control-plane events (swaps,
+        # repacks, compile failures) always record into the tracer — the
+        # legacy ``swap_log`` dicts are reconstructed from those events —
+        # but per-step phase/collective spans are only emitted when a
+        # tracer was explicitly attached, keeping the untraced hot path
+        # free of span bookkeeping.
+        self.tracer = tracer if tracer is not None else Tracer(capacity=8192)
+        self.trace_steps = tracer is not None
         self.last_phase = 0                # cycle phase of the last dispatch
+        self.last_dispatch_first = False   # last dispatch was an entry's first
         self._install(schedule)
 
     # ---- schedule installation ------------------------------------------
@@ -1068,6 +1078,15 @@ class DeftRuntime:
         self.phase_of_step: Tuple[int, ...] = tuple(
             index_of[key] for key in keys
         )
+        # static per-cycle-position span attributes (DESIGN.md §11):
+        # resolved at install so the traced dispatch path stays cheap
+        masks = self._gather_reuse_masks(schedule)
+        self._reuse_of_step: Tuple[bool, ...] = tuple(
+            m is not None and any(m) for m in masks
+        )
+        self._coll_of_step: Tuple[Dict[str, int], ...] = tuple(
+            phase_collectives(ph) for ph in schedule.phases
+        )
 
     # ---- state ----------------------------------------------------------
     @property
@@ -1104,6 +1123,20 @@ class DeftRuntime:
         phase directly without the :meth:`step` bookkeeping."""
         entry = self._unique_entries[self.phase_of_step[offset]]
         return entry.compiled if entry.compiled is not None else entry.jitted
+
+    @property
+    def swap_log(self) -> List[Dict[str, Any]]:
+        """Compat shim (DESIGN.md §11): the legacy swap-log dict list,
+        reconstructed from the trace events that replaced it.  Install
+        entries come from ``swap-install`` events; compile failures from
+        the ``swap-compile`` events carrying an ``event`` attr (the
+        successful-compile *span* has none and is not part of the log)."""
+        out: List[Dict[str, Any]] = []
+        for sp in self.tracer.spans(("swap-install", "swap-compile")):
+            args = sp.args
+            if sp.kind == "swap-install" or "event" in args:
+                out.append({"step": sp.step, **args})
+        return out
 
     def init_state(self, key, dtype=jnp.float32) -> TrainState:
         """Fresh train state, committed to the shardings the phase
@@ -1439,7 +1472,14 @@ class DeftRuntime:
                 "runtime's layout"
             )
         with self._partial_donation_ok():
-            return self._repack_jitted(transition)(state)
+            tr0 = self.tracer.now()
+            out = self._repack_jitted(transition)(state)
+            self.tracer.add(
+                "repack", "repack-state", tr0, self.tracer.now(),
+                moved_elems=transition.moved_elems,
+                n_buckets=transition.dst.n_buckets,
+            )
+            return out
 
     def _swap_state_struct(self, state_abs, layout: BucketLayout):
         """Abstract post-repack train state under ``layout`` — what the
@@ -1579,6 +1619,7 @@ class DeftRuntime:
 
         def _build() -> None:
             t0 = time.perf_counter()
+            tr0 = self.tracer.now()
             attempt = 0
             while True:
                 try:
@@ -1600,13 +1641,14 @@ class DeftRuntime:
                     err = f"{type(e).__name__}: {e}"
                     self.last_swap_error = err
                     retrying = attempt <= retries and self._swap_gen == gen
-                    # failures SURFACE in swap_log — a background-thread
-                    # exception must never silently strand a staged swap
-                    self.swap_log.append({
-                        "step": None, "event": "swap-compile-failed",
-                        "error": err, "attempt": attempt,
-                        "retrying": retrying,
-                    })
+                    # failures SURFACE in the trace (and through the
+                    # swap_log shim) — a background-thread exception must
+                    # never silently strand a staged swap
+                    self.tracer.instant(
+                        "swap-compile", "swap-compile-failed",
+                        step=None, event="swap-compile-failed",
+                        error=err, attempt=attempt, retrying=retrying,
+                    )
                     if not retrying:
                         # abandoned; old schedule keeps running.  Close
                         # the books so callers reading `info` can tell
@@ -1615,16 +1657,24 @@ class DeftRuntime:
                         info["compile_s"] = elapsed
                         info["compile_attempts"] = attempt
                         info["abandoned"] = True
-                        self.swap_log.append({
-                            "step": None, "event": "swap-abandoned",
-                            "error": err, "attempts": attempt,
-                            "elapsed_s": elapsed,
-                            "superseded": self._swap_gen != gen,
-                        })
+                        self.tracer.instant(
+                            "swap-compile", "swap-abandoned",
+                            step=None, event="swap-abandoned",
+                            error=err, attempts=attempt,
+                            elapsed_s=elapsed,
+                            superseded=self._swap_gen != gen,
+                        )
                         return
                     time.sleep(retry_backoff_s * attempt)
             info["compile_s"] = time.perf_counter() - t0
             info["compile_attempts"] = attempt + 1
+            self.tracer.add(
+                "swap-compile", "swap-compile", tr0, self.tracer.now(),
+                new_phases=len(fresh), reused_phases=reused,
+                background=background,
+                layout_change=new_layout is not None,
+                attempts=attempt + 1,
+            )
             # publish last — step() sees the schedule only fully compiled —
             # and only if no NEWER prepare_swap superseded this one (a slow
             # older compile must not overwrite a fresher staged schedule)
@@ -1667,6 +1717,7 @@ class DeftRuntime:
         fsdp: Optional[bool] = None,
         gather_skip: Optional[bool] = None,
         donate: Optional[bool] = None,
+        tracer: Optional[Tracer] = None,
     ) -> "DeftRuntime":
         """Sibling runtime: same arch/optimizer/engine knobs, overriding
         mesh, schedule, layout and/or engine.  The elastic control plane
@@ -1692,6 +1743,10 @@ class DeftRuntime:
             update_impl=self.update_impl,
             compute_dtype=self.compute_dtype,
             gather_skip=gather_skip,
+            # the sibling inherits the event stream by default: one trace
+            # spans an elastic migration end to end
+            tracer=(tracer if tracer is not None
+                    else (self.tracer if self.trace_steps else None)),
         )
 
     # ---- dispatch -------------------------------------------------------
@@ -1710,33 +1765,70 @@ class DeftRuntime:
             repack_s = None
             if pending.layout is not None:
                 t0 = time.perf_counter()
+                tr0 = self.tracer.now()
                 state = pending.repack(state)
                 jax.block_until_ready(jax.tree_util.tree_leaves(state))
                 repack_s = time.perf_counter() - t0
+                self.tracer.add(
+                    "repack", "swap-repack", tr0, self.tracer.now(),
+                    step=i, moved_elems=pending.transition.moved_elems,
+                    n_buckets=pending.layout.n_buckets,
+                )
                 self.layout = pending.layout
                 self._segments = pending.segments
                 self.layout_swaps += 1
             self._install(pending.schedule)
             self._cycle_base = i
             self.hot_swaps += 1
-            self.swap_log.append(
-                {"step": i, "period": pending.schedule.period,
-                 "updates_per_period": pending.schedule.updates_per_period,
-                 "n_buckets": self.layout.n_buckets,
-                 "shards": self.layout.shards,
-                 "repack_s": repack_s}
+            self.tracer.instant(
+                "swap-install", "swap-install",
+                step=i, period=pending.schedule.period,
+                updates_per_period=pending.schedule.updates_per_period,
+                n_buckets=self.layout.n_buckets,
+                shards=self.layout.shards,
+                repack_s=repack_s,
             )
         off = (i - self._cycle_base) % self.period
         self.last_phase = off
         entry = self._unique_entries[self.phase_of_step[off]]
-        t0 = time.perf_counter()
+        # an entry's first dispatch carries residual lazy work (jit
+        # trace+compile on the fallback branch, executable warm-up even
+        # when AOT-compiled) — tag it so telemetry can skip it (§11)
+        first = entry.stats.dispatches == 0
+        self.last_dispatch_first = first
+        tracing = self.trace_steps
+        clock = self.tracer.now if tracing else time.perf_counter
+        t0 = clock()
         if entry.compiled is not None:
             out = entry.compiled(state, batch)
         else:  # compile() skipped — trace under the mesh on first hit
             with jax.set_mesh(self.mesh):
                 out = entry.jitted(state, batch)
+        t1 = clock()
         entry.stats.dispatches += 1
-        entry.stats.dispatch_s += time.perf_counter() - t0
+        entry.stats.dispatch_s += t1 - t0
+        if tracing:
+            spec = entry.spec
+            self.tracer.add(
+                "phase", f"phase{off}", t0, t1, step=i, phase=off,
+                first=first, update=spec.do_update,
+            )
+            coll = self._coll_of_step[off]
+            self.tracer.add(
+                "collective-group", f"collectives@{off}", t0, t1,
+                step=i, phase=off,
+                primary=coll["primary"], secondary=coll["secondary"],
+            )
+            if spec.do_update:
+                self.tracer.instant(
+                    "update-apply", f"update-k{spec.update_k}",
+                    t=t1, step=i, phase=off, k=spec.update_k,
+                    source=spec.update_source,
+                )
+            if self._reuse_of_step[off]:
+                self.tracer.instant(
+                    "gather-skip", "gather-skip", t=t0, step=i, phase=off,
+                )
         return out
 
     # ---- reporting ------------------------------------------------------
@@ -1786,6 +1878,7 @@ class DeftRuntime:
             "last_swap_error": self.last_swap_error,
             "gather_skip": self._gather_skip,
             "swap_log": list(self.swap_log),
+            "trace": self.tracer.stats(),
             "collectives_per_phase": coll,
             "max_collectives_in_a_phase": max(
                 (c["primary"] + c["secondary"] for c in coll), default=0

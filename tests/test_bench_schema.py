@@ -99,6 +99,26 @@ def test_bench_repack_entry_floor():
     assert rp["amortized_overhead_at_replan_every_100_steps"] < 0.5, rp
 
 
+def test_bench_obs_entry_floor():
+    """The checked-in obs entry holds the §11 acceptance properties:
+    span-closure reproduces the simulator, the undisturbed attribution
+    reads back identity, the divergence drift source leads the EMA
+    screen, and per-step tracing stays under the 2% overhead bound."""
+    path = os.path.join(_ROOT, "BENCH_obs.json")
+    data = json.load(open(path))
+    c = data["closure"]
+    assert c["iteration_time_exact"] is True
+    assert c["cr_error"] < 0.05
+    assert c["bubble_abs_error"] < 1e-6
+    a = data["attribution"]
+    assert abs(a["comp_scale"] - 1.0) < 0.1
+    assert abs(a["comm_scale"] - 1.0) < 0.1
+    assert a["max_divergence"] < 0.01
+    d = data["divergence_lead"]
+    assert d["lead_steps"] is not None and d["lead_steps"] >= 1
+    assert data["tracing"]["overhead_pct"] < 2.0
+
+
 def test_check_script_cli():
     """scripts/check_bench_schema.py: exit 0 on the checked-in files,
     exit 1 (with SCHEMA ERROR on stderr) on a broken payload."""
