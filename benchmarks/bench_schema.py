@@ -72,6 +72,33 @@ _FSDP_FLAT_SCENARIO = {
     },
 }
 
+_DECOUPLED_SCENARIO = {
+    "host_devices": None,
+    "mesh": {"pod": None, "data": None, "model": None},
+    "model": {"name": None, "params": None, "n_leaves": None,
+              "n_buckets": None},
+    "schedule": {"period": None, "updates_per_period": None},
+    "engine": {"flat_state": None, "sharded_state": None, "shards": None,
+               "decoupled": None},
+    "steps_timed": None,
+    "compile_s_decoupled_aot": None,
+    "steps_per_s_fused": None,
+    "steps_per_s_decoupled": None,
+    "steps_per_s_ratio_decoupled_vs_fused": None,
+    "sim": {
+        "iteration_time_fused_burst": None,
+        "iteration_time_decoupled_streamed": None,
+        "coverage_fused": None,
+        "coverage_decoupled": None,
+        "ag_stall_s_streamed": None,
+        "ag_plan_coverage": None,
+        "ag_plan_items": None,
+    },
+    "ag_burst_bytes_fused": None,
+    "ag_burst_bytes_decoupled_peak": None,
+    "ag_burst_bytes_delta": None,
+}
+
 _REPACK = {
     "n_buckets_a": None,
     "n_buckets_b": None,
@@ -113,6 +140,7 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
         "smoke": _RUNTIME_SCENARIO,
         "dp4": _RUNTIME_SCENARIO,
         "fsdp_flat": _FSDP_FLAT_SCENARIO,
+        "decoupled": _DECOUPLED_SCENARIO,
     },
     "BENCH_adapt.json": {
         "scenario": {"drop_step": None, "drop_scale": None,

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Lint: no module under src/repro may call the legacy planner entry
+points.  All scheduling flows through the unified ``Planner`` facade
+(``repro.core.deft.Planner`` / ``PlanRequest``); the legacy functions
+(``feedback_solve``, ``feedback_solve_candidates``, ``solve_schedule``,
+``plan_deft``) survive only as deprecated shims for out-of-tree callers
+and the tests that pin shim equivalence.
+
+AST-based so prose (docstrings, comments) never trips it: only actual
+``import``s of the legacy names and ``Name``/``Attribute`` references in
+code are flagged.  ``core/deft.py`` (defines the shims) and
+``core/__init__.py`` (re-exports them) are exempt.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+LEGACY = {
+    "feedback_solve",
+    "feedback_solve_candidates",
+    "solve_schedule",
+    "plan_deft",
+}
+EXEMPT = {"core/deft.py", "core/__init__.py"}
+
+
+def violations(path: pathlib.Path, rel: str):
+    tree = ast.parse(path.read_text(), filename=rel)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in LEGACY:
+                    yield node.lineno, f"imports {alias.name}"
+        elif isinstance(node, ast.Name) and node.id in LEGACY:
+            yield node.lineno, f"references {node.id}"
+        elif isinstance(node, ast.Attribute) and node.attr in LEGACY:
+            yield node.lineno, f"references .{node.attr}"
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    bad = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel in EXEMPT:
+            continue
+        for lineno, what in violations(path, rel):
+            bad.append(f"src/repro/{rel}:{lineno}: {what}")
+    if bad:
+        print("legacy planner entry points are shim-only; use "
+              "Planner/PlanRequest (core/deft.py):", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print(f"check_no_legacy_planner: OK ({len(LEGACY)} names, "
+          f"exempt: {', '.join(sorted(EXEMPT))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -75,6 +75,9 @@ if [[ "$mode" == "--chaos" ]]; then
   exit 0
 fi
 
+echo "== lint: no legacy planner entry points outside core =="
+python scripts/check_no_legacy_planner.py
+
 echo "== tier-1 tests (excluding slow/multidevice) =="
 # run under an if so `set -e` cannot short-circuit before we report,
 # then propagate pytest's exit code verbatim (CI must see the status)

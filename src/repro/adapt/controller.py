@@ -13,7 +13,7 @@ loss); every ``check_every`` steps — once telemetry is warm — it:
    ``WalkParams`` fit from the observed loss trace (the plan's
    convergence assumptions are wrong);
 3. **replans**: re-runs the Solver + Preserver feedback loop
-   (:func:`repro.core.deft.feedback_solve`) on the calibrated bucket
+   (:meth:`repro.core.deft.Planner.plan`) on the calibrated bucket
    times.  The knapsack memo cache (core/knapsack.py) makes consecutive
    replans over a drifting-but-similar profile cheap — the solver
    re-solves mostly cache-hit instances.
@@ -38,7 +38,7 @@ from repro.adapt.calibrate import (
 )
 from repro.adapt.telemetry import Telemetry, TelemetryConfig
 from repro.core.bucket import BucketTimes
-from repro.core.deft import feedback_solve, feedback_solve_candidates
+from repro.core.deft import Planner, PlanRequest
 from repro.core.preserver import (
     PreserverVerdict,
     WalkParams,
@@ -71,7 +71,7 @@ class AdaptConfig:
     drift_source: str = "ema"
     cooldown_steps: int = 16      # min steps between replans
     min_loss_samples: int = 12    # before the measured-WalkParams check
-    # replanning (mirrors plan_deft defaults)
+    # replanning (mirrors the Planner's feedback-loop defaults)
     eps: float = 0.01
     max_retries: int = 10
     capacity_growth: float = 1.2
@@ -159,6 +159,8 @@ class AdaptiveController:
         self.walk = walk or WalkParams(
             s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256
         )
+        # all replans route through the unified Planner facade
+        self.planner = Planner()
         # ---- optional repartitioning (DESIGN.md §9) ----------------------
         # With a repartitioner attached, every replan ALSO considers a
         # grid of alternative bucket partitions; ``bucket_of`` names the
@@ -302,14 +304,17 @@ class AdaptiveController:
         solves: Tuple = ()
         new_times = profile.times
         if self.repartitioner is None:
-            schedule, verdict, scfg, _ = feedback_solve(
-                profile.times,
-                walk,
+            res = self.planner.plan(PlanRequest(
+                times=profile.times,
+                walk=walk,
                 heterogeneous=self.scheduler_cfg.heterogeneous,
                 mu=self.scheduler_cfg.mu,
                 eps=self.cfg.eps,
                 max_retries=self.cfg.max_retries,
                 capacity_growth=self.cfg.capacity_growth,
+            ))
+            schedule, verdict, scfg = (
+                res.schedule, res.verdict, res.scheduler_cfg
             )
         else:
             # candidate-partition path: the installed partition competes
@@ -328,9 +333,9 @@ class AdaptiveController:
                     pairs.append((c.tag, self.repartitioner.times_for(
                         c, comp_scale=cum_comp, comm_scale=cum_comm
                     )))
-            best, solves = feedback_solve_candidates(
-                pairs,
-                walk,
+            res = self.planner.plan(PlanRequest(
+                candidates=tuple(pairs),
+                walk=walk,
                 baseline_tag="current",
                 min_gain=self.repartitioner.cfg.min_gain,
                 heterogeneous=self.scheduler_cfg.heterogeneous,
@@ -338,6 +343,10 @@ class AdaptiveController:
                 eps=self.cfg.eps,
                 max_retries=self.cfg.max_retries,
                 capacity_growth=self.cfg.capacity_growth,
+            ))
+            solves = res.candidates
+            best = next(
+                s for s in solves if s.tag == res.winner_tag
             )
             schedule, verdict, scfg = (
                 best.schedule, best.verdict, best.scheduler_cfg

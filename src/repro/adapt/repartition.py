@@ -6,7 +6,8 @@ reveals the effective compute/comm ratio moved (a bandwidth drop, an MFU
 mis-estimate), the best *partition* — not just the best schedule over the
 installed partition — may change, the exact failure mode MG-WFBP shows
 for naive merge choices.  This module generates the candidate partitions
-the controller feeds to :func:`repro.core.deft.feedback_solve_candidates`.
+the controller feeds to :meth:`repro.core.deft.Planner.plan` as a
+candidate grid.
 
 Everything here is pure Python off the hot path: a
 :class:`~repro.train.bucketing.LeafTimeModel` (frozen per-leaf timing
@@ -111,7 +112,8 @@ class Repartitioner:
 
 def candidate_solve_table(solves) -> str:
     """Human-readable one-line-per-candidate summary of a
-    :func:`feedback_solve_candidates` result (explorer / logs)."""
+    candidate-grid :meth:`~repro.core.deft.Planner.plan` result
+    (explorer / logs)."""
     rows = []
     for s in solves:
         rows.append(

@@ -5,8 +5,23 @@ multi-knapsack scheduling, Algorithms 1+2) -> Preserver (Gaussian-walk
 convergence check + capacity feedback).  ``plan_deft`` ties them together.
 """
 from repro.core.bucket import Bucket, BucketTimes, build_buckets
-from repro.core.deft import DeftPlan, plan_deft, solve_schedule
+from repro.core.deft import (
+    AgItem,
+    AgStreamPlan,
+    CandidateSolve,
+    DeftPlan,
+    Planner,
+    PlanRequest,
+    PlanResult,
+    ag_deadlines,
+    ag_times,
+    plan_ag_stream,
+    plan_deft,
+    rs_times,
+    solve_schedule,
+)
 from repro.core.knapsack import (
+    deadline_knapsack,
     greedy_multi_knapsack,
     knapsack_two_link,
     naive_knapsack,
@@ -35,6 +50,10 @@ from repro.core.simulator import SimResult, simulate_baseline, simulate_deft
 __all__ = [
     "Bucket", "BucketTimes", "build_buckets",
     "DeftPlan", "plan_deft", "solve_schedule",
+    "Planner", "PlanRequest", "PlanResult", "CandidateSolve",
+    "AgItem", "AgStreamPlan", "plan_ag_stream",
+    "rs_times", "ag_times", "ag_deadlines",
+    "deadline_knapsack",
     "greedy_multi_knapsack", "knapsack_two_link", "naive_knapsack", "recursive_knapsack",
     "ALL_BASELINES", "BaselinePolicy",
     "PreserverVerdict", "WalkParams", "check_schedule", "expected_next_state", "rollout",

@@ -1,13 +1,30 @@
 """DeFT top level: Profiler -> Solver -> Preserver feedback loop (Fig. 7).
 
-``plan_deft`` is the single entry point used by the train loop, the
-benchmarks and the examples: given an architecture + hardware model +
-input shape, it profiles bucket times analytically, runs the two-stage
-knapsack Solver, checks the resulting variable-batch-size sequence with
-the Preserver, and — on failure — enlarges the knapsack capacity (paper:
-"allowing more communications in each iteration, which avoids excessive
-decrease in parameter update frequency") and re-solves, up to
-``max_retries`` (paper: 10).
+:class:`Planner` is the single planning surface: every consumer (train
+driver, adaptive controller, elastic controller, benchmarks) builds a
+:class:`PlanRequest` and receives a :class:`PlanResult`.  The request
+carries the input source (profiled ``times``, a candidate-partition
+grid, or an architecture + hardware model to profile analytically), the
+Preserver policy, the solver knobs, and — for the decoupled-collective
+item model (DESIGN.md §12) — the all-gather streaming knobs.
+
+Decoupled item model
+--------------------
+With ``PlanRequest.decoupled`` the fused per-bucket sync is split into
+two independently schedulable knapsack items the way DeAR decouples
+all-reduce: a *reduce-scatter* item (``(1 - ag_fraction)`` of the wire
+time) placed against backward capacity by the existing two-stage Solver,
+and an *all-gather* item streamed against the forward pass.  AG items
+carry a **deadline** — the forward-prefix time at which the first block
+consuming the bucket starts (buckets are in model order, so bucket ``b``
+must land before forward block ``b``) — and are placed by the
+deadline-constrained knapsack; a late AG stalls the consuming forward
+block instead of adding a bubble.
+
+The legacy functions (``solve_schedule`` / ``feedback_solve`` /
+``feedback_solve_candidates`` / ``plan_deft``) remain as thin deprecated
+shims over the Planner; new call sites must use the facade
+(``scripts/check_no_legacy_planner.py`` enforces this in CI).
 """
 from __future__ import annotations
 
@@ -16,6 +33,7 @@ from typing import Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.bucket import BucketTimes
+from repro.core.knapsack import deadline_knapsack
 from repro.core.preserver import PreserverVerdict, WalkParams, check_schedule
 from repro.core.profiler import HardwareModel, Profile, profile_arch
 from repro.core.scheduler import (
@@ -28,7 +46,7 @@ from repro.core.scheduler import (
 
 @dataclasses.dataclass(frozen=True)
 class DeftPlan:
-    """Everything downstream consumers need."""
+    """Everything downstream consumers need (legacy ``plan_deft`` shape)."""
 
     profile: Profile
     schedule: DeftSchedule
@@ -42,16 +60,392 @@ class DeftPlan:
         return self.profile.coverage_rate
 
 
+# ---------------------------------------------------------------------------
+# Decoupled-collective item model (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def ag_times(times: BucketTimes, ag_fraction: float = 0.5) -> Tuple[float, ...]:
+    """Per-bucket all-gather seconds under the decoupled item model.
+
+    A ring all-reduce is a reduce-scatter plus an all-gather moving the
+    same bytes each, so the default split prices the AG half at half the
+    profiled fused wire time; ``ag_fraction`` is the tunable split for
+    asymmetric implementations."""
+    if not 0.0 <= ag_fraction <= 1.0:
+        raise ValueError(f"ag_fraction must be in [0, 1], got {ag_fraction}")
+    return tuple(ag_fraction * c for c in times.comm)
+
+
+def rs_times(times: BucketTimes, ag_fraction: float = 0.5) -> BucketTimes:
+    """The reduce-scatter remainder of ``times`` once the AG half is
+    split off: identical compute, comm scaled to ``1 - ag_fraction``."""
+    if not 0.0 <= ag_fraction <= 1.0:
+        raise ValueError(f"ag_fraction must be in [0, 1], got {ag_fraction}")
+    return BucketTimes(
+        fwd=times.fwd,
+        bwd=times.bwd,
+        comm=tuple((1.0 - ag_fraction) * c for c in times.comm),
+    )
+
+
+def ag_deadlines(times: BucketTimes) -> Tuple[float, ...]:
+    """Deadline of bucket ``b``'s AG item: the forward-prefix time at
+    which block ``b`` (the first consumer, model order) starts."""
+    acc, out = 0.0, []
+    for f in times.fwd:
+        out.append(acc)
+        acc += f
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class AgItem:
+    """One all-gather knapsack item: bucket ``bucket`` streamed during
+    the forward of cycle position ``phase``."""
+
+    bucket: int
+    phase: int
+    duration: float              # seconds on the primary link
+    deadline: float              # forward-prefix start of the consumer
+    link: int                    # 0 = primary, 1 = secondary (plan-level)
+    covered: bool                # meets its deadline in the placement
+
+
+@dataclasses.dataclass(frozen=True)
+class AgStreamPlan:
+    """Deadline-knapsack placement of the AG items over one cycle."""
+
+    items: Tuple[AgItem, ...]
+    period: int
+    ag_fraction: float
+    capacity: float              # forward window per phase (seconds)
+
+    def items_for_phase(self, t: int) -> Tuple[AgItem, ...]:
+        return tuple(i for i in self.items if i.phase == t)
+
+    @property
+    def total_s(self) -> float:
+        return sum(i.duration for i in self.items)
+
+    @property
+    def covered_s(self) -> float:
+        return sum(i.duration for i in self.items if i.covered)
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of AG wire time hidden behind forward compute
+        (1.0 when there are no AG items at all)."""
+        total = self.total_s
+        return 1.0 if total <= 0.0 else self.covered_s / total
+
+
+def plan_ag_stream(
+    schedule: DeftSchedule,
+    times: BucketTimes,
+    scfg: Optional[SchedulerConfig] = None,
+    *,
+    ag_fraction: float = 0.5,
+    gather_skip: bool = True,
+) -> AgStreamPlan:
+    """Place the per-cycle all-gather items against forward capacity.
+
+    A cycle position gathers iff its params are *fresh* — position 0, or
+    the previous phase applied an update — matching the runtime's
+    gather-reuse masks exactly; with ``gather_skip`` the stale positions
+    emit **no AG items** (the runtime serves them from the replicated
+    cache).  Fresh positions gather every bucket; each position's items
+    go through the deadline-constrained knapsack on the primary link,
+    then (heterogeneous setups) the leftovers are re-offered to the
+    secondary link at ``mu``-scaled durations.  Items covered by neither
+    stall their consuming forward block (the simulator prices the
+    stall)."""
+    scfg = scfg or SchedulerConfig()
+    durs = ag_times(times, ag_fraction)
+    deadlines = ag_deadlines(times)
+    nb = times.n
+    cap = times.fwd_total * scfg.capacity_factor
+    items = []
+    for t in range(schedule.period):
+        fresh = t == 0 or schedule.phases[t - 1].do_update
+        if gather_skip and not fresh:
+            continue
+        sel = set(deadline_knapsack(durs, deadlines, cap))
+        rest = [b for b in range(nb) if b not in sel]
+        sel2 = set()
+        if scfg.heterogeneous and rest:
+            picked = deadline_knapsack(
+                [durs[b] * scfg.mu for b in rest],
+                [deadlines[b] for b in rest],
+                cap,
+            )
+            sel2 = {rest[j] for j in picked}
+        for b in range(nb):
+            items.append(AgItem(
+                bucket=b,
+                phase=t,
+                duration=durs[b],
+                deadline=deadlines[b],
+                link=1 if b in sel2 else 0,
+                covered=b in sel or b in sel2,
+            ))
+    return AgStreamPlan(
+        items=tuple(items),
+        period=schedule.period,
+        ag_fraction=ag_fraction,
+        capacity=cap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner facade
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """One planning request; exactly one input source must be set:
+
+    * ``times``      — profiled/calibrated bucket times (train driver,
+                       adaptive controller);
+    * ``candidates`` — ``(tag, BucketTimes)`` partition grid scored by
+                       simulated iteration time (repartitioner, elastic);
+    * ``arch``       — architecture profiled analytically against ``hw``
+                       (the ``plan_deft`` path).
+    """
+
+    times: Optional[BucketTimes] = None
+    candidates: Tuple[Tuple[str, BucketTimes], ...] = ()
+    arch: Optional[ArchConfig] = None
+
+    # analytic-profile knobs (arch path)
+    hw: Optional[HardwareModel] = None
+    seq_len: int = 4096
+    per_device_batch: int = 1
+    partition_elems: int = 6_500_000
+    rebase_total_flops: Optional[float] = None
+
+    # Preserver policy
+    walk: Optional[WalkParams] = None
+    preserve: bool = True        # False: single solve, no Preserver gate
+    eps: float = 0.01
+    max_retries: int = 10
+    capacity_growth: float = 1.2
+    initial_factor: float = 1.0
+
+    # solver knobs
+    heterogeneous: bool = True
+    mu: float = 1.65
+    warmup: int = 16
+
+    # candidate scoring (candidates path)
+    baseline_tag: Optional[str] = None
+    min_gain: float = 0.0
+    sim_iterations: int = 48
+
+    # decoupled-collective item model (§12)
+    decoupled: bool = False
+    ag_fraction: float = 0.5
+    gather_skip: bool = True
+
+    def __post_init__(self):
+        sources = (
+            (self.times is not None)
+            + bool(self.candidates)
+            + (self.arch is not None)
+        )
+        if sources != 1:
+            raise ValueError(
+                "PlanRequest needs exactly one of times / candidates / "
+                f"arch, got {sources}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """What the Planner returns, superset of every legacy surface."""
+
+    schedule: DeftSchedule
+    verdict: Optional[PreserverVerdict]
+    scheduler_cfg: SchedulerConfig
+    retries: int
+    times: BucketTimes                     # the times the schedule solved on
+    profile: Optional[Profile] = None      # arch path only
+    candidates: Tuple[CandidateSolve, ...] = ()
+    winner_tag: Optional[str] = None       # candidates path only
+    ag_plan: Optional[AgStreamPlan] = None  # decoupled requests only
+
+    @property
+    def capacity_factor(self) -> float:
+        return self.scheduler_cfg.capacity_factor
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict is None or self.verdict.ok
+
+
+class Planner:
+    """The unified planning facade (solve + Preserver feedback +
+    candidate scoring + decoupled AG streaming) behind one
+    ``plan(PlanRequest) -> PlanResult`` call.
+
+    Stateless apart from an optional default Gaussian-walk model applied
+    when a request does not carry its own."""
+
+    _DEFAULT_WALK = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0,
+                               batch=256)
+
+    def __init__(self, walk: Optional[WalkParams] = None):
+        self.default_walk = walk
+
+    # -- internals ----------------------------------------------------------
+    def _walk(self, req: PlanRequest) -> WalkParams:
+        return req.walk or self.default_walk or self._DEFAULT_WALK
+
+    def _solve_times(self, times: BucketTimes, req: PlanRequest):
+        """Fig. 7 feedback loop over one set of bucket times."""
+        walk = self._walk(req)
+        factor = req.initial_factor
+        schedule, verdict, scfg, retry = None, None, None, 0
+        retries = 0 if not req.preserve else req.max_retries
+        for retry in range(retries + 1):
+            scfg = SchedulerConfig(
+                heterogeneous=req.heterogeneous, mu=req.mu,
+                capacity_factor=factor,
+            )
+            schedule = self._solve(times, scfg, warmup=req.warmup)
+            if not req.preserve:
+                verdict = None
+                break
+            verdict = check_schedule(
+                schedule.batch_size_sequence, schedule.period, walk,
+                eps=req.eps,
+            )
+            if verdict.ok:
+                break
+            factor *= req.capacity_growth
+        return schedule, verdict, scfg, retry
+
+    @staticmethod
+    def _solve(
+        times: BucketTimes,
+        scfg: SchedulerConfig,
+        n_buckets: Optional[int] = None,
+        warmup: int = 16,
+    ) -> DeftSchedule:
+        """Solver: Algorithm 2 over the horizon, then cycle extraction."""
+        sched = DeftScheduler(times, scfg)
+        plans = sched.run()
+        return extract_schedule(plans, n_buckets or times.n, warmup=warmup)
+
+    def _plan_candidates(self, req: PlanRequest):
+        """Candidate-partition path: run the feedback loop over SEVERAL
+        bucket partitions of the same model, score each by simulated
+        steady-state iteration time, and pick the winner.
+
+        The Preserver gates partition changes exactly like k-sequence
+        changes: a candidate whose schedule still fails after the
+        capacity feedback retries is disqualified (unless it IS the
+        baseline — best-effort semantics).  ``min_gain`` adds switch
+        hysteresis so a near-tie never pays a state re-pack."""
+        from repro.core.simulator import simulate_deft
+
+        solves = []
+        for tag, times in req.candidates:
+            solve_on = rs_times(times, req.ag_fraction) if req.decoupled \
+                else times
+            schedule, verdict, scfg, retries = self._solve_times(solve_on, req)
+            sim = simulate_deft(
+                solve_on,
+                DeftScheduler(solve_on, scfg).run(req.sim_iterations),
+                mu=scfg.mu,
+                heterogeneous=scfg.heterogeneous,
+            )
+            solves.append(CandidateSolve(
+                tag=tag,
+                times=times,
+                schedule=schedule,
+                verdict=verdict,
+                scheduler_cfg=scfg,
+                retries=retries,
+                iteration_time=sim.iteration_time,
+            ))
+        if not solves:
+            raise ValueError("candidate path needs >= 1 candidate")
+        base = next(
+            (s for s in solves if s.tag == req.baseline_tag), solves[0]
+        )
+        best = base
+        for s in solves:
+            if s is base or not s.verdict.ok:
+                continue
+            bar = best.iteration_time
+            if best is base:
+                bar = base.iteration_time * (1.0 - req.min_gain)
+            if s.iteration_time < bar:
+                best = s
+        return best, tuple(solves)
+
+    # -- the facade ---------------------------------------------------------
+    def plan(self, req: PlanRequest) -> PlanResult:
+        profile = None
+        candidates: Tuple[CandidateSolve, ...] = ()
+        winner_tag = None
+
+        if req.candidates:
+            best, candidates = self._plan_candidates(req)
+            times = best.times
+            schedule, verdict = best.schedule, best.verdict
+            scfg, retries = best.scheduler_cfg, best.retries
+            winner_tag = best.tag
+        else:
+            if req.arch is not None:
+                profile = profile_arch(
+                    req.arch,
+                    hw=req.hw or HardwareModel(),
+                    seq_len=req.seq_len,
+                    per_device_batch=req.per_device_batch,
+                    partition_strategy="deft",
+                    partition_elems=req.partition_elems,
+                    rebase_total_flops=req.rebase_total_flops,
+                )
+                times = profile.times
+            else:
+                times = req.times
+            solve_on = rs_times(times, req.ag_fraction) if req.decoupled \
+                else times
+            schedule, verdict, scfg, retries = self._solve_times(solve_on, req)
+
+        ag_plan = None
+        if req.decoupled:
+            ag_plan = plan_ag_stream(
+                schedule, times, scfg,
+                ag_fraction=req.ag_fraction,
+                gather_skip=req.gather_skip,
+            )
+        return PlanResult(
+            schedule=schedule,
+            verdict=verdict,
+            scheduler_cfg=scfg,
+            retries=retries,
+            times=times,
+            profile=profile,
+            candidates=candidates,
+            winner_tag=winner_tag,
+            ag_plan=ag_plan,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims (deprecated: new call sites must go through Planner —
+# scripts/check_no_legacy_planner.py enforces this for src/repro)
+# ---------------------------------------------------------------------------
 def solve_schedule(
     times: BucketTimes,
     scfg: SchedulerConfig,
     n_buckets: Optional[int] = None,
     warmup: int = 16,
 ) -> DeftSchedule:
-    """Solver: Algorithm 2 over the horizon, then cycle extraction."""
-    sched = DeftScheduler(times, scfg)
-    plans = sched.run()
-    return extract_schedule(plans, n_buckets or times.n, warmup=warmup)
+    """Deprecated shim: raw Solver pass.  Use ``Planner.plan`` with
+    ``preserve=False`` (or keep the SchedulerConfig knobs on the
+    request) instead."""
+    return Planner._solve(times, scfg, n_buckets=n_buckets, warmup=warmup)
 
 
 def feedback_solve(
@@ -65,25 +459,19 @@ def feedback_solve(
     capacity_growth: float = 1.2,
     initial_factor: float = 1.0,
 ) -> Tuple[DeftSchedule, PreserverVerdict, SchedulerConfig, int]:
-    """The Fig. 7 feedback loop over profiled bucket times: solve, check
-    with the Preserver, and grow the knapsack capacity on rejection (up to
-    ``max_retries``).  Shared by :func:`plan_deft` (analytic profiles),
-    the train driver (leaf-bucket profiles) and the online adaptive
-    controller (measurement-calibrated profiles)."""
-    factor = initial_factor
-    schedule, verdict, scfg, retry = None, None, None, 0
-    for retry in range(max_retries + 1):
-        scfg = SchedulerConfig(
-            heterogeneous=heterogeneous, mu=mu, capacity_factor=factor
-        )
-        schedule = solve_schedule(times, scfg, n_buckets=times.n)
-        verdict = check_schedule(
-            schedule.batch_size_sequence, schedule.period, walk, eps=eps
-        )
-        if verdict.ok:
-            break
-        factor *= capacity_growth
-    return schedule, verdict, scfg, retry
+    """Deprecated shim: the Fig. 7 feedback loop over profiled bucket
+    times.  Use ``Planner.plan(PlanRequest(times=...))``."""
+    res = Planner().plan(PlanRequest(
+        times=times,
+        walk=walk,
+        heterogeneous=heterogeneous,
+        mu=mu,
+        eps=eps,
+        max_retries=max_retries,
+        capacity_growth=capacity_growth,
+        initial_factor=initial_factor,
+    ))
+    return res.schedule, res.verdict, res.scheduler_cfg, res.retries
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,66 +500,22 @@ def feedback_solve_candidates(
     max_retries: int = 10,
     capacity_growth: float = 1.2,
 ) -> Tuple[CandidateSolve, Tuple[CandidateSolve, ...]]:
-    """The candidate-partition path of the Fig. 7 loop: run
-    :func:`feedback_solve` over SEVERAL bucket partitions of the same
-    model (each a ``(tag, BucketTimes)`` pair), score every candidate by
-    its simulated steady-state iteration time, and pick the winner.
-
-    The Preserver gates partition changes exactly like k-sequence
-    changes: a candidate whose schedule still fails the Preserver after
-    the capacity feedback retries is disqualified (unless it IS the
-    baseline — best-effort semantics match :func:`feedback_solve`).
-    ``min_gain`` adds switch hysteresis: a non-baseline candidate must
-    beat the baseline's iteration time by that relative margin, so a
-    near-tie never pays a state re-pack.
-
-    Returns (winner, all candidate solves in input order).
-    """
-    from repro.core.scheduler import DeftScheduler
-    from repro.core.simulator import simulate_deft
-
-    solves = []
-    for tag, times in candidates:
-        schedule, verdict, scfg, retries = feedback_solve(
-            times,
-            walk,
-            heterogeneous=heterogeneous,
-            mu=mu,
-            eps=eps,
-            max_retries=max_retries,
-            capacity_growth=capacity_growth,
-        )
-        sim = simulate_deft(
-            times,
-            DeftScheduler(times, scfg).run(sim_iterations),
-            mu=scfg.mu,
-            heterogeneous=scfg.heterogeneous,
-        )
-        solves.append(CandidateSolve(
-            tag=tag,
-            times=times,
-            schedule=schedule,
-            verdict=verdict,
-            scheduler_cfg=scfg,
-            retries=retries,
-            iteration_time=sim.iteration_time,
-        ))
-    if not solves:
-        raise ValueError("feedback_solve_candidates needs >= 1 candidate")
-    base = next(
-        (s for s in solves if s.tag == baseline_tag),
-        solves[0],
-    )
-    best = base
-    for s in solves:
-        if s is base or not s.verdict.ok:
-            continue
-        bar = best.iteration_time
-        if best is base:
-            bar = base.iteration_time * (1.0 - min_gain)
-        if s.iteration_time < bar:
-            best = s
-    return best, tuple(solves)
+    """Deprecated shim: candidate-partition scoring.  Use
+    ``Planner.plan(PlanRequest(candidates=...))``."""
+    res = Planner().plan(PlanRequest(
+        candidates=tuple(candidates),
+        walk=walk,
+        baseline_tag=baseline_tag,
+        min_gain=min_gain,
+        sim_iterations=sim_iterations,
+        heterogeneous=heterogeneous,
+        mu=mu,
+        eps=eps,
+        max_retries=max_retries,
+        capacity_growth=capacity_growth,
+    ))
+    best = next(s for s in res.candidates if s.tag == res.winner_tag)
+    return best, res.candidates
 
 
 def plan_deft(
@@ -188,33 +532,26 @@ def plan_deft(
     partition_elems: int = 6_500_000,
     rebase_total_flops: Optional[float] = None,
 ) -> DeftPlan:
-    """Profile -> solve -> preserve, with the capacity feedback loop."""
-    profile = profile_arch(
-        cfg,
+    """Deprecated shim: profile -> solve -> preserve.  Use
+    ``Planner.plan(PlanRequest(arch=...))``."""
+    res = Planner(walk=walk).plan(PlanRequest(
+        arch=cfg,
         hw=hw,
         seq_len=seq_len,
         per_device_batch=per_device_batch,
-        partition_strategy="deft",
-        partition_elems=partition_elems,
-        rebase_total_flops=rebase_total_flops,
-    )
-    walk = walk or WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
-
-    schedule, verdict, scfg, retries = feedback_solve(
-        profile.times,
-        walk,
         heterogeneous=heterogeneous,
         mu=mu,
         eps=eps,
         max_retries=max_retries,
         capacity_growth=capacity_growth,
-    )
-    # best effort after max retries (paper caps at 10)
+        partition_elems=partition_elems,
+        rebase_total_flops=rebase_total_flops,
+    ))
     return DeftPlan(
-        profile=profile,
-        schedule=schedule,
-        verdict=verdict,
-        capacity_factor=scfg.capacity_factor,
-        retries=retries,
-        scheduler_cfg=scfg,
+        profile=res.profile,
+        schedule=res.schedule,
+        verdict=res.verdict,
+        capacity_factor=res.capacity_factor,
+        retries=res.retries,
+        scheduler_cfg=res.scheduler_cfg,
     )

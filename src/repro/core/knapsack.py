@@ -16,6 +16,12 @@ weight), the knapsack capacity is merged *computation time*.  Three solvers:
                              capacities sorted ascending, items placed
                              longest-first into the smallest knapsack with
                              room.
+* ``deadline_knapsack``    — decoupled-collective extension (DESIGN.md
+                             §12): all-gather items streamed against the
+                             forward pass carry a *deadline* (the start of
+                             the first forward block that consumes the
+                             bucket); selection maximizes covered time
+                             over EDF-feasible subsets.
 """
 from __future__ import annotations
 
@@ -33,7 +39,7 @@ _MAX_DP_CELLS = 1_000_000
 
 # The Solver re-solves near-identical knapsack instances every iteration
 # of its 96-step horizon (same bucket times, a handful of distinct
-# capacities), and plan_deft's Preserver feedback loop repeats the whole
+# capacities), and the Planner's Preserver feedback loop repeats the whole
 # horizon up to 10 times.  Memoizing the integer-domain DP short-circuits
 # all of that; results are EXACT cache hits (keys are the already-scaled
 # integer weights + capacity, so there is no float-tolerance issue).
@@ -51,11 +57,17 @@ def set_knapsack_memoization(enabled: bool) -> bool:
 
 def clear_knapsack_caches() -> None:
     _naive_knapsack_int.cache_clear()
+    _deadline_knapsack_int.cache_clear()
 
 
 def knapsack_cache_info():
     """functools cache stats of the memoized DP core."""
     return _naive_knapsack_int.cache_info()
+
+
+def deadline_knapsack_cache_info():
+    """functools cache stats of the memoized deadline-DP core."""
+    return _deadline_knapsack_int.cache_info()
 
 
 def _to_int(xs: Sequence[float]) -> List[int]:
@@ -126,6 +138,104 @@ def naive_knapsack(times: Sequence[float], capacity: float) -> List[int]:
     # per item; keep the matching tolerance
     unit = max(round(capacity * _SCALE), 1) / max(cap, 1) / _SCALE
     assert sum(times[i] for i in sel) <= capacity * 1.001 + n * unit + 1e-6
+    return sel
+
+
+@functools.lru_cache(maxsize=_MEMO_SIZE)
+def _deadline_knapsack_int(
+    w: Tuple[int, ...], d: Tuple[int, ...], cap: int
+) -> Tuple[int, ...]:
+    """Deadline-constrained reachability DP over positive integer weights.
+
+    Items arrive pre-sorted by deadline (EDF order — any feasible subset
+    stays feasible when transmitted in deadline order, so restricting the
+    DP to that order loses nothing).  State: the set of reachable
+    cumulative link times; adding item i at cumulative time c requires
+    ``c + w[i] <= min(d[i], cap)``.  The memo key includes the deadline
+    tuple — two instances identical except for deadlines are *different*
+    problems and must not alias in the cache.
+    """
+    n = len(w)
+    reach = np.zeros(cap + 1, bool)
+    reach[0] = True
+    choice = np.zeros((n, cap + 1), bool)
+    for i in range(n):
+        wi = w[i]
+        di = min(d[i], cap)
+        if wi <= 0 or wi > di:
+            continue
+        cand = np.zeros(cap + 1, bool)
+        cand[wi : di + 1] = reach[: di + 1 - wi]
+        new = cand & ~reach
+        choice[i] = new          # first setter of each cumulative time
+        reach |= new
+    best = int(np.flatnonzero(reach)[-1])
+    sel: List[int] = []
+    c = best
+    for i in range(n - 1, -1, -1):
+        if choice[i, c]:
+            sel.append(i)
+            c -= w[i]
+    sel.reverse()
+    return tuple(sel)
+
+
+def deadline_knapsack(
+    times: Sequence[float],
+    deadlines: Sequence[float],
+    capacity: float,
+) -> List[int]:
+    """Deadline-constrained 0/1 knapsack (value == weight).
+
+    Items are link transfers issued back-to-back from time zero in
+    deadline (EDF) order; a selected item must *finish* by its deadline
+    or it stalls the consumer instead of hiding behind it.  Returns the
+    selected original indices maximizing total covered time subject to
+    the per-item deadlines and the overall ``capacity``.
+
+    Used for the decoupled all-gather items (DESIGN.md §12): deadline =
+    the forward-prefix time at which the first block consuming the
+    bucket starts, capacity = the forward compute window.
+    """
+    n = len(times)
+    if n == 0 or capacity <= 0:
+        return []
+    if len(deadlines) != n:
+        raise ValueError(
+            f"deadline_knapsack: {n} times but {len(deadlines)} deadlines"
+        )
+    order = sorted(range(n), key=lambda i: (deadlines[i], i))
+    w = _to_int([times[i] for i in order])
+    d = _to_int([min(deadlines[i], capacity) for i in order])
+    cap = int(round(capacity * _SCALE))
+    if cap <= 0:
+        return []
+    while n * cap > _MAX_DP_CELLS and cap > 1:
+        w = [max(x // 10, 1) if x > 0 else 0 for x in w]
+        d = [x // 10 for x in d]
+        cap //= 10
+    # zero-duration items consume no link time and can be issued at time
+    # zero ahead of everything: always covered, kept out of the DP
+    sel = [order[j] for j in range(n) if w[j] == 0]
+    pos = [j for j in range(n) if w[j] > 0]
+    if pos:
+        wp = tuple(w[j] for j in pos)
+        dp_key = tuple(d[j] for j in pos)
+        if _MEMO_ENABLED:
+            picked = _deadline_knapsack_int(wp, dp_key, cap)
+        else:
+            picked = _deadline_knapsack_int.__wrapped__(wp, dp_key, cap)
+        sel += [order[pos[k]] for k in picked]
+    sel.sort()
+    # EDF feasibility of the float-domain selection, up to one (possibly
+    # rescaled) integer unit per item of rounding slack
+    unit = max(round(capacity * _SCALE), 1) / max(cap, 1) / _SCALE
+    t = 0.0
+    for i in sorted(sel, key=lambda j: (deadlines[j], j)):
+        t += times[i]
+        assert t <= min(deadlines[i], capacity) * 1.001 + n * unit + 1e-6, (
+            "deadline_knapsack produced an EDF-infeasible selection"
+        )
     return sel
 
 

@@ -22,6 +22,15 @@ batch k_i*B) and compares the expected final losses.  A ratio outside
 ``[1-eps, 1+eps]`` fails the check; the feedback loop (deft.py) then
 enlarges the knapsack capacity (more communication per iteration -> higher
 update frequency) and re-solves, up to 10 retries.
+
+Decoupled-collective invariance (DESIGN.md §12): splitting each sync into
+a reduce-scatter item (backward capacity) and a streamed all-gather item
+(forward deadline) moves communication *placement* only — a late AG
+stalls the forward (``SimResult.ag_stall_s``), it never delays or merges
+an update, so the k-sequence and therefore this check are unchanged.
+The Planner runs the walk against the schedule solved on the RS-side
+profile (``rs_times``) and the verdict transfers to the decoupled plan
+verbatim.
 """
 from __future__ import annotations
 

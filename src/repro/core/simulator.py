@@ -39,6 +39,9 @@ class SimResult:
     # per-iteration wall durations (incl. warmup iterations) — the adapt
     # control plane consumes these as synthetic per-phase telemetry
     iteration_durations: Tuple[float, ...] = ()
+    # decoupled AG streaming (DESIGN.md §12): steady-state seconds per
+    # iteration the forward stalled waiting for a late all-gather
+    ag_stall_s: float = 0.0
 
     @property
     def throughput_speedup_vs(self):
@@ -137,6 +140,10 @@ def simulate_deft(
     heterogeneous: bool = True,
     keep_timeline: bool = False,
     name: str = "deft",
+    ag_times: Optional[Sequence[float]] = None,
+    ag_mode: str = "streamed",
+    ag_links: Optional[Sequence[int]] = None,
+    ag_skip: bool = True,
 ) -> SimResult:
     """Run the DeFT plan list through the timeline model.
 
@@ -145,19 +152,45 @@ def simulate_deft(
     launch at backward begin, fresh tasks at their gradient-ready time;
     parameter updates happen at iteration end and wait for every synced
     task of the completed generation (stale-parameter forward means no
-    other dependency exists)."""
+    other dependency exists).
+
+    Decoupled AG extension (DESIGN.md §12): with ``ag_times`` set, an
+    iteration whose params are fresh (iteration 0, or the previous plan
+    updated; every iteration when ``ag_skip`` is off) transmits one
+    all-gather per bucket from forward start in deadline (= model) order,
+    on ``ag_links[b]`` (default: all primary).  ``ag_mode="streamed"``
+    stalls forward block ``b`` until its own AG lands — late AGs cost a
+    *stall*, not a WaitAll bubble; ``ag_mode="burst"`` makes the first
+    block wait for every AG (the fused engine's up-front ZeRO gather
+    burst, kept as the comparison baseline)."""
     n = times.n
     links = {0: _Link(1.0), 1: _Link(mu)}
     t = 0.0
     timeline: List[Tuple[str, float, float, str]] = []
     iter_starts: List[float] = []
+    stalls: List[float] = []
     pending_done: Dict[Tuple[int, Tuple[int, ...]], float] = {}
     n_updates = 0
+    if ag_times is not None and ag_mode not in ("streamed", "burst"):
+        raise ValueError(f"unknown ag_mode {ag_mode!r}")
 
-    for plan in plans:
+    for idx, plan in enumerate(plans):
         it = plan.iteration
         iter_starts.append(t)
         fwd_start = t
+        it_stall = 0.0
+        # decoupled all-gathers: issued ahead of the fwd-stage grad comms
+        # (they carry deadlines; grad comms only face a WaitAll)
+        ag_done: Dict[int, float] = {}
+        if ag_times is not None and (
+            not ag_skip or idx == 0 or plans[idx - 1].update
+        ):
+            for b in range(n):
+                link_id = ag_links[b] if ag_links is not None else 0
+                s, e = links[link_id].transmit(fwd_start, ag_times[b])
+                ag_done[b] = e
+                if keep_timeline:
+                    timeline.append((f"link{link_id}", s, e, f"G{b}@{it}"))
         # forward-stage comms: old tasks, resident locally, start at once
         fwd_ends: List[float] = []
         for link_id, tasks in ((0, plan.fwd_primary), (1, plan.fwd_secondary)):
@@ -167,12 +200,22 @@ def simulate_deft(
                 pending_done[(task.bucket, task.origins)] = e
                 if keep_timeline:
                     timeline.append((f"link{link_id}", s, e, f"C{task.bucket}~{task.origins}"))
-        # forward compute (no per-bucket dependency: delayed updates)
+        if ag_done and ag_mode == "burst":
+            # the fused engine materializes every param before block 0
+            burst_end = max(ag_done.values())
+            it_stall += max(0.0, burst_end - t)
+            t = max(t, burst_end)
+        # forward compute (no per-bucket sync dependency: delayed updates;
+        # streamed AGs add the one real dependency — bucket b's params)
         for b in range(n):
+            if ag_mode == "streamed" and b in ag_done:
+                it_stall += max(0.0, ag_done[b] - t)
+                t = max(t, ag_done[b])
             s = t
             t += times.fwd[b]
             if keep_timeline:
                 timeline.append(("compute", s, t, f"F{b}@{it}"))
+        stalls.append(it_stall)
         # WaitAll(order) at forward end
         if fwd_ends:
             t = max(t, max(fwd_ends))
@@ -219,4 +262,5 @@ def simulate_deft(
         updates_per_iteration=updates,
         timeline=timeline if keep_timeline else None,
         iteration_durations=_durations(iter_starts, t),
+        ag_stall_s=sum(stalls[warm:]) / max(len(plans) - warm, 1),
     )

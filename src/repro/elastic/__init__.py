@@ -4,8 +4,8 @@ The adaptive loop (repro.adapt) re-plans when the hardware gets
 *slower*; this layer re-plans when the hardware gets *smaller*: per-shard
 health monitoring detects stragglers and dead/preempted devices, an
 :class:`ElasticController` prices the surviving mesh through the same
-calibrated ``LeafTimeModel`` / ``feedback_solve_candidates`` /
-Preserver path, and the :class:`ElasticCoordinator` executes the
+calibrated ``LeafTimeModel`` / :meth:`~repro.core.deft.Planner.plan`
+(candidate grid) / Preserver path, and the :class:`ElasticCoordinator` executes the
 cycle-boundary ``repack_state`` scale-down (and symmetric scale-up) with
 zero restart.  Every recovery path replays deterministically through
 :class:`FaultScenario`.

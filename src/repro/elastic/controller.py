@@ -12,7 +12,7 @@ the adaptive stack end-to-end:
 * the current partition (and, optionally, a
   :class:`~repro.adapt.repartition.Repartitioner` grid over the new
   width) competes through
-  :func:`repro.core.deft.feedback_solve_candidates`, every candidate
+  :meth:`repro.core.deft.Planner.plan` (candidate grid), every candidate
   **Preserver-gated** exactly like an adaptive repartition;
 * cumulative calibrated drift scales (:meth:`set_calibration`) carry
   over from the adaptive controller, so a mesh change planned mid-drift
@@ -33,7 +33,7 @@ import time
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.bucket import BucketTimes
-from repro.core.deft import feedback_solve_candidates
+from repro.core.deft import Planner, PlanRequest
 from repro.core.preserver import PreserverVerdict, WalkParams
 from repro.core.scheduler import DeftSchedule, SchedulerConfig
 from repro.train.bucketing import LeafTimeModel
@@ -122,6 +122,8 @@ class ElasticController:
             s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256
         )
         self.scheduler_cfg = scheduler_cfg or SchedulerConfig()
+        # all repack solves route through the unified Planner facade
+        self.planner = Planner()
         self._comp_scale = 1.0
         self._comm_scale = 1.0
         self.plans: list = []
@@ -143,7 +145,7 @@ class ElasticController:
         """Plan the move to ``n_shards`` surviving shards.  Always
         returns a plan — worst case ``checkpoint-halt``.  The schedule
         is Preserver-gated through the capacity feedback retries; like
-        :func:`feedback_solve`, an exhausted retry budget yields the
+        the capacity feedback loop, an exhausted retry budget yields the
         best-effort schedule with ``verdict.ok=False`` recorded."""
         t0 = time.perf_counter()
         if n_shards <= 0:
@@ -183,9 +185,9 @@ class ElasticController:
                     comp_scale=self._comp_scale,
                     comm_scale=self._comm_scale,
                 )))
-        best, solves = feedback_solve_candidates(
-            pairs,
-            self.walk,
+        res = self.planner.plan(PlanRequest(
+            candidates=tuple(pairs),
+            walk=self.walk,
             baseline_tag="current",
             min_gain=self.cfg.min_gain,
             heterogeneous=self.scheduler_cfg.heterogeneous,
@@ -193,7 +195,9 @@ class ElasticController:
             eps=self.cfg.eps,
             max_retries=self.cfg.max_retries,
             capacity_growth=self.cfg.capacity_growth,
-        )
+        ))
+        solves = res.candidates
+        best = next(s for s in solves if s.tag == res.winner_tag)
         bucket_of, n_buckets = cands[best.tag]
         if trigger == "scale-up":
             action = "scale-up"

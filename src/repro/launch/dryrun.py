@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, SHAPES, config_for_shape, get_shape
-from repro.core.deft import solve_schedule
+from repro.core.deft import Planner, PlanRequest
 from repro.core.scheduler import SchedulerConfig
 from repro.core.profiler import HardwareModel
 from repro.launch.analysis import (
@@ -165,7 +165,10 @@ def lower_one(
                     state["params"], cfg_x, bucket_of, nb, hw, shape.seq_len,
                     max(shape.global_batch // dp, 1),
                 )
-                schedule = solve_schedule(times, SchedulerConfig())
+                # dryrun only needs a representative phase: solve without
+                # the Preserver feedback loop
+                schedule = Planner().plan(
+                    PlanRequest(times=times, preserve=False)).schedule
                 phase = _pick_phase(schedule)
                 impl = deft_rs_phase_step if fsdp else deft_phase_step
                 kw = dict(cfg=cfg_x, opt_spec=opt, phase=phase,

@@ -38,7 +38,7 @@ from repro.checkpoint.checkpoint import (
 )
 from repro.configs import ARCH_NAMES, get_config, reduce_for_smoke
 from repro.core.bucket import BucketTimes
-from repro.core.deft import feedback_solve
+from repro.core.deft import Planner, PlanRequest
 from repro.core.preserver import WalkParams
 from repro.core.profiler import HardwareModel
 from repro.core.scheduler import SchedulerConfig
@@ -65,7 +65,7 @@ from repro.train.bucketing import (
     coverage_rescale,
     leaf_bucket_times,
 )
-from repro.train.runtime import DeftRuntime, make_ddp_step
+from repro.train.runtime import DeftRuntime, RuntimeConfig, make_ddp_step
 from repro.train.steps import init_train_state
 
 
@@ -98,11 +98,11 @@ def build_schedule(
         times = BucketTimes(times.fwd, times.bwd,
                             tuple(c * scale for c in times.comm))
     walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
-    schedule, verdict, scfg, _ = feedback_solve(
-        times, walk, heterogeneous=heterogeneous, mu=mu, eps=eps,
-        max_retries=max_retries,
-    )
-    return bucket_of, nb, times, schedule, verdict, scfg
+    res = Planner().plan(PlanRequest(
+        times=times, walk=walk, heterogeneous=heterogeneous, mu=mu,
+        eps=eps, max_retries=max_retries,
+    ))
+    return bucket_of, nb, times, res.schedule, res.verdict, res.scheduler_cfg
 
 
 def restore_runtime_state(runtime, ckpt_dir: str, params_abs):
@@ -226,6 +226,10 @@ def main() -> None:
                     default="f32",
                     help="forward/backward precision of the flat engines "
                          "(the master copy stays f32)")
+    ap.add_argument("--decoupled", action="store_true",
+                    help="stream per-bucket all-gathers into the forward "
+                         "instead of the phase-start burst (DESIGN.md §12; "
+                         "needs an FSDP arch)")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--data", type=int, default=0, help="debug mesh data axis")
     ap.add_argument("--model", type=int, default=0, help="debug mesh model axis")
@@ -307,9 +311,10 @@ def main() -> None:
                                          shard_count=dp if fsdp else 1)
             compute_dtype = (jnp.bfloat16 if args.compute_dtype == "bf16"
                              else None)
+            rcfg = RuntimeConfig(fsdp=fsdp, compute_dtype=compute_dtype,
+                                 decoupled=args.decoupled)
             runtime = DeftRuntime(cfg, opt, schedule, layout, mesh,
-                                  fsdp=fsdp, compute_dtype=compute_dtype,
-                                  tracer=tracer)
+                                  config=rcfg, tracer=tracer)
             state = None
             if args.resume and args.ckpt:
                 state, start_step = restore_runtime_state(

@@ -76,17 +76,20 @@ def spans_from_sim(sim: SimResult) -> List[Span]:
         else:  # link0 / link1
             link = int(stream[len("link"):])
             body = label[1:]
+            # split item model (§12): G{bucket}@{iter} is a streamed
+            # all-gather item, C… the grad-sync (RS/all-reduce) item
+            op = "ag" if label[0] == "G" else "grad"
             if "~" in body:          # DeFT: C{bucket}~{origins}
                 bucket_s, origins = body.split("~", 1)
                 it = None
-            else:                    # baseline: C{bucket}@{iter}
+            else:                    # baseline C / AG: {bucket}@{iter}
                 bucket_s, it_s = body.split("@", 1)
                 origins, it = "", int(it_s)
             spans.append(Span(
                 "collective", label, s, e, step=it,
                 track=f"sim-link{link}",
                 attrs=(("bucket", int(bucket_s)), ("link", link),
-                       ("origins", origins)),
+                       ("origins", origins), ("op", op)),
             ))
     n = len(sim.iteration_durations)
     for it in range(n):
@@ -171,10 +174,13 @@ class SimSpanMetrics:
     bubble_fraction: float          # (iter - compute) / iter
     coverage_rate: float            # workload CR: sum_b comm_b / compute
     effective_coverage_rate: float  # transmitted (volume-reduced) CR
-    per_bucket_comm: Dict[int, float]       # nominal comm seconds
+    per_bucket_comm: Dict[int, float]       # nominal grad-sync seconds
     per_bucket_bubble: Dict[int, float]     # exposed s/iter by bucket
     total_idle_per_iter: float
     link_busy_per_iter: Dict[int, float]    # wall busy s/iter by link
+    # split item model (§12): nominal all-gather seconds per bucket
+    # (empty for fused-chain timelines)
+    per_bucket_ag: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 def sim_metrics_from_spans(
@@ -211,15 +217,21 @@ def sim_metrics_from_spans(
                + sum(sp.duration for sp in bwd))
 
     # nominal per-bucket comm: any occurrence (merging never grows the
-    # tensor, so every transmission of bucket b has the same nominal cost)
+    # tensor, so every transmission of bucket b has the same nominal
+    # cost); AG items (§12) are tracked separately — they price forward
+    # streaming, not the grad-sync knapsack
     per_bucket_comm: Dict[int, float] = {}
+    per_bucket_ag: Dict[int, float] = {}
     for sp in spans:
         if sp.kind != "collective":
             continue
         args = sp.args
         b = int(args["bucket"])
         nominal = sp.duration / (mu if int(args.get("link", 0)) else 1.0)
-        per_bucket_comm.setdefault(b, nominal)
+        if args.get("op") == "ag":
+            per_bucket_ag.setdefault(b, nominal)
+        else:
+            per_bucket_comm.setdefault(b, nominal)
 
     t_a, t_b = steps[warm].t0, steps[-1].t1
     iters = max(n - warm, 1)
@@ -246,6 +258,7 @@ def sim_metrics_from_spans(
         per_bucket_bubble={b: v / iters for b, v in sorted(exposed.items())},
         total_idle_per_iter=total_idle / iters,
         link_busy_per_iter={k: v / iters for k, v in sorted(link_busy.items())},
+        per_bucket_ag=per_bucket_ag,
     )
 
 
@@ -277,18 +290,27 @@ def phase_divergence(
 
 
 def bucket_divergence(
-    schedule: DeftSchedule, divergence: Sequence[Optional[float]]
+    schedule: DeftSchedule,
+    divergence: Sequence[Optional[float]],
+    ag_plan=None,
 ) -> Dict[int, float]:
     """Mean per-phase divergence over the phases in which each bucket
-    syncs — 'which bucket's communication slipped' at cycle resolution."""
+    communicates — 'which bucket's communication slipped' at cycle
+    resolution.  Under the split item model (§12) a bucket participates
+    both in the phases where its grad-sync item lands AND in the phases
+    where ``ag_plan`` streams its all-gather item."""
     n = len(schedule.phases[0].route_new)
+    ag_phases = set()
+    if ag_plan is not None:
+        ag_phases = {(i.bucket, i.phase) for i in ag_plan.items}
     out: Dict[int, float] = {}
     for b in range(n):
         ds = [
             d
-            for ph, d in zip(schedule.phases, divergence)
+            for t, (ph, d) in enumerate(zip(schedule.phases, divergence))
             if d is not None
-            and (ph.sync_cur[b] or ph.route_new[b] == "sync")
+            and (ph.sync_cur[b] or ph.route_new[b] == "sync"
+                 or (b, t) in ag_phases)
         ]
         if ds:
             out[b] = sum(ds) / len(ds)
@@ -333,6 +355,7 @@ def attribute(
     times: BucketTimes,
     scfg: SchedulerConfig,
     schedule: DeftSchedule,
+    ag_plan=None,
 ) -> Attribution:
     """Align measured per-phase durations against the plan.
 
@@ -342,6 +365,11 @@ def attribute(
     from.  Fits the calibration scales, then re-runs the timeline
     simulator at those scales to express the measurement in the paper's
     metrics.
+
+    Decoupled plans (§12) pass their ``AgStreamPlan``: the calibrated
+    re-simulation then streams the AG items (stall semantics) and the
+    per-bucket divergence attributes slip to AG phases as well — with
+    ``times`` being the RS-side profile the schedule was solved on.
     """
     period = schedule.period
     planned = planned_phase_durations(times, scfg, period)
@@ -349,10 +377,19 @@ def attribute(
     a, b, resid = fit_scales(times, scfg, period, measured)
     run_times = scale_times(times, a, b)
 
+    ag_kw = {}
+    if ag_plan is not None and ag_plan.items:
+        durs = [0.0] * times.n
+        links_ = [0] * times.n
+        t0 = ag_plan.items[0].phase
+        for item in ag_plan.items_for_phase(t0):
+            durs[item.bucket] = item.duration * b   # comm-scale calibrated
+            links_[item.bucket] = item.link
+        ag_kw = dict(ag_times=tuple(durs), ag_links=tuple(links_))
     plans = schedule_plans(times, scfg, horizon=fit_horizon(period))
     sim = simulate_deft(
         run_times, plans, mu=scfg.mu,
-        heterogeneous=scfg.heterogeneous, keep_timeline=True,
+        heterogeneous=scfg.heterogeneous, keep_timeline=True, **ag_kw,
     )
     m = sim_metrics_from_spans(
         spans_from_sim(sim), mu=scfg.mu, warm=max(2, len(plans) // 4)
@@ -381,7 +418,8 @@ def attribute(
         planned_phase_s=planned,
         measured_phase_s=tuple(measured[:period]),
         divergence=div,
-        per_bucket_divergence=bucket_divergence(schedule, div),
+        per_bucket_divergence=bucket_divergence(schedule, div,
+                                                ag_plan=ag_plan),
         iteration_time=m.iteration_time,
         bubble_fraction=m.bubble_fraction,
         per_bucket_bubble=m.per_bucket_bubble,

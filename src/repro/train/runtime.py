@@ -72,6 +72,7 @@ from repro.train.bucketing import (
     repack_buffers,
     unflatten_buckets,
 )
+from repro.train.streaming import lazy_param_tree
 from repro.train.steps import (
     TrainState,
     _batch_specs,
@@ -333,6 +334,7 @@ def _deft_body_flat_rs(
     update_impl: Optional[str] = None,
     compute_dtype=None,
     gather_reuse: Optional[Tuple[bool, ...]] = None,
+    decoupled: bool = False,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase with params and optimizer moments SHARDED over
     ``shard_axis``: each device holds one contiguous 1/N span of every
@@ -347,6 +349,11 @@ def _deft_body_flat_rs(
       per-bucket generation tag that is STATIC per cycle position
       (updates are scheduled, not data-dependent), so the skip costs
       zero runtime bookkeeping;
+    * with ``decoupled`` (DESIGN.md §12) the gathers are not issued as
+      one up-front burst: each bucket's all-gather is traced at its
+      first forward leaf access via the lazy param view, streaming AG
+      traffic against forward compute (composes with ``gather_reuse`` —
+      a skipped bucket reads the cache and emits no AG at all);
     * scheduled syncs are hierarchical by construction — reduce-scatter
       over ``shard_axis`` into shard-local buffers, all-reduce over the
       outer (pod/DCN) axes, all-gather back ONLY when the synced buffer
@@ -384,22 +391,69 @@ def _deft_body_flat_rs(
     cache = state.get("pgather")
     reuse = gather_reuse if (cache is not None and gather_reuse) \
         else (False,) * layout.n_buckets
-    pbuf = [
-        cache[b] if reuse[b]
-        else jax.lax.all_gather(s, shard_axis, axis=0, tiled=True)
-        for b, s in enumerate(gather_src)
-    ]
-    params = jax.tree_util.tree_unflatten(
-        treedef, unflatten_buckets(layout, pbuf)
-    )
-    with logical_rules(rules):
-        (loss, parts), grads = jax.value_and_grad(
-            lambda p: loss_fn(p, cfg, batch, remat=remat,
-                              loss_chunk=loss_chunk, unroll=unroll),
-            has_aux=True,
-        )(params)
+    nb_ = layout.n_buckets
+    if decoupled:
+        # Decoupled AG streaming (DESIGN.md §12): no up-front gather
+        # burst.  Params are a lazy per-bucket view — bucket ``b``'s
+        # all-gather is traced at the FIRST forward leaf access, so the
+        # jaxpr interleaves one AG per bucket with the forward blocks
+        # that consume it (matching the planner's deadline items).
+        # Gradients come from the zeros trick: differentiate w.r.t. a
+        # full-size zero buffer added onto each gathered bucket — the
+        # transpose of the disjoint leaf slices scatter-adds every leaf
+        # cotangent into its span, i.e. ``flatten_buckets`` of the leaf
+        # grads, bit-for-bit (cast commutes with concat elementwise),
+        # without ever differentiating through the collective.
+        cdt = compute_dtype if compute_dtype is not None else jnp.float32
+        zbufs = tuple(
+            jnp.zeros((s,), cdt) for s in layout.buf_sizes
+        )
 
-    g_flat = flatten_buckets(layout, jax.tree_util.tree_leaves(grads))
+        def run(z):
+            gathered: Dict[int, jax.Array] = {}
+            full: Dict[int, jax.Array] = {}
+
+            def full_buf(b: int) -> jax.Array:
+                if b not in full:
+                    g = cache[b] if reuse[b] else jax.lax.all_gather(
+                        gather_src[b], shard_axis, axis=0, tiled=True
+                    )
+                    gathered[b] = g
+                    full[b] = g + z[b]
+                return full[b]
+
+            params = lazy_param_tree(treedef, layout, full_buf)
+            loss, parts = loss_fn(params, cfg, batch, remat=remat,
+                                  loss_chunk=loss_chunk, unroll=unroll)
+            # a bucket the forward never read still needs its gather
+            # for the pgather cache; its z-gradient stays zero
+            for b in range(nb_):
+                full_buf(b)
+            return loss, (parts, tuple(gathered[b] for b in range(nb_)))
+
+        with logical_rules(rules):
+            (loss, (parts, pbuf_t)), gz = jax.value_and_grad(
+                run, has_aux=True
+            )(zbufs)
+        pbuf = list(pbuf_t)
+        g_flat = [g.astype(jnp.float32) for g in gz]
+    else:
+        pbuf = [
+            cache[b] if reuse[b]
+            else jax.lax.all_gather(s, shard_axis, axis=0, tiled=True)
+            for b, s in enumerate(gather_src)
+        ]
+        params = jax.tree_util.tree_unflatten(
+            treedef, unflatten_buckets(layout, pbuf)
+        )
+        with logical_rules(rules):
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, remat=remat,
+                                  loss_chunk=loss_chunk, unroll=unroll),
+                has_aux=True,
+            )(params)
+
+        g_flat = flatten_buckets(layout, jax.tree_util.tree_leaves(grads))
     cur = [c[0] for c in state["cur"]]
     fut = [f[0] for f in state["fut"]]
 
@@ -613,6 +667,7 @@ def deft_rs_phase_step_flat(
     update_impl: Optional[str] = None,
     compute_dtype=None,
     gather_reuse: Optional[Tuple[bool, ...]] = None,
+    decoupled: bool = False,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Sharded flat-resident DeFT phase (the FSDP/RS engine): manual over
     every DP axis, param/moment buffers split 1/N over the innermost
@@ -651,6 +706,7 @@ def deft_rs_phase_step_flat(
         update_impl=update_impl,
         compute_dtype=compute_dtype,
         gather_reuse=gather_reuse,
+        decoupled=decoupled,
     )
     specs_fn = lambda s, axes: _flat_rs_state_specs(s, axes, shard_axis)
     return _shard_phase(body, specs_fn, state, batch, mesh, dp_axes)
@@ -798,6 +854,87 @@ class _PendingSwap:
     repack: Optional[Callable] = None
 
 
+_UNSET: Any = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Engine configuration of a :class:`DeftRuntime` — every knob that
+    used to be a loose ``DeftRuntime(...)`` kwarg, as one frozen value.
+
+    Known-illegal combinations raise at CONSTRUCTION (``validate``), not
+    deep inside phase dispatch: ``gather_skip``/``decoupled`` need the
+    sharded flat engine, mixed precision needs flat-resident buffers.
+    :meth:`DeftRuntime.spawn` derives sibling runtimes via
+    :meth:`replace`, so elastic/degraded-mode dispatch composes overrides
+    on a validated base instead of re-threading ten kwargs.
+
+    ``flat_state``/``gather_skip`` keep their tri-state semantics: None
+    means "resolve the default" (flat state on; gather skip on for the
+    sharded flat engine when the schedule has a reusable position).
+    ``decoupled`` (DESIGN.md §12) selects the streamed-AG forward on the
+    sharded flat engine: per-bucket all-gathers traced at first forward
+    use instead of the up-front ZeRO gather burst.
+    """
+
+    multi_pod: bool = False
+    fsdp: bool = False
+    remat: bool = True
+    loss_chunk: int = 0
+    unroll: bool = False
+    donate: bool = True
+    flat_state: Optional[bool] = None
+    update_impl: Optional[str] = None
+    compute_dtype: Any = None
+    gather_skip: Optional[bool] = None
+    decoupled: bool = False
+
+    def __post_init__(self):
+        self.validate()
+
+    @property
+    def resolved_flat_state(self) -> bool:
+        return True if self.flat_state is None else bool(self.flat_state)
+
+    @property
+    def sharded_flat(self) -> bool:
+        """The FSDP/RS engine: flat buffers sharded 1/N over 'data'."""
+        return bool(self.fsdp and self.resolved_flat_state)
+
+    def validate(self) -> None:
+        if self.loss_chunk < 0:
+            raise ValueError(f"loss_chunk={self.loss_chunk} must be >= 0")
+        if self.gather_skip and not self.sharded_flat:
+            raise ValueError(
+                "gather_skip only applies to the sharded flat engine "
+                "(fsdp=True, flat_state=True) — the other engines never "
+                "all-gather params"
+            )
+        if self.decoupled and not self.sharded_flat:
+            raise ValueError(
+                "decoupled AG streaming only applies to the sharded flat "
+                "engine (fsdp=True, flat_state=True) — the other engines "
+                "have no per-bucket param all-gather to stream "
+                "(DESIGN.md §12)"
+            )
+        if self.compute_dtype is not None and self.flat_state is False:
+            raise ValueError(
+                "compute_dtype (mixed precision) needs the flat engine: "
+                "tree-state params are resident at their init dtype — "
+                "drop flat_state=False or drop compute_dtype (DESIGN.md §8)"
+            )
+        if self.update_impl is not None and self.flat_state is False:
+            raise ValueError(
+                "update_impl selects a fused bucket-update kernel — only "
+                "the flat engine runs those; flat_state=False applies "
+                "per-leaf updates"
+            )
+
+    def replace(self, **overrides) -> "RuntimeConfig":
+        """A new validated config with ``overrides`` applied."""
+        return dataclasses.replace(self, **overrides)
+
+
 class DeftRuntime:
     """Owns the per-phase executables of one (evolving) DeFT schedule.
 
@@ -834,38 +971,66 @@ class DeftRuntime:
         layout: BucketLayout,
         mesh,
         *,
-        multi_pod: bool = False,
-        fsdp: bool = False,
-        remat: bool = True,
-        loss_chunk: int = 0,
-        unroll: bool = False,
-        donate: bool = True,
-        flat_state: Optional[bool] = None,
-        update_impl: Optional[str] = None,
-        compute_dtype=None,
-        gather_skip: Optional[bool] = None,
+        config: Optional[RuntimeConfig] = None,
         tracer: Optional[Tracer] = None,
+        multi_pod: Any = _UNSET,
+        fsdp: Any = _UNSET,
+        remat: Any = _UNSET,
+        loss_chunk: Any = _UNSET,
+        unroll: Any = _UNSET,
+        donate: Any = _UNSET,
+        flat_state: Any = _UNSET,
+        update_impl: Any = _UNSET,
+        compute_dtype: Any = _UNSET,
+        gather_skip: Any = _UNSET,
+        decoupled: Any = _UNSET,
     ):
+        # engine knobs arrive either as one validated RuntimeConfig or as
+        # the legacy loose kwargs (kept working; they build the config) —
+        # mixing the two is ambiguous and refused
+        legacy = {
+            k: v
+            for k, v in dict(
+                multi_pod=multi_pod, fsdp=fsdp, remat=remat,
+                loss_chunk=loss_chunk, unroll=unroll, donate=donate,
+                flat_state=flat_state, update_impl=update_impl,
+                compute_dtype=compute_dtype, gather_skip=gather_skip,
+                decoupled=decoupled,
+            ).items()
+            if v is not _UNSET
+        }
+        if config is None:
+            config = RuntimeConfig(**legacy)
+        elif legacy:
+            raise ValueError(
+                f"pass engine knobs through config=RuntimeConfig(...) OR "
+                f"as legacy kwargs, not both (got config= and "
+                f"{sorted(legacy)})"
+            )
+        self.config = config
         self.cfg = cfg
         self.opt_spec = opt_spec
         self.layout = layout
         self.mesh = mesh
-        self.fsdp = fsdp
-        self.multi_pod = multi_pod
-        self.donate = donate
-        self._remat = remat
-        self._loss_chunk = loss_chunk
-        self._unroll = unroll
+        self.fsdp = config.fsdp
+        self.multi_pod = config.multi_pod
+        self.donate = config.donate
+        self._remat = config.remat
+        self._loss_chunk = config.loss_chunk
+        self._unroll = config.unroll
         # flat-resident state (DESIGN.md §8): the default everywhere.
         # On the FSDP/RS path the flat engine SHARDS the param/moment
         # buffers 1/N over 'data' (shard-aware BucketLayout) instead of
         # replicating them, so the memory-bound archs keep their ZeRO
         # residency and still get the fused bucket-update kernels.
-        self.flat_state = True if flat_state is None else flat_state
-        self.update_impl = update_impl
+        self.flat_state = config.resolved_flat_state
+        self.update_impl = config.update_impl
         # mixed precision (flat engines only): forward/backward in
         # compute_dtype against the f32 master buffers
-        self.compute_dtype = compute_dtype
+        self.compute_dtype = config.compute_dtype
+        # decoupled AG streaming (DESIGN.md §12): per-bucket forward
+        # all-gathers at first use instead of the up-front ZeRO burst
+        self.decoupled = config.decoupled
         self._treedef = None
         self._segments: Optional[BucketSegments] = None
         shape = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -878,7 +1043,7 @@ class DeftRuntime:
                 "BucketLayout does not match this config's parameter tree"
             )
             self._segments = build_segments(layout, opt_spec)
-        if self.flat_state and fsdp:
+        if self.flat_state and self.fsdp:
             n_shards = int(shape["data"])
             if layout.shards != n_shards:
                 raise ValueError(
@@ -887,7 +1052,7 @@ class DeftRuntime:
                     f"is {n_shards}-way — build the layout with "
                     f"build_bucket_layout(..., shard_count={n_shards})"
                 )
-        if fsdp:
+        if self.fsdp:
             # tree state: manual over 'pod' only (FSDP left to XLA);
             # sharded flat state: the whole DP hierarchy is explicit
             if self.flat_state:
@@ -898,7 +1063,7 @@ class DeftRuntime:
             else:
                 self.dp_axes = ("pod",)
         else:
-            self.dp_axes = ("pod", "data") if multi_pod else ("data",)
+            self.dp_axes = ("pod", "data") if self.multi_pod else ("data",)
         self.accum_devices = 1
         for a in self.dp_axes:
             self.accum_devices *= int(shape[a])
@@ -909,15 +1074,10 @@ class DeftRuntime:
         # when the installed schedule actually HAS a reusable position;
         # otherwise every phase would haul an unread (hence undonatable)
         # full-param cache through each step for nothing.
-        if gather_skip and not (fsdp and self.flat_state):
-            raise ValueError(
-                "gather_skip only applies to the sharded flat engine "
-                "(fsdp=True, flat_state=True) — the other engines never "
-                "all-gather params"
-            )
+        # illegal combinations already refused by RuntimeConfig.validate
         self._gather_skip = bool(
-            gather_skip if gather_skip is not None
-            else (fsdp and self.flat_state
+            config.gather_skip if config.gather_skip is not None
+            else (self.fsdp and self.flat_state
                   and self._schedule_has_reuse(schedule))
         )
 
@@ -1028,6 +1188,7 @@ class DeftRuntime:
             )
         if self.flat_state and self.fsdp:
             kw["gather_reuse"] = gather_reuse
+            kw["decoupled"] = self.decoupled
         if not self.fsdp:
             kw["multi_pod"] = self.multi_pod
         return jax.jit(
@@ -1717,32 +1878,51 @@ class DeftRuntime:
         fsdp: Optional[bool] = None,
         gather_skip: Optional[bool] = None,
         donate: Optional[bool] = None,
+        decoupled: Optional[bool] = None,
+        config: Optional[RuntimeConfig] = None,
         tracer: Optional[Tracer] = None,
     ) -> "DeftRuntime":
-        """Sibling runtime: same arch/optimizer/engine knobs, overriding
+        """Sibling runtime: same arch/optimizer/engine config, overriding
         mesh, schedule, layout and/or engine.  The elastic control plane
         builds these for mesh scale-down/up and for the
         sharded->replicated degraded-mode fallback (DESIGN.md §10);
         state moves over via :func:`repro.elastic.coordinator.migrate_state`.
-        The phase cache is NOT shared — executables are mesh-bound."""
+        The phase cache is NOT shared — executables are mesh-bound.
+
+        Overrides compose through :meth:`RuntimeConfig.replace` on this
+        runtime's config (so an illegal combination is refused before any
+        compile); pass ``config=`` for a full replacement instead of
+        per-knob overrides."""
         new_mesh = self.mesh if mesh is None else mesh
+        if config is None:
+            fsdp_r = self.fsdp if fsdp is None else fsdp
+            dec_r = self.decoupled if decoupled is None else decoupled
+            if decoupled is None and not (fsdp_r and self.flat_state):
+                # an inherited decoupled flag dies with the RS engine
+                # (degraded-mode replicated fallback has no param AG)
+                dec_r = False
+            config = self.config.replace(
+                multi_pod=(self.multi_pod if mesh is None
+                           else "pod" in new_mesh.axis_names),
+                fsdp=fsdp_r,
+                donate=self.donate if donate is None else donate,
+                decoupled=dec_r,
+                # the sibling re-resolves its gather-skip default against
+                # its own schedule unless explicitly pinned
+                gather_skip=gather_skip,
+            )
+        elif any(v is not None for v in (fsdp, gather_skip, donate,
+                                         decoupled)):
+            raise ValueError(
+                "spawn: pass config= OR per-knob overrides, not both"
+            )
         return DeftRuntime(
             self.cfg,
             self.opt_spec,
             self.schedule if schedule is None else schedule,
             self.layout if layout is None else layout,
             new_mesh,
-            multi_pod=(self.multi_pod if mesh is None
-                       else "pod" in new_mesh.axis_names),
-            fsdp=self.fsdp if fsdp is None else fsdp,
-            remat=self._remat,
-            loss_chunk=self._loss_chunk,
-            unroll=self._unroll,
-            donate=self.donate if donate is None else donate,
-            flat_state=self.flat_state,
-            update_impl=self.update_impl,
-            compute_dtype=self.compute_dtype,
-            gather_skip=gather_skip,
+            config=config,
             # the sibling inherits the event stream by default: one trace
             # spans an elastic migration end to end
             tracer=(tracer if tracer is not None
@@ -1877,6 +2057,7 @@ class DeftRuntime:
             "swap_failures": self.swap_failures,
             "last_swap_error": self.last_swap_error,
             "gather_skip": self._gather_skip,
+            "decoupled": self.decoupled,
             "swap_log": list(self.swap_log),
             "trace": self.tracer.stats(),
             "collectives_per_phase": coll,

@@ -1,0 +1,169 @@
+"""Lazy per-bucket parameter streaming for the decoupled engine.
+
+The sharded flat engine re-materializes full parameter buffers from the
+ZeRO shards at phase start — one up-front all-gather *burst* covering
+every bucket before the first forward block runs.  The decoupled
+schedule (DESIGN.md §12) splits that burst into one all-gather per
+bucket, issued at the *first forward use* of any leaf the bucket holds:
+the gather for the embedding bucket lands before block 0, the gather
+for a tail bucket only once forward reaches it, so AG traffic streams
+against forward compute exactly like the planner's deadline items.
+
+Mechanically this is a trace-order trick, not a runtime dispatcher: the
+parameter "tree" handed to ``loss_fn`` is a lazy view over the bucket
+buffers.  Plain indexing (``params["embed"]["table"]``,
+``params["prefix"][i]``) walks lazy containers; touching a leaf triggers
+its bucket's materialization (``get_full(b)``, typically cache-or-
+all-gather plus the zeros-trick offset), and since jaxpr equation order
+is Python trace order, each bucket's all-gather lands in the jaxpr right
+before the first block that consumes it.  The containers are registered
+as pytree nodes whose flatten *fully materializes* the subtree, so any
+JAX consumption boundary — ``jax.checkpoint`` block args, ``lax.scan``
+xs over the stacked layers — densifies exactly the subtree it needs at
+exactly the point it needs it.
+
+Leaf extraction mirrors :func:`repro.train.bucketing.unflatten_buckets`
+(same ``lax.slice`` + reshape on the same offsets), so a streamed leaf
+is bit-identical to the fused engine's view of the same buffer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from repro.train.bucketing import BucketLayout
+
+
+class _BucketLoader:
+    """Shared per-trace materialization state: leaf index -> array view,
+    memoized so repeated access (e.g. tied embeddings read again by the
+    LM head) reuses the traced slice instead of re-slicing."""
+
+    __slots__ = ("layout", "get_full", "_leaves")
+
+    def __init__(self, layout: BucketLayout, get_full: Callable):
+        self.layout = layout
+        self.get_full = get_full
+        self._leaves: Dict[int, jax.Array] = {}
+
+    def leaf(self, i: int) -> jax.Array:
+        hit = self._leaves.get(i)
+        if hit is not None:
+            return hit
+        b = self.layout.bucket_of_leaf[i]
+        full = self.get_full(b)
+        pos = self.layout.leaves[b].index(i)
+        off = self.layout.offsets[b][pos]
+        shape = self.layout.shapes[i]
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        val = jax.lax.slice(full, (off,), (off + n,)).reshape(shape)
+        self._leaves[i] = val
+        return val
+
+
+def _resolve(node, loader: _BucketLoader):
+    """One lazy step: containers stay lazy, a leaf index materializes."""
+    if isinstance(node, dict):
+        return LazyDict(node, loader)
+    if isinstance(node, (tuple, list)):
+        return LazyList(node, loader)
+    return loader.leaf(node)
+
+
+def _deep(node, loader: _BucketLoader):
+    """Full materialization of a subtree (plain dicts/tuples of arrays)."""
+    if isinstance(node, dict):
+        return {k: _deep(v, loader) for k, v in node.items()}
+    if isinstance(node, (tuple, list)):
+        return tuple(_deep(v, loader) for v in node)
+    return loader.leaf(node)
+
+
+class LazyDict:
+    """Dict-shaped lazy view; ``[]`` resolves one level lazily."""
+
+    __slots__ = ("_node", "_loader")
+
+    def __init__(self, node, loader):
+        self._node = node
+        self._loader = loader
+
+    def __getitem__(self, key):
+        return _resolve(self._node[key], self._loader)
+
+    def __contains__(self, key):
+        return key in self._node
+
+    def __len__(self):
+        return len(self._node)
+
+    def __iter__(self):
+        return iter(self._node)
+
+    def keys(self):
+        return self._node.keys()
+
+    def get(self, key, default=None):
+        if key not in self._node:
+            return default
+        return self[key]
+
+
+class LazyList:
+    """Tuple-shaped lazy view; ``[i]``/iteration resolve lazily."""
+
+    __slots__ = ("_node", "_loader")
+
+    def __init__(self, node, loader):
+        self._node = node
+        self._loader = loader
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return LazyList(tuple(self._node[i]), self._loader)
+        return _resolve(self._node[i], self._loader)
+
+    def __len__(self):
+        return len(self._node)
+
+    def __iter__(self):
+        return (_resolve(v, self._loader) for v in self._node)
+
+
+def _dict_flatten(d: LazyDict):
+    keys = tuple(sorted(d._node))
+    return tuple(_deep(d._node[k], d._loader) for k in keys), keys
+
+
+def _dict_unflatten(keys, children):
+    return dict(zip(keys, children))
+
+
+def _list_flatten(t: LazyList):
+    return tuple(_deep(v, t._loader) for v in t._node), None
+
+
+def _list_unflatten(_, children):
+    return tuple(children)
+
+
+# Flatten materializes: a lazy container crossing any JAX API boundary
+# (checkpoint args, scan xs, tree.map) densifies to plain pytrees there.
+jax.tree_util.register_pytree_node(LazyDict, _dict_flatten, _dict_unflatten)
+jax.tree_util.register_pytree_node(LazyList, _list_flatten, _list_unflatten)
+
+
+def lazy_param_tree(treedef, layout: BucketLayout, get_full: Callable):
+    """Lazy parameter-tree view over per-bucket flat buffers.
+
+    ``treedef`` is the parameter tree's ``tree_flatten`` treedef,
+    ``get_full(b)`` returns bucket ``b``'s full flat buffer (called at
+    most once per bucket per trace; its equations land at the first
+    leaf access, which is what streams the all-gathers into forward).
+    """
+    index_tree = jax.tree_util.tree_unflatten(
+        treedef, list(range(layout.n_leaves))
+    )
+    return _resolve(index_tree, _BucketLoader(layout, get_full))

@@ -99,6 +99,25 @@ def test_bench_repack_entry_floor():
     assert rp["amortized_overhead_at_replan_every_100_steps"] < 0.5, rp
 
 
+def test_bench_decoupled_entry_floor():
+    """The checked-in decoupled entry holds the §12 acceptance
+    properties: the split item model's simulated coverage is at least
+    the fused chain's (streaming only adds scheduling freedom), the
+    measured streamed-AG engine is no slower than the fused-chain engine
+    (>= 1.0x floor on the checked-in trajectory), and the pre-forward
+    gather burst actually shrank."""
+    path = os.path.join(_ROOT, "BENCH_runtime.json")
+    dc = json.load(open(path))["decoupled"]
+    sim = dc["sim"]
+    assert sim["coverage_decoupled"] >= sim["coverage_fused"] - 1e-9, sim
+    assert 0.0 <= sim["ag_plan_coverage"] <= 1.0
+    assert dc["steps_per_s_ratio_decoupled_vs_fused"] >= 1.0, dc
+    assert dc["ag_burst_bytes_delta"] > 0
+    assert (dc["ag_burst_bytes_decoupled_peak"]
+            < dc["ag_burst_bytes_fused"])
+    assert dc["engine"]["decoupled"] is True
+
+
 def test_bench_obs_entry_floor():
     """The checked-in obs entry holds the §11 acceptance properties:
     span-closure reproduces the simulator, the undisturbed attribution

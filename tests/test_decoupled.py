@@ -1,0 +1,478 @@
+"""Decoupled-collective streaming schedule (DESIGN.md §12).
+
+Covers the whole stack of the RS/AG split:
+
+* item model — ``rs_times``/``ag_times`` conserve wire time,
+  ``ag_deadlines`` are forward prefixes;
+* ``deadline_knapsack`` — EDF feasibility, the memo-key-includes-
+  deadlines regression;
+* ``plan_ag_stream`` — gather-skip composition (stale cycle positions
+  emit no AG items), coverage accounting;
+* simulator — streamed never slower than burst, a hopeless deadline
+  prices a forward stall;
+* Planner facade — shim equivalence, ``decoupled=True`` attaches an
+  ``AgStreamPlan`` solved on the RS-side profile;
+* RuntimeConfig — construction-time validation, config/legacy-kwarg
+  exclusivity, ``spawn`` inheritance via ``config.replace``;
+* the engine — bit-identical training vs the fused path, and a jaxpr
+  census proving the per-bucket all-gathers stream into the forward
+  instead of bursting at phase start (the 4-device run lives in the
+  ``multidevice`` suite).
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.bucket import BucketTimes
+from repro.core.deft import (
+    Planner,
+    PlanRequest,
+    ag_deadlines,
+    ag_times,
+    feedback_solve,
+    plan_ag_stream,
+    rs_times,
+)
+from repro.core.knapsack import deadline_knapsack
+from repro.core.preserver import WalkParams
+from repro.core.profiler import HardwareModel
+from repro.core.scheduler import DeftScheduler, SchedulerConfig
+from repro.core.simulator import simulate_deft
+from repro.data.pipeline import make_batch
+from repro.models.model import init_params
+from repro.optim.optimizers import adamw
+from repro.train import (
+    DeftRuntime,
+    RuntimeConfig,
+    assign_buckets,
+    build_bucket_layout,
+    leaf_bucket_times,
+)
+
+WALK = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+
+
+def make_times(fwd, bwd, comm):
+    return BucketTimes(tuple(fwd), tuple(bwd), tuple(comm))
+
+
+times_strategy = st.integers(min_value=2, max_value=8).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.floats(0.001, 0.1), min_size=n, max_size=n),
+        st.lists(st.floats(0.001, 0.2), min_size=n, max_size=n),
+        st.lists(st.floats(0.001, 0.4), min_size=n, max_size=n),
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# item model
+# ---------------------------------------------------------------------------
+def test_split_conserves_wire_time():
+    t = make_times([0.01] * 4, [0.02] * 4, [0.05, 0.07, 0.03, 0.09])
+    for frac in (0.0, 0.3, 0.5, 1.0):
+        ag = ag_times(t, frac)
+        rs = rs_times(t, frac)
+        for b in range(t.n):
+            assert ag[b] + rs.comm[b] == pytest.approx(t.comm[b])
+        assert rs.fwd == t.fwd and rs.bwd == t.bwd
+    with pytest.raises(ValueError):
+        ag_times(t, 1.5)
+    with pytest.raises(ValueError):
+        rs_times(t, -0.1)
+
+
+def test_ag_deadlines_are_forward_prefixes():
+    t = make_times([0.01, 0.02, 0.03], [0.1] * 3, [0.1] * 3)
+    assert ag_deadlines(t) == pytest.approx((0.0, 0.01, 0.03))
+
+
+# ---------------------------------------------------------------------------
+# deadline knapsack
+# ---------------------------------------------------------------------------
+def test_deadline_knapsack_respects_deadlines():
+    # bucket 0 is consumed at forward start (deadline 0): never coverable
+    w = [0.05, 0.05, 0.05]
+    d = [0.0, 0.06, 0.2]
+    sel = deadline_knapsack(w, d, capacity=1.0)
+    assert 0 not in sel
+    # selected items, transmitted EDF from t=0, all finish by deadline
+    order = sorted(sel, key=lambda i: d[i])
+    t = 0.0
+    for i in order:
+        t += w[i]
+        assert t <= d[i] + 1e-9
+
+
+def test_deadline_knapsack_maximises_covered_time():
+    # greedy-by-deadline would take item 0 (d=0.05) and lose items 1+2;
+    # the DP must find the {1, 2} placement instead
+    w = [0.05, 0.04, 0.04]
+    d = [0.05, 0.04, 0.08]
+    sel = set(deadline_knapsack(w, d, capacity=1.0))
+    assert sel == {1, 2}
+
+
+def test_deadline_knapsack_memo_distinguishes_deadlines():
+    """Regression: the memo key must include the deadline tuple — two
+    instances identical except for deadlines are different problems."""
+    w = [0.05, 0.05]
+    loose = deadline_knapsack(w, [1.0, 1.0], capacity=1.0)
+    tight = deadline_knapsack(w, [0.0, 0.0], capacity=1.0)
+    assert set(loose) == {0, 1}
+    assert tight == []
+    # and ask the loose instance again — the cache must still say {0, 1}
+    assert set(deadline_knapsack(w, [1.0, 1.0], capacity=1.0)) == {0, 1}
+
+
+def test_deadline_knapsack_capacity_binds():
+    w = [0.4, 0.4, 0.4]
+    d = [10.0, 10.0, 10.0]
+    sel = deadline_knapsack(w, d, capacity=0.9)
+    assert len(sel) == 2
+
+
+# ---------------------------------------------------------------------------
+# plan_ag_stream
+# ---------------------------------------------------------------------------
+def _merging_schedule(n=6, cr=2.5):
+    t = make_times([0.02] * n, [0.03] * n, [c * cr * 0.05 / 1.0 for c in [1] * n])
+    sched, _, scfg, _ = feedback_solve(t, WALK)
+    return t, sched, scfg
+
+
+def test_plan_ag_stream_gather_skip_composition():
+    t, sched, scfg = _merging_schedule()
+    plan = plan_ag_stream(sched, t, scfg, gather_skip=True)
+    fresh = {
+        tt for tt in range(sched.period)
+        if tt == 0 or sched.phases[tt - 1].do_update
+    }
+    phases_with_items = {i.phase for i in plan.items}
+    assert phases_with_items == fresh
+    # stale positions are served from the replicated cache: no items
+    for tt in range(sched.period):
+        n_items = len(plan.items_for_phase(tt))
+        assert n_items == (t.n if tt in fresh else 0)
+    # without gather-skip every position gathers every bucket
+    plan_all = plan_ag_stream(sched, t, scfg, gather_skip=False)
+    assert {i.phase for i in plan_all.items} == set(range(sched.period))
+    assert len(plan_all.items) == sched.period * t.n
+    assert plan_all.total_s >= plan.total_s
+
+
+def test_plan_ag_stream_coverage_accounting():
+    t, sched, scfg = _merging_schedule()
+    plan = plan_ag_stream(sched, t, scfg)
+    assert 0.0 <= plan.coverage <= 1.0
+    assert plan.covered_s == pytest.approx(
+        sum(i.duration for i in plan.items if i.covered))
+    # every covered item actually meets its deadline on its link when
+    # transmitted EDF within its phase
+    for tt in range(sched.period):
+        for link in (0, 1):
+            clock = 0.0
+            items = sorted(
+                (i for i in plan.items_for_phase(tt)
+                 if i.covered and i.link == link),
+                key=lambda i: i.deadline,
+            )
+            mu = scfg.mu if link == 1 else 1.0
+            for i in items:
+                clock += i.duration * mu
+                assert clock <= i.deadline + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+@given(times_strategy)
+@settings(max_examples=20, deadline=None)
+def test_streamed_never_slower_than_burst(t):
+    times = make_times(*t)
+    plans = DeftScheduler(times, SchedulerConfig()).run(24)
+    ag = ag_times(times)
+    r_s = simulate_deft(times, plans, ag_times=ag, ag_mode="streamed")
+    r_b = simulate_deft(times, plans, ag_times=ag, ag_mode="burst")
+    assert r_s.iteration_time <= r_b.iteration_time + 1e-9
+    assert r_s.ag_stall_s >= 0.0 and r_b.ag_stall_s >= 0.0
+
+
+def test_hopeless_deadline_prices_a_stall():
+    """Bucket 0's AG can never beat its deadline (forward-prefix 0), so
+    streaming must charge a stall — and a big AG must slow iteration."""
+    times = make_times([0.01] * 4, [0.02] * 4, [0.01] * 4)
+    plans = DeftScheduler(times, SchedulerConfig()).run(24)
+    base = simulate_deft(times, plans)
+    big_ag = [0.5, 0.0, 0.0, 0.0]
+    r = simulate_deft(times, plans, ag_times=big_ag, ag_mode="streamed")
+    assert r.ag_stall_s > 0.0
+    assert r.iteration_time > base.iteration_time
+
+
+def test_ag_skip_reduces_traffic():
+    times = make_times([0.01] * 4, [0.02] * 4, [0.08] * 4)
+    plans = DeftScheduler(times, SchedulerConfig()).run(24)
+    ag = ag_times(times)
+    r_skip = simulate_deft(times, plans, ag_times=ag, ag_skip=True)
+    r_all = simulate_deft(times, plans, ag_times=ag, ag_skip=False)
+    assert r_skip.iteration_time <= r_all.iteration_time + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Planner facade
+# ---------------------------------------------------------------------------
+def test_planner_times_path_matches_shim():
+    t = make_times([0.02] * 5, [0.03] * 5, [0.12] * 5)
+    sched_s, verdict_s, scfg_s, retries_s = feedback_solve(t, WALK)
+    res = Planner().plan(PlanRequest(times=t, walk=WALK))
+    assert res.schedule == sched_s
+    assert res.verdict == verdict_s
+    assert res.scheduler_cfg == scfg_s
+    assert res.retries == retries_s
+    assert res.ok and res.ag_plan is None
+
+
+def test_planner_decoupled_attaches_ag_plan():
+    t = make_times([0.02] * 5, [0.03] * 5, [0.12] * 5)
+    res = Planner().plan(PlanRequest(times=t, walk=WALK, decoupled=True))
+    assert res.ag_plan is not None
+    assert res.ag_plan.period == res.schedule.period
+    # the schedule was solved on the RS-side profile
+    rs_only = Planner().plan(
+        PlanRequest(times=rs_times(t), walk=WALK))
+    assert res.schedule == rs_only.schedule
+    # AG durations in the plan price the split-off half
+    split = ag_times(t)
+    for item in res.ag_plan.items:
+        assert item.duration == pytest.approx(split[item.bucket])
+
+
+def test_planner_default_walk_used_when_request_has_none():
+    t = make_times([0.02] * 4, [0.03] * 4, [0.1] * 4)
+    res = Planner(walk=WALK).plan(PlanRequest(times=t))
+    res2 = Planner().plan(PlanRequest(times=t, walk=WALK))
+    assert res.schedule == res2.schedule
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig validation
+# ---------------------------------------------------------------------------
+def test_runtime_config_validation():
+    RuntimeConfig(fsdp=True, decoupled=True)          # legal
+    RuntimeConfig(fsdp=True, gather_skip=True)        # legal
+    with pytest.raises(ValueError, match="loss_chunk"):
+        RuntimeConfig(loss_chunk=-1)
+    with pytest.raises(ValueError, match="gather_skip"):
+        RuntimeConfig(gather_skip=True)               # needs sharded flat
+    with pytest.raises(ValueError, match="decoupled"):
+        RuntimeConfig(decoupled=True)                 # needs sharded flat
+    with pytest.raises(ValueError, match="decoupled"):
+        RuntimeConfig(fsdp=True, flat_state=False, decoupled=True)
+    with pytest.raises(ValueError, match="compute_dtype"):
+        RuntimeConfig(flat_state=False, compute_dtype=jnp.bfloat16)
+
+
+def test_runtime_config_replace():
+    cfg = RuntimeConfig(fsdp=True, decoupled=True)
+    off = cfg.replace(decoupled=False)
+    assert off.fsdp and not off.decoupled
+    with pytest.raises(ValueError, match="decoupled"):
+        cfg.replace(fsdp=False)                       # re-validates
+
+
+def _tiny_runtime_parts():
+    base = get_config("qwen3-4b")
+    cfg = dataclasses.replace(
+        base, name="qwen3-tiny", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bucket_of, nb = assign_buckets(params, cfg, partition_elems=40_000)
+    t = leaf_bucket_times(params, cfg, bucket_of, nb,
+                          HardwareModel(dp_degree=2), 32, 4)
+    scale = 1.8 * (t.fwd_total + t.bwd_total) / t.comm_total
+    t = BucketTimes(t.fwd, t.bwd, tuple(c * scale for c in t.comm))
+    sched, _, _, _ = feedback_solve(t, WALK)
+    lay = build_bucket_layout(params, bucket_of, nb, shard_count=1)
+    return cfg, adamw(3e-4), sched, lay
+
+
+def test_runtime_rejects_config_plus_legacy_kwargs(single_mesh):
+    cfg, opt, sched, lay = _tiny_runtime_parts()
+    with pytest.raises(ValueError, match="not both"):
+        DeftRuntime(cfg, opt, sched, lay, single_mesh,
+                    config=RuntimeConfig(fsdp=True), fsdp=True)
+    # either style alone is fine, and they agree
+    rt_a = DeftRuntime(cfg, opt, sched, lay, single_mesh, fsdp=True)
+    rt_b = DeftRuntime(cfg, opt, sched, lay, single_mesh,
+                       config=RuntimeConfig(fsdp=True))
+    assert rt_a.config == rt_b.config
+    assert rt_a.stats()["decoupled"] is False
+
+
+def test_spawn_inherits_and_rescopes_config(single_mesh):
+    cfg, opt, sched, lay = _tiny_runtime_parts()
+    rt = DeftRuntime(cfg, opt, sched, lay, single_mesh,
+                     config=RuntimeConfig(fsdp=True, decoupled=True))
+    child = rt.spawn()
+    assert child.config.decoupled and child.config.fsdp
+    # decoupled cannot survive losing the sharded flat engine
+    child2 = rt.spawn(fsdp=False)
+    assert not child2.config.decoupled
+    with pytest.raises(ValueError, match="not both"):
+        rt.spawn(config=RuntimeConfig(fsdp=True), fsdp=True)
+
+
+# ---------------------------------------------------------------------------
+# the engine: parity + jaxpr census (single device)
+# ---------------------------------------------------------------------------
+def _first_compute_ag_census(rt, state, cfg, tpos=0):
+    """all_gather count before the first compute primitive (the embed
+    lookup's ``gather``) inside the jaxpr that holds the all-gathers."""
+    key_t = rt._schedule_keys(rt.schedule)[tpos]
+    b0 = make_batch(cfg, 0, 0, 4, 32)
+    jaxpr = jax.make_jaxpr(
+        lambda s, bb: rt._entries[key_t].jitted(s, bb))(state, b0)
+
+    def walk(j):
+        names = [e.primitive.name for e in j.eqns]
+        if "all_gather" in names:
+            yield names
+        for e in j.eqns:
+            for v in e.params.values():
+                if isinstance(v, jax.extend.core.ClosedJaxpr):
+                    yield from walk(v.jaxpr)
+                elif hasattr(v, "eqns"):
+                    yield from walk(v)
+
+    best = None
+    for names in walk(jaxpr.jaxpr):
+        ag = [i for i, n in enumerate(names) if n == "all_gather"]
+        comp = [i for i, n in enumerate(names)
+                if n in ("gather", "dot_general")]
+        if not ag or not comp:
+            continue
+        early = sum(1 for i in ag if i < min(comp))
+        if best is None or len(ag) > best[1]:
+            best = (early, len(ag))
+    assert best is not None, "no jaxpr with all_gathers found"
+    return best
+
+
+def test_decoupled_parity_and_streaming(single_mesh):
+    """The decoupled engine trains bit-identically to the fused one, and
+    its phase-0 jaxpr does NOT front-load the all-gather burst: only the
+    embedding's bucket is gathered before the first compute primitive,
+    the rest stream in at their consuming blocks."""
+    cfg, opt, sched, lay = _tiny_runtime_parts()
+    rt_f = DeftRuntime(cfg, opt, sched, lay, single_mesh, fsdp=True)
+    rt_d = DeftRuntime(cfg, opt, sched, lay, single_mesh,
+                       config=RuntimeConfig(fsdp=True, decoupled=True))
+    key = jax.random.PRNGKey(1)
+    sf = rt_f.init_state(key)
+    sd = rt_d.init_state(key)
+    with jax.set_mesh(single_mesh):
+        for i in range(sched.period):
+            b = make_batch(cfg, 0, i, 4, 32)
+            sf, mf = rt_f.step(i, sf, b)
+            sd, md = rt_d.step(i, sd, b)
+            assert float(mf["loss"]) == float(md["loss"]), i
+        for bix, (a, c) in enumerate(zip(sf["pbuf"], sd["pbuf"])):
+            assert jnp.array_equal(a, c), f"pbuf[{bix}] diverged"
+
+        early_f, n_ag_f = _first_compute_ag_census(rt_f, sf, cfg)
+        early_d, n_ag_d = _first_compute_ag_census(rt_d, sd, cfg)
+    # both engines move the same number of all-gathers per phase (the
+    # param gathers plus any stored-sync gather-backs) ...
+    assert n_ag_f == n_ag_d
+    assert n_ag_f >= lay.n_buckets
+    # ... but fused front-loads the full param burst before the first
+    # compute primitive, while decoupled issues only the embed bucket's
+    assert early_f == lay.n_buckets
+    assert early_d == 1
+    assert rt_d.stats()["decoupled"] is True
+
+
+# ---------------------------------------------------------------------------
+# 4-device parity (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+_SCRIPT = r"""
+import dataclasses
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.bucket import BucketTimes
+from repro.core.deft import Planner, PlanRequest
+from repro.core.preserver import WalkParams
+from repro.core.profiler import HardwareModel
+from repro.data.pipeline import make_batch
+from repro.optim.optimizers import adamw
+from repro.train import (DeftRuntime, RuntimeConfig, assign_buckets,
+                         build_bucket_layout, init_train_state,
+                         leaf_bucket_times)
+
+mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+cfg = reduce_for_smoke(get_config("qwen3-4b"))
+opt = adamw(1e-3)
+key = jax.random.PRNGKey(0)
+probe = init_train_state(key, cfg, opt)
+bucket_of, nb = assign_buckets(probe["params"], cfg, partition_elems=150_000)
+B, S = 8, 32
+times = leaf_bucket_times(probe["params"], cfg, bucket_of, nb,
+                          HardwareModel(dp_degree=4), S, 2)
+scale = 1.8 * (times.fwd_total + times.bwd_total) / times.comm_total
+times = BucketTimes(times.fwd, times.bwd, tuple(c * scale for c in times.comm))
+WALK = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+res = Planner().plan(PlanRequest(times=times, walk=WALK, decoupled=True))
+sched = res.schedule
+assert res.ag_plan is not None and res.ag_plan.period == sched.period
+
+lay = build_bucket_layout(probe["params"], bucket_of, nb, shard_count=2)
+rt_f = DeftRuntime(cfg, opt, sched, lay, mesh, fsdp=True)
+rt_d = DeftRuntime(cfg, opt, sched, lay, mesh,
+                   config=RuntimeConfig(fsdp=True, decoupled=True))
+sf = rt_f.init_state(key)
+sd = rt_d.init_state(key)
+with jax.set_mesh(mesh):
+    for i in range(sched.period + 1):
+        b = make_batch(cfg, 0, i, B, S)
+        sf, mf = rt_f.step(i, sf, b)
+        sd, md = rt_d.step(i, sd, b)
+        lf, ld = float(mf["loss"]), float(md["loss"])
+        assert abs(lf - ld) <= 1e-5 * max(1.0, abs(lf)), (i, lf, ld)
+    diff = max(
+        float(jnp.max(jnp.abs(a - c)))
+        for a, c in zip(sf["pbuf"], sd["pbuf"]))
+    assert diff <= 1e-5, f"pbuf diverged: {diff}"
+    print(f"losses equal to 1e-5; max pbuf diff {diff:.2e}")
+print("DECOUPLED_4DEV_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_decoupled_parity_on_4_devices(tmp_path):
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    script = tmp_path / "run.py"
+    script.write_text(_SCRIPT)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(script), src],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "DECOUPLED_4DEV_OK" in out.stdout
