@@ -99,6 +99,31 @@ _DECOUPLED_SCENARIO = {
     "ag_burst_bytes_delta": None,
 }
 
+_PRECISION_SCENARIO = {
+    "host_devices": None,
+    "model": {"name": None, "params": None, "n_leaves": None,
+              "n_buckets": None},
+    "schedule": {"period": None, "updates_per_period": None},
+    "engine": {"flat_state": None, "wire_precision": None,
+               "master_dtype": None},
+    "steps_timed": None,
+    "compile_s_mixed_aot": None,
+    "steps_per_s_f32": None,
+    "steps_per_s_mixed": None,
+    "steps_per_s_ratio_mixed_vs_f32": None,
+    "sim": {
+        "iteration_time_f32": None,
+        "iteration_time_mixed": None,
+        "coverage_f32": None,
+        "coverage_mixed": None,
+        "wire_bytes_scale_mixed": None,
+        "gate_ok_mixed": None,
+        "ladder_candidates": None,
+    },
+    "wire_bytes_per_cycle_f32": None,
+    "wire_bytes_per_cycle_mixed": None,
+}
+
 _REPACK = {
     "n_buckets_a": None,
     "n_buckets_b": None,
@@ -141,6 +166,7 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
         "dp4": _RUNTIME_SCENARIO,
         "fsdp_flat": _FSDP_FLAT_SCENARIO,
         "decoupled": _DECOUPLED_SCENARIO,
+        "precision": _PRECISION_SCENARIO,
     },
     "BENCH_adapt.json": {
         "scenario": {"drop_step": None, "drop_scale": None,

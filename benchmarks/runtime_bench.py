@@ -549,6 +549,136 @@ def _inner_decoupled() -> dict:
     }
 
 
+def _inner_precision() -> dict:
+    """precision scenario (DESIGN.md §13): planner-chosen mixed wire
+    precision vs all-f32 under constrained bandwidth, on 4 forced host
+    devices.  The comm profile is scaled so the f32 wire time is ~1.8x
+    the compute window — the regime where the §13 ladder has headroom —
+    and the Planner prices the full per-bucket ladder.  Reported
+    side by side:
+
+    * simulated steady state from the planner's own priced candidates —
+      the adopted mixed policy's coverage must be >= the all-f32 row's
+      (downgrading wire bytes can only relieve the comm capacity; the
+      floor test pins this on the checked-in file);
+    * measured steps/s of the SAME schedule executed with the f32
+      layout vs the precision layout.  On CPU hosts the collectives are
+      local memcpys while the quantize kernels are real work, so the
+      measured ratio is reported, not floored — the wire-byte win needs
+      a real interconnect to show up in wall time (the exact
+      plan-vs-measured byte accounting is pinned by
+      tests/test_precision.py::test_runtime_wire_bytes_match_plan).
+    """
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+
+    import repro  # noqa: F401
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core.bucket import BucketTimes
+    from repro.core.deft import Planner, PlanRequest
+    from repro.core.preserver import WalkParams
+    from repro.core.profiler import HardwareModel
+    from repro.data.pipeline import make_batch
+    from repro.optim.optimizers import adamw
+    from repro.train import (
+        DeftRuntime,
+        assign_buckets,
+        build_bucket_layout,
+        init_train_state,
+        leaf_bucket_times,
+    )
+
+    cfg = reduce_for_smoke(get_config("qwen3-4b"))
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    dp = jax.device_count()
+    mesh = jax.make_mesh((dp, 1), ("data", "model"))
+    B, S = max(4, dp), 32
+
+    probe = init_train_state(key, cfg, opt)
+    bucket_of, nb = assign_buckets(probe["params"], cfg,
+                                   partition_elems=150_000)
+    times = leaf_bucket_times(probe["params"], cfg, bucket_of, nb,
+                              HardwareModel(dp_degree=max(dp, 2)), S,
+                              max(B // dp, 1))
+    # constrained bandwidth: f32 wire time ~1.8x the compute window
+    # (CR 1.8, same regime as the other scenarios) — compute cannot
+    # cover the f32 wire, so the ladder has headroom.  The whole
+    # profile is then scaled into the paper regime (compute ~100 ms per
+    # iteration): the smoke model's microsecond comm times sit BELOW
+    # the 20 us collective-latency floor, where the §13 pricing rightly
+    # refuses to downgrade — bandwidth-dominated times are the regime
+    # the policy is for.  Only the schedule structure feeds the
+    # measured engines, so the time unit is free to choose.
+    scale = 1.8 * (times.fwd_total + times.bwd_total) / max(
+        times.comm_total, 1e-12
+    )
+    ms = 0.1 / max(times.fwd_total + times.bwd_total, 1e-12)
+    times = BucketTimes(tuple(f * ms for f in times.fwd),
+                        tuple(b * ms for b in times.bwd),
+                        tuple(c * scale * ms for c in times.comm))
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    res = Planner().plan(PlanRequest(times=times, walk=walk,
+                                     wire_precision="auto"))
+    sched = res.schedule
+    f32 = next(s for s in res.precision_candidates
+               if all(w == "f32" for w in s.policy.wire))
+    mix = (next(s for s in res.precision_candidates
+                if s.policy == res.precision)
+           if res.precision is not None else f32)
+
+    lay_f32 = build_bucket_layout(probe["params"], bucket_of, nb)
+    lay_mix = (lay_f32.with_precision(res.precision)
+               if res.precision is not None else lay_f32)
+    batch = make_batch(cfg, 0, 0, B, S)
+    with mesh:
+        rt_f = DeftRuntime(cfg, opt, sched, lay_f32, mesh)
+        state_f = rt_f.init_state(key)
+        rt_f.compile(state_f, batch)
+        rt_m = DeftRuntime(cfg, opt, sched, lay_mix, mesh)
+        state_m = rt_m.init_state(key)
+        compile_s = sum(rt_m.compile(state_m, batch).values())
+
+        engines = {
+            "f32": [lambda i, s: rt_f.step(i, s, batch), state_f],
+            "mixed": [lambda i, s: rt_m.step(i, s, batch), state_m],
+        }
+        chunk = sched.period                 # period-aligned windows
+        reps = max(_STEPS // chunk, 1)
+        best, _, _ = _paired_min_of_reps(
+            engines, warmup=sched.period, chunk=chunk, reps=reps
+        )
+
+    return {
+        "host_devices": dp,
+        "model": {"name": cfg.name, "params": int(cfg.total_params()),
+                  "n_leaves": lay_f32.n_leaves, "n_buckets": nb},
+        "schedule": {"period": sched.period,
+                     "updates_per_period": sched.updates_per_period},
+        "engine": {"flat_state": True,
+                   "wire_precision": (res.precision.describe()
+                                      if res.precision else "f32x%d" % nb),
+                   "master_dtype": "f32"},
+        "timing": "paired-interleaved-min-of-reps",
+        "steps_timed": reps * chunk,
+        "compile_s_mixed_aot": compile_s,
+        "steps_per_s_f32": 1.0 / best["f32"],
+        "steps_per_s_mixed": 1.0 / best["mixed"],
+        "steps_per_s_ratio_mixed_vs_f32": best["f32"] / best["mixed"],
+        "sim": {
+            "iteration_time_f32": f32.iteration_time,
+            "iteration_time_mixed": mix.iteration_time,
+            "coverage_f32": f32.coverage,
+            "coverage_mixed": mix.coverage,
+            "wire_bytes_scale_mixed": mix.wire_bytes_scale,
+            "gate_ok_mixed": bool(mix.verdict.ok),
+            "ladder_candidates": len(res.precision_candidates),
+        },
+        "wire_bytes_per_cycle_f32": sum(rt_f.wire_bytes_per_phase),
+        "wire_bytes_per_cycle_mixed": sum(rt_m.wire_bytes_per_phase),
+    }
+
+
 def _bench_update_path() -> dict:
     """Isolated optimizer-apply wall time: fused flat bucket kernels
     (kernels/bucket_update) vs per-leaf apply_updates over the same
@@ -776,7 +906,8 @@ def run() -> None:
     for name, args in (("smoke", ["--inner", "1"]),
                        ("dp4", ["--inner", "4"]),
                        ("fsdp_flat", ["--inner-fsdp"]),
-                       ("decoupled", ["--inner-decoupled"])):
+                       ("decoupled", ["--inner-decoupled"]),
+                       ("precision", ["--inner-precision"])):
         proc = subprocess.run(
             [sys.executable, os.path.abspath(__file__), *args],
             env=env, capture_output=True, text=True, timeout=1800,
@@ -846,6 +977,22 @@ def run() -> None:
           f"fused bursts {dc['ag_burst_bytes_fused'] / 1e6:.1f}MB "
           f"pre-forward vs decoupled peak "
           f"{dc['ag_burst_bytes_decoupled_peak'] / 1e6:.1f}MB")
+    pc = results["precision"]
+    print(f"runtime_precision_sim_coverage,"
+          f"{pc['sim']['coverage_mixed'] * 1e4:.0f},"
+          f"mixed {pc['sim']['coverage_mixed']:.3f} vs f32 "
+          f"{pc['sim']['coverage_f32']:.3f} "
+          f"({pc['engine']['wire_precision']}, wire bytes "
+          f"x{pc['sim']['wire_bytes_scale_mixed']:.2f})")
+    print(f"runtime_precision_steps_per_s,"
+          f"{1e6 / pc['steps_per_s_mixed']:.0f},"
+          f"mixed {pc['steps_per_s_mixed']:.3f} vs f32 "
+          f"{pc['steps_per_s_f32']:.3f} steps/s "
+          f"({pc['steps_per_s_ratio_mixed_vs_f32']:.2f}x)")
+    print(f"runtime_precision_wire_bytes_per_cycle,"
+          f"{pc['wire_bytes_per_cycle_mixed']},"
+          f"mixed {pc['wire_bytes_per_cycle_mixed'] / 1e6:.1f}MB vs f32 "
+          f"{pc['wire_bytes_per_cycle_f32'] / 1e6:.1f}MB")
     for gran, u in results["update_path"].items():
         print(f"update_path_{gran}_apply_ms,"
               f"{u['apply_ms_flat'] * 1e3:.0f},"
@@ -876,6 +1023,9 @@ if __name__ == "__main__":
         print()
     elif len(sys.argv) > 1 and sys.argv[1] == "--inner-decoupled":
         json.dump(_inner_decoupled(), sys.stdout)
+        print()
+    elif len(sys.argv) > 1 and sys.argv[1] == "--inner-precision":
+        json.dump(_inner_precision(), sys.stdout)
         print()
     else:
         run()

@@ -47,10 +47,52 @@ def render(timeline, t_end, label):
         print(f"{stream:8s} |{''.join(row)}|")
 
 
+def _per_bucket_precision(event) -> str:
+    """``[b0=int8 b1=bf16 ...]`` for a precision-changing replan, plus
+    the wire-byte delta the downgrade buys."""
+    wire = (event.new_precision.wire if event.new_precision
+            else ("f32",) * event.new_n_buckets)
+    cells = " ".join(f"b{i}={w}" for i, w in enumerate(wire))
+    return (f"    precision: [{cells}]  wire bytes "
+            f"x{event.wire_bytes_scale:.2f}")
+
+
+def explore_precision(times: BucketTimes, wire_precision: str) -> None:
+    """Print the §13 precision ladder the planner scores: one row per
+    candidate policy (iteration time, simulated coverage, wire-byte
+    scale, Preserver verdict), then the adopted per-bucket wire."""
+    from repro.core.deft import Planner, PlanRequest
+    from repro.core.preserver import WalkParams
+
+    walk = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+    res = Planner().plan(PlanRequest(
+        times=times, walk=walk, wire_precision=wire_precision,
+    ))
+    print(f"\n== precision ladder (wire_precision={wire_precision}) ==")
+    print(f"{'policy':<24s} {'iter ms':>9s} {'coverage':>9s} "
+          f"{'bytes':>7s} {'gate':>6s}")
+    for s in res.precision_candidates:
+        mark = " <- adopted" if s.policy == res.precision else ""
+        print(f"{s.policy.describe():<24s} "
+              f"{s.iteration_time * 1e3:9.2f} {s.coverage:9.3f} "
+              f"x{s.wire_bytes_scale:5.2f} "
+              f"{'ok' if s.verdict.ok else 'FAIL':>6s}{mark}")
+    if res.precision is not None:
+        cells = " ".join(
+            f"b{i}={w}" for i, w in enumerate(res.precision.wire)
+        )
+        print(f"adopted per-bucket wire: [{cells}]")
+
+
 def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
-                  steps: int, tracer=None) -> None:
+                  steps: int, tracer=None,
+                  wire_precision: str = "f32") -> None:
     """Replay the control plane on a synthetic bandwidth drop and print
-    every replan event — the terminal view of the Fig. 7 loop acting."""
+    every replan event — the terminal view of the Fig. 7 loop acting.
+    Precision-changing replans (wire_precision='auto', or any replan
+    whose calibrated comm_scale crosses the collapse bar) additionally
+    print the per-bucket wire choice and the bytes delta."""
+    from repro.adapt import AdaptConfig
     from repro.core.deft import feedback_solve
     from repro.core.preserver import WalkParams
 
@@ -65,10 +107,17 @@ def explore_adapt(times: BucketTimes, drop_step: int, drop_scale: float,
     src = SyntheticTelemetrySource(
         times, BandwidthDrop(step=drop_step, comm_scale=drop_scale)
     )
-    ctrl = AdaptiveController(times, schedule, scfg, walk=walk,
-                              tracer=tracer)
-    run_control_loop(ctrl, src, steps,
-                     on_event=lambda e: print(format_event(e)))
+    ctrl = AdaptiveController(
+        times, schedule, scfg, walk=walk, tracer=tracer,
+        cfg=AdaptConfig(wire_precision=wire_precision),
+    )
+
+    def on_event(e):
+        print(format_event(e))
+        if e.precision_changed:
+            print(_per_bucket_precision(e))
+
+    run_control_loop(ctrl, src, steps, on_event=on_event)
     if not ctrl.events:
         print("(no drift detected — no replan events)")
     else:
@@ -225,6 +274,11 @@ def main() -> None:
                     help="with --adapt: the replay also considers "
                          "candidate bucket partitions and times a real "
                          "smoke-scale re-pack per adopted change")
+    ap.add_argument("--wire-precision", default="f32",
+                    choices=["auto", "f32", "bf16", "int8"],
+                    help="per-bucket wire precision for the planner "
+                         "ladder table and the --adapt replay "
+                         "('auto' lets the knapsack pick per bucket)")
     ap.add_argument("--drop-step", type=int, default=40)
     ap.add_argument("--drop-scale", type=float, default=3.0)
     ap.add_argument("--adapt-steps", type=int, default=120)
@@ -273,9 +327,12 @@ def main() -> None:
                        step=sp.step, track=sp.track, **sp.args)
         tracer.clock.advance(t_end)     # control events after the window
 
+    if args.wire_precision != "f32":
+        explore_precision(t, args.wire_precision)
+
     if args.adapt:
         explore_adapt(t, args.drop_step, args.drop_scale, args.adapt_steps,
-                      tracer=tracer)
+                      tracer=tracer, wire_precision=args.wire_precision)
         if args.adapt_repartition:
             explore_repartition(args.arch, args.drop_step,
                                 args.drop_scale, args.adapt_steps,

@@ -6,6 +6,12 @@ points.  All scheduling flows through the unified ``Planner`` facade
 ``plan_deft``) survive only as deprecated shims for out-of-tree callers
 and the tests that pin shim equivalence.
 
+Also linted: hard-coded f32 wire-byte math.  ``Bucket.bytes_fp32`` is a
+deprecated shim for ``Bucket.wire_bytes(policy)``, and any literal
+``4 * n_elements`` (either operand order) outside ``core/bucket.py``
+bypasses the per-bucket PrecisionPolicy — bytes on the wire are a
+function of the layout's precision, not of the element count alone.
+
 AST-based so prose (docstrings, comments) never trips it: only actual
 ``import``s of the legacy names and ``Name``/``Attribute`` references in
 code are flagged.  ``core/deft.py`` (defines the shims) and
@@ -23,11 +29,24 @@ LEGACY = {
     "solve_schedule",
     "plan_deft",
 }
+LEGACY_BYTES = {"bytes_fp32"}
 EXEMPT = {"core/deft.py", "core/__init__.py"}
+BYTES_EXEMPT = {"core/bucket.py"}
+
+
+def _is_n_elements(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Attribute) and node.attr == "n_elements"
+    ) or (isinstance(node, ast.Name) and node.id == "n_elements")
+
+
+def _is_four(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value == 4
 
 
 def violations(path: pathlib.Path, rel: str):
     tree = ast.parse(path.read_text(), filename=rel)
+    bytes_ok = rel in BYTES_EXEMPT
     for node in ast.walk(tree):
         if isinstance(node, ast.ImportFrom):
             for alias in node.names:
@@ -37,6 +56,26 @@ def violations(path: pathlib.Path, rel: str):
             yield node.lineno, f"references {node.id}"
         elif isinstance(node, ast.Attribute) and node.attr in LEGACY:
             yield node.lineno, f"references .{node.attr}"
+        elif (
+            isinstance(node, ast.Attribute)
+            and node.attr in LEGACY_BYTES
+            and not bytes_ok
+        ):
+            yield node.lineno, (
+                f"references .{node.attr} (use wire_bytes(policy))"
+            )
+        elif (
+            isinstance(node, ast.BinOp)
+            and isinstance(node.op, ast.Mult)
+            and not bytes_ok
+            and (
+                (_is_four(node.left) and _is_n_elements(node.right))
+                or (_is_four(node.right) and _is_n_elements(node.left))
+            )
+        ):
+            yield node.lineno, (
+                "hard-codes 4 * n_elements (use wire_bytes(policy))"
+            )
 
 
 def main() -> int:

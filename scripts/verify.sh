@@ -42,6 +42,27 @@ missing = need - kinds
 assert not missing, f"trace_smoke.json missing span kinds: {missing}"
 print(f"trace_smoke.json OK ({sorted(k for k in kinds if k)})")
 PY
+  echo "== precision smoke loop (wire quantization end to end, §13) =="
+  # forced int8 wire + bf16sr master -> quantized layout -> traced
+  # quantized collectives ('auto' would keep f32 here: the smoke
+  # model's us-scale comm sits under the collective latency floor, so
+  # the ladder rightly finds no gain).  The trace must carry per-group
+  # wire_bytes/precision attrs so the wire-bytes attribution
+  # (obs.wire_bytes_report) can close the loop
+  python -m repro.launch.train --smoke --scheduler deft --steps 12 \
+    --wire-precision int8 --master-dtype bf16sr \
+    --trace trace_precision.json
+  python - <<'PY'
+import json
+evs = json.load(open("trace_precision.json"))["traceEvents"]
+coll = [e for e in evs if e.get("cat") == "collective-group"]
+assert coll, "trace_precision.json has no collective-group spans"
+tagged = [e for e in coll if "wire_bytes" in e.get("args", {})]
+assert tagged, "collective-group spans carry no wire_bytes attrs"
+prec = {e["args"].get("precision") for e in tagged}
+print(f"trace_precision.json OK ({len(tagged)} quantized collective "
+      f"spans, precisions={sorted(p for p in prec if p)})")
+PY
   echo "verify.sh --smoke: OK"
   exit 0
 fi

@@ -35,10 +35,12 @@ from repro.adapt.calibrate import (
     CalibratedProfile,
     calibrate,
     planned_phase_durations,
+    scale_times,
 )
 from repro.adapt.telemetry import Telemetry, TelemetryConfig
 from repro.core.bucket import BucketTimes
 from repro.core.deft import Planner, PlanRequest
+from repro.core.precision import PrecisionPolicy, apply_wire_precision
 from repro.core.preserver import (
     PreserverVerdict,
     WalkParams,
@@ -78,6 +80,18 @@ class AdaptConfig:
     # measured-WalkParams fit inputs
     eta: float = 1e-3             # learning rate fed to the walk fit
     base_batch: int = 256
+    # wire precision (DESIGN.md §13).  'f32' keeps precision FROZEN —
+    # the default controller never touches the wire (an explicitly
+    # installed policy is still re-priced and re-gated each replan).
+    # 'auto' opts precision in as an escalation lever: a replan whose
+    # calibrated comm_scale reaches ``precision_comm_scale`` (a
+    # bandwidth collapse rather than mild drift) walks the downgrade
+    # ladder — shedding wire bytes is cheaper than surrendering
+    # coverage to a starved link; short of the bar, the installed
+    # policy is kept as-is.  'bf16'/'int8' force that uniform wire on
+    # every replan (collapse still escalates to the full ladder).
+    wire_precision: str = "f32"
+    precision_comm_scale: float = 1.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,10 +120,21 @@ class ReplanEvent:
     # (None = the replan kept the current partition)
     partition: Optional["PartitionCandidate"] = None
     candidate_solves: Tuple = ()   # CandidateSolve table, input order
+    # ---- precision replans (DESIGN.md §13) ------------------------------
+    # None = precision planning did not engage (wire stayed at f32)
+    old_precision: Optional[PrecisionPolicy] = None
+    new_precision: Optional[PrecisionPolicy] = None
+    wire_bytes_scale: float = 1.0  # new policy wire bytes / all-f32 bytes
 
     @property
     def partition_changed(self) -> bool:
         return self.partition is not None
+
+    @property
+    def precision_changed(self) -> bool:
+        old = self.old_precision.wire if self.old_precision else None
+        new = self.new_precision.wire if self.new_precision else None
+        return old != new
 
     @property
     def coverage_delta(self) -> float:
@@ -134,6 +159,19 @@ class ReplanEvent:
                 f"  REPARTITION {self.old_n_buckets}->"
                 f"{self.new_n_buckets} buckets [{self.partition.tag}]"
             )
+        if self.precision_changed:
+            old = (
+                self.old_precision.describe() if self.old_precision
+                else "f32"
+            )
+            new = (
+                self.new_precision.describe() if self.new_precision
+                else "f32"
+            )
+            out += (
+                f"  PRECISION {old}->{new} "
+                f"(bytes x{self.wire_bytes_scale:.2f})"
+            )
         return out
 
 
@@ -150,12 +188,18 @@ class AdaptiveController:
         repartitioner: Optional["Repartitioner"] = None,
         bucket_of: Optional[Sequence[int]] = None,
         tracer: Optional[Tracer] = None,
+        precision: Optional[PrecisionPolicy] = None,
     ):
         self.cfg = cfg or AdaptConfig()
         self.tracer = tracer
         self.times = times                   # what the installed plan assumed
         self.schedule = schedule
         self.scheduler_cfg = scheduler_cfg
+        # the installed wire-precision policy (None = all-f32); replans
+        # that adopt a different one report it on the ReplanEvent so the
+        # caller can hot-swap layout.with_precision(...) alongside the
+        # schedule
+        self.precision = precision
         self.walk = walk or WalkParams(
             s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256
         )
@@ -213,6 +257,17 @@ class AdaptiveController:
         self._last_check_step = step
         return self._check(step)
 
+    def wire_times(self) -> BucketTimes:
+        """The installed plan's on-the-wire timing view: the planning
+        baseline re-priced by the installed precision policy.  Measured
+        wall times reflect the quantized wire, so the drift screen and
+        the calibration fit must compare against THIS, not the f32
+        baseline — otherwise an installed bf16 wire reads as a
+        permanent comm_scale ~0.5 'drift'."""
+        if self.precision is None or self.precision.all_f32:
+            return self.times
+        return apply_wire_precision(self.times, self.precision)
+
     # ---- drift detection -------------------------------------------------
     def measured_phase_durations(self) -> List[Optional[float]]:
         """Per-phase durations the drift screen and calibration consume:
@@ -234,7 +289,7 @@ class AdaptiveController:
         paying for (both are off the hot path; this keeps the common
         nothing-drifted check at ~zero cost)."""
         planned = planned_phase_durations(
-            self.times, self.scheduler_cfg, self.schedule.period
+            self.wire_times(), self.scheduler_cfg, self.schedule.period
         )
         dev = 0.0
         for p, m in zip(planned, self.measured_phase_durations()):
@@ -253,7 +308,7 @@ class AdaptiveController:
         profile: Optional[CalibratedProfile] = None
         if self.duration_deviation() > self.cfg.drift_threshold:
             profile = calibrate(
-                self.times,
+                self.wire_times(),
                 self.scheduler_cfg,
                 self.schedule.period,
                 self.measured_phase_durations(),
@@ -273,7 +328,7 @@ class AdaptiveController:
             return None
         if profile is None:
             profile = calibrate(
-                self.times,
+                self.wire_times(),
                 self.scheduler_cfg,
                 self.schedule.period,
                 self.measured_phase_durations(),
@@ -302,11 +357,36 @@ class AdaptiveController:
         tr0 = self.tracer.now() if self.tracer is not None else 0.0
         chosen: Optional["PartitionCandidate"] = None
         solves: Tuple = ()
-        new_times = profile.times
+        # the planner re-prices precision itself, so it consumes the
+        # UNPRICED f32 baseline re-based by the fitted drift scales;
+        # profile.times is the priced view x scales (what the wire saw)
+        replan_times = scale_times(
+            self.times, profile.comp_scale, profile.comm_scale
+        )
+        new_times = replan_times
+        # precision is opt-in: cfg.wire_precision='f32' keeps the wire
+        # frozen no matter what the link does (the pre-§13 contract).
+        # When opted in, a bandwidth collapse (calibrated comm_scale at
+        # or past the escalation bar) unlocks the full ladder for this
+        # replan; short of the bar, 'auto' keeps the already-installed
+        # policy, re-priced and re-gated as-is (precision=... path)
+        wire_req = self.cfg.wire_precision
+        collapse = profile.comm_scale >= self.cfg.precision_comm_scale
+        if wire_req != "f32" and collapse:
+            wire_req = "auto"
+        elif wire_req == "auto":
+            wire_req = "f32"    # no collapse: hold the current policy
+        forced = self.precision if wire_req == "f32" else None
+        if forced is not None and self.repartitioner is not None:
+            # a repartition may change n_buckets, invalidating a forced
+            # per-bucket policy — let the ladder re-derive one instead
+            forced, wire_req = None, "auto"
         if self.repartitioner is None:
             res = self.planner.plan(PlanRequest(
-                times=profile.times,
+                times=replan_times,
                 walk=walk,
+                wire_precision="f32" if forced is not None else wire_req,
+                precision=forced,
                 heterogeneous=self.scheduler_cfg.heterogeneous,
                 mu=self.scheduler_cfg.mu,
                 eps=self.cfg.eps,
@@ -328,7 +408,7 @@ class AdaptiveController:
             pairs = []
             for c in cands:
                 if c.tag == "current":
-                    pairs.append((c.tag, profile.times))
+                    pairs.append((c.tag, replan_times))
                 else:
                     pairs.append((c.tag, self.repartitioner.times_for(
                         c, comp_scale=cum_comp, comm_scale=cum_comm
@@ -336,6 +416,8 @@ class AdaptiveController:
             res = self.planner.plan(PlanRequest(
                 candidates=tuple(pairs),
                 walk=walk,
+                wire_precision="f32" if forced is not None else wire_req,
+                precision=forced,
                 baseline_tag="current",
                 min_gain=self.repartitioner.cfg.min_gain,
                 heterogeneous=self.scheduler_cfg.heterogeneous,
@@ -354,6 +436,19 @@ class AdaptiveController:
             new_times = best.times
             if best.tag != "current":
                 chosen = next(c for c in cands if c.tag == best.tag)
+            if res.precision is not None:
+                # precision rides on top of the winning partition: the
+                # winning policy's solve supersedes the f32 one
+                schedule, verdict, scfg = (
+                    res.schedule, res.verdict, res.scheduler_cfg
+                )
+        new_precision = res.precision
+        wscale = 1.0
+        for s in res.precision_candidates:
+            if s.policy == res.precision:
+                wscale = s.wire_bytes_scale
+        old_wire = self.precision.wire if self.precision else None
+        new_wire = new_precision.wire if new_precision else None
         replan_s = time.perf_counter() - t0
         event = ReplanEvent(
             step=step,
@@ -372,12 +467,16 @@ class AdaptiveController:
             changed=(
                 chosen is not None
                 or schedule.phases != self.schedule.phases
+                or old_wire != new_wire
             ),
             replan_s=replan_s,
             old_n_buckets=self.times.n,
             new_n_buckets=new_times.n,
             partition=chosen,
             candidate_solves=solves,
+            old_precision=self.precision,
+            new_precision=new_precision,
+            wire_bytes_scale=wscale,
         )
         if self.tracer is not None:
             # the ReplanEvent as a trace span covering the solve
@@ -391,6 +490,9 @@ class AdaptiveController:
                 new_period=event.new_period,
                 changed=event.changed,
                 repartition=event.partition_changed,
+                precision=(
+                    new_precision.describe() if new_precision else "f32"
+                ),
             )
         self.events.append(event)
         self._last_replan_step = step
@@ -405,6 +507,7 @@ class AdaptiveController:
         self.times = new_times
         self.schedule = schedule
         self.scheduler_cfg = scfg
+        self.precision = new_precision
         self._cum_comp *= profile.comp_scale
         self._cum_comm *= profile.comm_scale
         if chosen is not None:
@@ -419,6 +522,12 @@ class AdaptiveController:
             "swaps_requested": sum(1 for e in self.events if e.changed),
             "repartitions": sum(
                 1 for e in self.events if e.partition_changed
+            ),
+            "precision_changes": sum(
+                1 for e in self.events if e.precision_changed
+            ),
+            "wire_precision": (
+                self.precision.describe() if self.precision else "f32"
             ),
             "triggers": [e.trigger for e in self.events],
             "last_comp_scale": (

@@ -169,12 +169,18 @@ def save_layout_descriptor(
     (the accumulators were saved mid-generation) instead of restarting
     the cycle."""
     path = os.path.join(directory, f"layout_{step:08d}.json")
+    doc = {"bucket_of": list(layout.bucket_of_leaf),
+           "n_buckets": layout.n_buckets,
+           "shards": layout.shards,
+           "next_phase": next_phase,
+           "schedule_digest": digest}
+    if getattr(layout, "precision", None) is not None:
+        # §13: the wire/master policy is part of the layout — a resume
+        # must rebuild the same resident master dtype and wire plan
+        doc["precision"] = {"wire": list(layout.precision.wire),
+                            "master": layout.precision.master}
     with open(path + ".tmp", "w") as f:
-        json.dump({"bucket_of": list(layout.bucket_of_leaf),
-                   "n_buckets": layout.n_buckets,
-                   "shards": layout.shards,
-                   "next_phase": next_phase,
-                   "schedule_digest": digest}, f)
+        json.dump(doc, f)
     os.replace(path + ".tmp", path)
 
 
@@ -189,7 +195,16 @@ def load_layout_descriptor(directory: str, step: int, params_abs):
         return None, 0, ""
     with open(path) as f:
         d = json.load(f)
+    precision = None
+    if d.get("precision") is not None:
+        from repro.core.precision import PrecisionPolicy
+
+        precision = PrecisionPolicy(
+            wire=tuple(d["precision"]["wire"]),
+            master=d["precision"]["master"],
+        )
     layout = build_bucket_layout(params_abs, tuple(d["bucket_of"]),
-                                 d["n_buckets"], shard_count=d["shards"])
+                                 d["n_buckets"], shard_count=d["shards"],
+                                 precision=precision)
     return layout, int(d.get("next_phase", 0)), \
         str(d.get("schedule_digest", ""))

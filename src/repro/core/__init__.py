@@ -27,7 +27,17 @@ from repro.core.knapsack import (
     naive_knapsack,
     recursive_knapsack,
 )
+from repro.core.deft import PrecisionSolve
 from repro.core.policies import ALL_BASELINES, BaselinePolicy
+from repro.core.precision import (
+    WIRE_BYTES,
+    WIRE_DTYPES,
+    PrecisionPolicy,
+    apply_wire_precision,
+    check_precision_schedule,
+    precision_walk,
+    wire_bytes_total,
+)
 from repro.core.preserver import (
     PreserverVerdict,
     WalkParams,
@@ -56,6 +66,9 @@ __all__ = [
     "deadline_knapsack",
     "greedy_multi_knapsack", "knapsack_two_link", "naive_knapsack", "recursive_knapsack",
     "ALL_BASELINES", "BaselinePolicy",
+    "PrecisionPolicy", "PrecisionSolve", "WIRE_BYTES", "WIRE_DTYPES",
+    "apply_wire_precision", "check_precision_schedule", "precision_walk",
+    "wire_bytes_total",
     "PreserverVerdict", "WalkParams", "check_schedule", "expected_next_state", "rollout",
     "HardwareModel", "Profile", "profile_arch",
     "DeftSchedule", "DeftScheduler", "IterationPlan", "PhaseSpec",

@@ -40,9 +40,24 @@ class Bucket:
     layer_ids: Tuple[int, ...]
     split: Optional[Tuple[int, int]] = None
 
+    def wire_bytes(self, policy=None) -> int:
+        """Bytes this bucket's gradient occupies on the wire under a
+        :class:`~repro.core.precision.PrecisionPolicy` (f32 when None).
+
+        The policy is indexed by bucket position (``index`` is 1-based,
+        matching paper numbering) — the ONE place wire bytes are derived
+        from an element count; everything else prices through here or
+        :func:`~repro.core.precision.apply_wire_precision`."""
+        if policy is None:
+            return 4 * self.n_elements
+        return policy.wire_bytes_per_elem(self.index - 1) * self.n_elements
+
     @property
     def bytes_fp32(self) -> int:
-        return 4 * self.n_elements
+        """Deprecated shim — use :meth:`wire_bytes`.  Kept for
+        out-of-tree callers; linted against in-tree by
+        ``scripts/check_no_legacy_planner.py``."""
+        return self.wire_bytes()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,6 +34,12 @@ from typing import Optional, Tuple
 from repro.configs.base import ArchConfig
 from repro.core.bucket import BucketTimes
 from repro.core.knapsack import deadline_knapsack
+from repro.core.precision import (
+    PRECISION_SIGMA_GAIN,
+    PrecisionPolicy,
+    apply_wire_precision,
+    check_precision_schedule,
+)
 from repro.core.preserver import PreserverVerdict, WalkParams, check_schedule
 from repro.core.profiler import HardwareModel, Profile, profile_arch
 from repro.core.scheduler import (
@@ -244,6 +250,17 @@ class PlanRequest:
     ag_fraction: float = 0.5
     gather_skip: bool = True
 
+    # wire precision (§13): "f32" (off), a forced uniform dtype
+    # ("bf16"/"int8"), or "auto" — enumerate per-bucket policies along a
+    # largest-comm-first downgrade ladder, each scored by simulated
+    # iteration time and gated by the precision-aware Preserver check.
+    # An explicit ``precision`` policy overrides the enumeration.
+    wire_precision: str = "f32"
+    master_dtype: str = "f32"
+    precision: Optional[PrecisionPolicy] = None
+    precision_min_gain: float = 0.0
+    precision_sigma_gain: float = PRECISION_SIGMA_GAIN
+
     def __post_init__(self):
         sources = (
             (self.times is not None)
@@ -255,6 +272,20 @@ class PlanRequest:
                 "PlanRequest needs exactly one of times / candidates / "
                 f"arch, got {sources}"
             )
+        if self.wire_precision not in ("auto", "f32", "bf16", "int8"):
+            raise ValueError(
+                f"wire_precision must be auto/f32/bf16/int8, got "
+                f"{self.wire_precision!r}"
+            )
+        if self.master_dtype not in ("f32", "bf16sr"):
+            raise ValueError(
+                f"master_dtype must be f32/bf16sr, got {self.master_dtype!r}"
+            )
+        if self.precision is not None and self.wire_precision != "f32":
+            raise ValueError(
+                "pass an explicit precision policy OR wire_precision, "
+                "not both"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,11 +296,17 @@ class PlanResult:
     verdict: Optional[PreserverVerdict]
     scheduler_cfg: SchedulerConfig
     retries: int
-    times: BucketTimes                     # the times the schedule solved on
+    times: BucketTimes                     # profiled (f32-priced) times
     profile: Optional[Profile] = None      # arch path only
     candidates: Tuple[CandidateSolve, ...] = ()
     winner_tag: Optional[str] = None       # candidates path only
     ag_plan: Optional[AgStreamPlan] = None  # decoupled requests only
+    # §13: adopted wire-precision policy + the times re-priced under it
+    # (the times the schedule actually solved on); None when the request
+    # did not engage precision planning
+    precision: Optional[PrecisionPolicy] = None
+    priced_times: Optional[BucketTimes] = None
+    precision_candidates: Tuple["PrecisionSolve", ...] = ()
 
     @property
     def capacity_factor(self) -> float:
@@ -279,11 +316,31 @@ class PlanResult:
     def ok(self) -> bool:
         return self.verdict is None or self.verdict.ok
 
+    @property
+    def wire_times(self) -> BucketTimes:
+        """The precision-priced times every downstream consumer (AG
+        streaming, simulator, runtime) should execute against."""
+        return self.priced_times if self.priced_times is not None else self.times
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionSolve:
+    """One precision policy's pass through the feedback loop (§13)."""
+
+    policy: PrecisionPolicy
+    schedule: DeftSchedule
+    verdict: Optional[PreserverVerdict]
+    scheduler_cfg: SchedulerConfig
+    retries: int
+    iteration_time: float        # simulated steady-state seconds/iteration
+    coverage: float              # simulated 1 - bubble_fraction
+    wire_bytes_scale: float      # policy wire bytes / all-f32 wire bytes
+
 
 class Planner:
     """The unified planning facade (solve + Preserver feedback +
-    candidate scoring + decoupled AG streaming) behind one
-    ``plan(PlanRequest) -> PlanResult`` call.
+    candidate scoring + decoupled AG streaming + wire-precision
+    enumeration) behind one ``plan(PlanRequest) -> PlanResult`` call.
 
     Stateless apart from an optional default Gaussian-walk model applied
     when a request does not carry its own."""
@@ -298,8 +355,20 @@ class Planner:
     def _walk(self, req: PlanRequest) -> WalkParams:
         return req.walk or self.default_walk or self._DEFAULT_WALK
 
-    def _solve_times(self, times: BucketTimes, req: PlanRequest):
-        """Fig. 7 feedback loop over one set of bucket times."""
+    def _solve_times(
+        self,
+        times: BucketTimes,
+        req: PlanRequest,
+        policy: Optional[PrecisionPolicy] = None,
+        weight_times: Optional[BucketTimes] = None,
+    ):
+        """Fig. 7 feedback loop over one set of bucket times.
+
+        With ``policy`` the Preserver check is the precision-aware one
+        (§13): the fixed-B reference rolls the clean walk while DeFT's
+        sequence carries the policy's quantization noise.
+        ``weight_times`` supplies the f32 comm weights for the sigma
+        inflation (``times`` may already be precision-priced)."""
         walk = self._walk(req)
         factor = req.initial_factor
         schedule, verdict, scfg, retry = None, None, None, 0
@@ -313,10 +382,17 @@ class Planner:
             if not req.preserve:
                 verdict = None
                 break
-            verdict = check_schedule(
-                schedule.batch_size_sequence, schedule.period, walk,
-                eps=req.eps,
-            )
+            if policy is None:
+                verdict = check_schedule(
+                    schedule.batch_size_sequence, schedule.period, walk,
+                    eps=req.eps,
+                )
+            else:
+                verdict = check_precision_schedule(
+                    schedule.batch_size_sequence, schedule.period, walk,
+                    policy, weight_times or times, eps=req.eps,
+                    gain=req.precision_sigma_gain,
+                )
             if verdict.ok:
                 break
             factor *= req.capacity_growth
@@ -382,6 +458,117 @@ class Planner:
                 best = s
         return best, tuple(solves)
 
+    # -- precision enumeration (§13) ----------------------------------------
+    @staticmethod
+    def _precision_requested(req: PlanRequest) -> bool:
+        return (
+            req.precision is not None
+            or req.wire_precision != "f32"
+            or req.master_dtype != "f32"
+        )
+
+    @staticmethod
+    def _precision_ladder(times: BucketTimes, req: PlanRequest):
+        """Candidate policies, all-f32 baseline first.
+
+        ``auto`` walks a largest-comm-first downgrade ladder: buckets
+        flip f32 -> bf16 one at a time in descending f32 comm order,
+        then bf16 -> int8 in the same order — ``2n + 1`` monotone
+        candidates whose quantization noise only grows, so the first
+        gate failure ends the scan (the ladder prefix property makes
+        mixed assignments first-class: the winner is whatever prefix
+        simulates fastest, not an all-or-nothing dtype flip)."""
+        n = times.n
+        base = PrecisionPolicy.uniform(n, "f32", req.master_dtype)
+        if req.precision is not None:
+            return [base, req.precision]
+        if req.wire_precision != "auto":
+            forced = PrecisionPolicy.uniform(
+                n, req.wire_precision, req.master_dtype
+            )
+            return [base] if forced == base else [base, forced]
+        order = sorted(range(n), key=lambda b: -times.comm[b])
+        ladder = [base]
+        cur = base
+        for target in ("bf16", "int8"):
+            for b in order:
+                cur = cur.with_wire(b, target)
+                ladder.append(cur)
+        return ladder
+
+    def _solve_precision(
+        self, times: BucketTimes, req: PlanRequest,
+        policy: PrecisionPolicy,
+    ) -> PrecisionSolve:
+        from repro.core.simulator import simulate_deft
+
+        priced = apply_wire_precision(times, policy)
+        solve_on = rs_times(priced, req.ag_fraction) if req.decoupled \
+            else priced
+        schedule, verdict, scfg, retries = self._solve_times(
+            solve_on, req, policy=policy, weight_times=times,
+        )
+        sim = simulate_deft(
+            solve_on,
+            DeftScheduler(solve_on, scfg).run(req.sim_iterations),
+            mu=scfg.mu,
+            heterogeneous=scfg.heterogeneous,
+        )
+        # wire-volume scale vs all-f32, weighted by each bucket's f32
+        # comm time (proportional to its bytes — BucketTimes carries no
+        # element counts)
+        tot = max(times.comm_total, 1e-30)
+        scale = sum(
+            times.comm[b] * policy.wire_bytes_per_elem(b) / 4.0
+            for b in range(times.n)
+        ) / tot
+        return PrecisionSolve(
+            policy=policy,
+            schedule=schedule,
+            verdict=verdict,
+            scheduler_cfg=scfg,
+            retries=retries,
+            iteration_time=sim.iteration_time,
+            coverage=max(0.0, 1.0 - sim.bubble_fraction),
+            wire_bytes_scale=scale,
+        )
+
+    def _plan_precision(self, times: BucketTimes, req: PlanRequest):
+        """Score the precision ladder; adopt the fastest gate-passing
+        policy.  All-f32 is the best-effort baseline (kept even when its
+        own verdict fails, mirroring the candidate-partition path);
+        ``precision_min_gain`` adds switch hysteresis.  An EXPLICIT
+        policy (``req.precision`` or a forced uniform wire) is adopted
+        whenever the gate allows it — the caller asked for those bytes,
+        so a time tie (e.g. every rung latency-floored on a tiny
+        profile) must not silently fall back to f32."""
+        ladder = self._precision_ladder(times, req)
+        solves = [self._solve_precision(times, req, ladder[0])]
+        for policy in ladder[1:]:
+            s = self._solve_precision(times, req, policy)
+            solves.append(s)
+            if req.preserve and not s.verdict.ok and \
+                    req.wire_precision == "auto":
+                break   # noise grows monotonically along the ladder
+        base = solves[0]
+        explicit = req.precision is not None or \
+            req.wire_precision not in ("auto", "f32")
+        if explicit and len(solves) > 1:
+            forced = solves[-1]
+            if not req.preserve or forced.verdict.ok:
+                return forced, tuple(solves)
+            return base, tuple(solves)
+        best = base
+        for s in solves[1:]:
+            if req.preserve and not s.verdict.ok:
+                continue
+            bar = best.iteration_time
+            if best is base:
+                bar = base.iteration_time * (1.0 - req.precision_min_gain)
+            if s.iteration_time < bar:
+                best = s
+        return best, tuple(solves)
+
     # -- the facade ---------------------------------------------------------
     def plan(self, req: PlanRequest) -> PlanResult:
         profile = None
@@ -412,10 +599,24 @@ class Planner:
                 else times
             schedule, verdict, scfg, retries = self._solve_times(solve_on, req)
 
+        precision = None
+        priced_times = None
+        precision_candidates: Tuple[PrecisionSolve, ...] = ()
+        if self._precision_requested(req):
+            # precision rides on top of whichever times won above (the
+            # candidate path re-prices the winning partition); the
+            # winning policy's solve replaces the f32 one
+            best_p, precision_candidates = self._plan_precision(times, req)
+            precision = best_p.policy
+            priced_times = apply_wire_precision(times, precision)
+            schedule, verdict = best_p.schedule, best_p.verdict
+            scfg, retries = best_p.scheduler_cfg, best_p.retries
+
         ag_plan = None
         if req.decoupled:
             ag_plan = plan_ag_stream(
-                schedule, times, scfg,
+                schedule, priced_times if priced_times is not None else times,
+                scfg,
                 ag_fraction=req.ag_fraction,
                 gather_skip=req.gather_skip,
             )
@@ -429,6 +630,9 @@ class Planner:
             candidates=candidates,
             winner_tag=winner_tag,
             ag_plan=ag_plan,
+            precision=precision,
+            priced_times=priced_times,
+            precision_candidates=precision_candidates,
         )
 
 

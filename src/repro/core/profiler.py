@@ -34,11 +34,21 @@ class HardwareModel:
     def secondary_bw(self) -> float:
         return self.ici_bw / self.mu
 
-    def allreduce_time(self, n_elements: int, link_bw: Optional[float] = None) -> float:
-        """Ring all-reduce wall time for one gradient bucket."""
+    def allreduce_time(
+        self,
+        n_elements: int,
+        link_bw: Optional[float] = None,
+        bytes_per_elem: Optional[int] = None,
+    ) -> float:
+        """Ring all-reduce wall time for one gradient bucket.
+
+        ``bytes_per_elem`` prices a narrower wire dtype (a
+        :class:`~repro.core.precision.PrecisionPolicy` choice); the
+        +20us launch latency is size-independent and does NOT scale."""
         bw = self.ici_bw if link_bw is None else link_bw
         d = self.dp_degree
-        vol = 2.0 * (d - 1) / d * n_elements * self.grad_bytes_per_elem
+        bpe = self.grad_bytes_per_elem if bytes_per_elem is None else bytes_per_elem
+        vol = 2.0 * (d - 1) / d * n_elements * bpe
         # per-launch startup latency (the paper's motivation for fusion)
         return vol / bw + 20e-6
 

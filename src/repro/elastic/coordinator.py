@@ -400,6 +400,24 @@ class ElasticCoordinator:
             self.params_abs, plan.bucket_of, plan.n_buckets,
             shard_count=plan.n_shards if plan.sharded else 1,
         )
+        old_pol = getattr(old_rt.layout, "precision", None)
+        if old_pol is not None:
+            # §13: the wire/master policy migrates with the state.  A
+            # changed bucket count invalidates per-bucket wire choices,
+            # so those reset to f32 (uniform policies survive); the
+            # resident master dtype always carries — the migration must
+            # not change the memory envelope mid-flight.
+            from repro.core.precision import PrecisionPolicy
+
+            if plan.n_buckets == old_rt.layout.n_buckets:
+                new_layout = new_layout.with_precision(old_pol)
+            else:
+                wires = set(old_pol.wire)
+                uni = wires.pop() if len(wires) == 1 else "f32"
+                new_layout = new_layout.with_precision(
+                    PrecisionPolicy.uniform(plan.n_buckets, uni,
+                                            old_pol.master)
+                )
         new_rt = old_rt.spawn(
             mesh=new_mesh, schedule=plan.schedule, layout=new_layout,
             fsdp=plan.sharded,

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.kernels.bucket_update.kernel import bucket_update_pallas
 from repro.kernels.bucket_update.ref import bucket_update_ref
 from repro.kernels.bucket_update.segments import BucketSegments
+from repro.kernels.quantize import stochastic_round_bf16, wire_seed
 from repro.optim.optimizers import OptimizerSpec
 
 # scalar-row layout (f32[1, 128], lanes 5..127 are zero padding)
@@ -137,6 +138,7 @@ def apply_bucket_updates(
     impl: Optional[str] = None,
     shard_id: Optional[jax.Array] = None,
     norm_psum=None,
+    master_dtype: Optional[str] = None,
 ) -> Tuple[
     Tuple[jax.Array, ...], Dict[str, Any], Optional[Tuple[jax.Array, ...]]
 ]:
@@ -161,10 +163,22 @@ def apply_bucket_updates(
     whole span.  ``norm_psum`` must sum the squared-norm contribution across
     the shard axis (each device only sees 1/N of the gradient) — without
     it the clip factor would be computed from a single shard.
+
+    **bf16sr master** (``master_dtype='bf16sr'``, DESIGN.md §13): the
+    incoming param buffers are bf16 residents; they upcast to f32 for
+    the fused kernels and the updated buffers round back down through
+    the seeded stochastic-rounding kernel (seed = (step, bucket), so
+    replicas agree and no two updates reuse a rounding pattern).  The
+    moments stay f32.
     """
     layout = segments.layout
     adam = spec.name == "adamw"
     sharded = shard_id is not None
+    if master_dtype not in (None, "f32", "bf16sr"):
+        raise ValueError(f"master_dtype={master_dtype!r}")
+    bf16sr = master_dtype == "bf16sr"
+    if bf16sr:
+        pbuf = [p.astype(jnp.float32) for p in pbuf]
     # layout.shards == 1 is the degenerate single-shard case (1-device
     # FSDP smoke runs): spans are the whole buffers and the sharded path
     # reduces to the unsharded one bit-for-bit.  A layout whose shard
@@ -255,6 +269,11 @@ def apply_bucket_updates(
             zero_grads=zero_grads,
             impl=impl,
         )
+        if bf16sr:
+            if p2.shape[0] % 128 == 0:
+                p2 = stochastic_round_bf16(p2, wire_seed(step_new, b))
+            else:   # a span the 128-lane kernels cannot tile
+                p2 = p2.astype(jnp.bfloat16)
         new_p.append(p2)
         new_m.append(m2)
         if adam:

@@ -1,0 +1,19 @@
+from repro.kernels.quantize.ops import (
+    cast_compute,
+    default_quantize_impl,
+    dequantize_int8,
+    quantize_dequantize_int8,
+    quantize_int8,
+    stochastic_round_bf16,
+    wire_seed,
+)
+
+__all__ = [
+    "cast_compute",
+    "default_quantize_impl",
+    "dequantize_int8",
+    "quantize_dequantize_int8",
+    "quantize_int8",
+    "stochastic_round_bf16",
+    "wire_seed",
+]

@@ -1,0 +1,130 @@
+"""Dispatcher + the ONE wire-cast site for precision policies (§13).
+
+* ``stochastic_round_bf16`` / ``quantize_int8`` / ``dequantize_int8`` —
+  Pallas on TPU, lax twin elsewhere, ``REPRO_QUANTIZE=pallas|ref|
+  interpret`` override (interpret = Pallas under the interpreter, the
+  CI/CPU way to exercise the kernels).
+* ``cast_compute`` — the single compute/wire downcast both flat engines
+  route through (replicated buffer views AND the sharded pre-gather
+  cast — the PR-4 asymmetry fix).  A plain ``astype``: deterministic
+  and bit-identical to the legacy inline casts.
+* ``quantize_dequantize_int8`` — the int8 reduce-scatter edge.  An int8
+  ring sum would overflow at the first hop, so the RS collective runs
+  in f32 over values that HAVE passed through the int8 grid; the wire
+  volume the knapsack priced is what the quantized representation
+  occupies, and obs attribution accounts bytes from that representation
+  (DESIGN.md §13 documents this as value-exact emulation).  The AG edge
+  genuinely gathers int8 values + per-row scales.
+* ``wire_seed`` — per-(step, bucket) deterministic seed so stochastic
+  rounding is reproducible and identical on every replica.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import (
+    dequantize_int8_pallas,
+    quantize_int8_pallas,
+    stochastic_round_bf16_pallas,
+)
+from repro.kernels.quantize.ref import (
+    dequantize_int8_ref,
+    quantize_int8_ref,
+    stochastic_round_bf16_ref,
+)
+
+_IMPLS = ("pallas", "ref", "interpret")
+
+
+@functools.lru_cache(maxsize=1)
+def default_quantize_impl() -> str:
+    """'pallas' on TPU backends, 'ref' elsewhere; REPRO_QUANTIZE
+    overrides (read once per process; unknown values raise)."""
+    env = os.environ.get("REPRO_QUANTIZE", "").strip().lower()
+    if env:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"REPRO_QUANTIZE={env!r}: expected one of {_IMPLS}"
+            )
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def stochastic_round_bf16(
+    x: jax.Array, seed, n_valid: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """f32[padded] -> bf16[padded], unbiased seeded rounding, zero tail."""
+    impl = impl or default_quantize_impl()
+    if impl in ("pallas", "interpret"):
+        return stochastic_round_bf16_pallas(
+            x, seed, n_valid, interpret=(impl == "interpret")
+        )
+    if impl == "ref":
+        return stochastic_round_bf16_ref(x, seed, n_valid)
+    raise ValueError(f"unknown quantize impl {impl!r}")
+
+
+def quantize_int8(
+    x: jax.Array, n_valid: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """f32[padded] -> (int8[padded], f32[rows] blockwise scales)."""
+    impl = impl or default_quantize_impl()
+    if impl in ("pallas", "interpret"):
+        return quantize_int8_pallas(
+            x, n_valid, interpret=(impl == "interpret")
+        )
+    if impl == "ref":
+        return quantize_int8_ref(x, n_valid)
+    raise ValueError(f"unknown quantize impl {impl!r}")
+
+
+def dequantize_int8(
+    q: jax.Array, scale: jax.Array, n_valid: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    impl = impl or default_quantize_impl()
+    if impl in ("pallas", "interpret"):
+        return dequantize_int8_pallas(
+            q, scale, n_valid, interpret=(impl == "interpret")
+        )
+    if impl == "ref":
+        return dequantize_int8_ref(q, scale, n_valid)
+    raise ValueError(f"unknown quantize impl {impl!r}")
+
+
+def quantize_dequantize_int8(
+    x: jax.Array, n_valid: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Project onto the blockwise int8 grid (the RS-edge emulation)."""
+    q, s = quantize_int8(x, n_valid, impl)
+    return dequantize_int8(q, s, n_valid, impl)
+
+
+def cast_compute(x: jax.Array, dtype) -> jax.Array:
+    """THE downcast both flat engines use for compute/wire dtype views.
+
+    Kept a bare ``astype`` on purpose: it must stay bit-identical to
+    the legacy inline casts it replaced (runtime.py's `_cast_compute`
+    buffer views and the sharded engine's pre-gather cast), which
+    tests/test_quantize.py pins."""
+    if dtype is None or x.dtype == jnp.dtype(dtype):
+        return x
+    return x.astype(dtype)
+
+
+def wire_seed(step, bucket: int):
+    """Deterministic per-(step, bucket) stochastic-rounding seed.
+
+    Same on every replica (derived from broadcast scalars only), so SR
+    masters stay replica-identical; distinct per bucket and step so no
+    two casts reuse a rounding pattern."""
+    s = jnp.asarray(step, jnp.uint32)
+    return s * jnp.uint32(2654435761) + jnp.uint32(bucket + 1)

@@ -1,0 +1,109 @@
+"""Pure-JAX reference / fallback for the wire-precision kernels.
+
+Twin of kernel.py with the SAME expressions in the SAME order, so the
+Pallas kernels (under ``interpret=True`` on CPU) bit-match these — the
+property tests in tests/test_quantize.py pin that.
+
+Two primitives (DESIGN.md §13):
+
+* **Blockwise int8** — each 128-lane row quantizes against its own
+  absmax (``scale = absmax / 127``); dequantize multiplies back.  The
+  per-row scale bounds the elementwise error at ``scale / 2``.
+* **Stochastic-rounded bf16** — f32 -> bf16 rounding whose direction is
+  decided by 16 uniform bits added to the mantissa before truncation:
+  unbiased (E[round(x)] == x) so a resident low-precision master does
+  not drift systematically.  The bits come from a counter-based
+  murmur3-finalizer hash of (flat element index, seed) written in plain
+  uint32 ops — identical in the kernel and here, fully deterministic,
+  and independent of grid/block geometry.
+
+Padded tails: every entry point takes ``n_valid`` and forces the tail
+to ZERO on output — hostile tail values can never leak through a wire
+cast (the flat engines' invariant is zero tails everywhere).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_LANES = 128
+
+# murmur3 fmix32 constants + golden-ratio seed spread
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9
+
+
+def _hash_u32(idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """Counter-based uniform u32 from (element index, seed): murmur3
+    finalizer over the seed-offset index.  uint32 arithmetic wraps."""
+    x = idx.astype(jnp.uint32) + seed.astype(jnp.uint32) * jnp.uint32(_GOLDEN)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _flat_index(shape2d: Tuple[int, int], base_row: int = 0) -> jax.Array:
+    rows, lanes = shape2d
+    return (
+        (jax.lax.broadcasted_iota(jnp.int32, shape2d, 0) + base_row) * lanes
+        + jax.lax.broadcasted_iota(jnp.int32, shape2d, 1)
+    )
+
+
+def _shape2d(x: jax.Array) -> Tuple[int, int]:
+    padded = x.shape[0]
+    assert padded % _LANES == 0, (
+        f"flat buffer length {padded} not a {_LANES}-lane multiple"
+    )
+    return (padded // _LANES, _LANES)
+
+
+def stochastic_round_bf16_ref(
+    x: jax.Array, seed, n_valid: Optional[int] = None
+) -> jax.Array:
+    """f32[padded] -> bf16[padded], stochastic rounding, zero tail."""
+    shape2d = _shape2d(x)
+    n_valid = x.shape[0] if n_valid is None else n_valid
+    x2 = x.reshape(shape2d)
+    idx = _flat_index(shape2d)
+    r = _hash_u32(idx, jnp.asarray(seed)) & jnp.uint32(0xFFFF)
+    bits = jax.lax.bitcast_convert_type(x2.astype(jnp.float32), jnp.uint32)
+    rounded = (bits + r) & jnp.uint32(0xFFFF0000)
+    y = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    y = jnp.where(idx < n_valid, y, 0.0)
+    return y.astype(jnp.bfloat16).reshape(x.shape)
+
+
+def quantize_int8_ref(
+    x: jax.Array, n_valid: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """f32[padded] -> (int8[padded], f32[rows] per-row scales)."""
+    shape2d = _shape2d(x)
+    n_valid = x.shape[0] if n_valid is None else n_valid
+    idx = _flat_index(shape2d)
+    x2 = jnp.where(idx < n_valid, x.reshape(shape2d), 0.0)
+    absmax = jnp.max(jnp.abs(x2), axis=1, keepdims=True)
+    # explicit reciprocal multiply (not /127): XLA rewrites division by a
+    # constant into this anyway on some paths — writing it out keeps the
+    # ref and the Pallas kernel bit-identical on every backend
+    scale = jnp.where(absmax > 0.0, absmax * jnp.float32(1.0 / 127.0), 1.0)
+    q = jnp.clip(jnp.round(x2 / scale), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(x.shape), scale[:, 0]
+
+
+def dequantize_int8_ref(
+    q: jax.Array, scale: jax.Array, n_valid: Optional[int] = None
+) -> jax.Array:
+    """(int8[padded], f32[rows]) -> f32[padded], zero tail."""
+    shape2d = _shape2d(q)
+    n_valid = q.shape[0] if n_valid is None else n_valid
+    idx = _flat_index(shape2d)
+    y = q.reshape(shape2d).astype(jnp.float32) * scale[:, None]
+    y = jnp.where(idx < n_valid, y, 0.0)
+    return y.reshape(q.shape)

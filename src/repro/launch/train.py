@@ -82,12 +82,16 @@ def build_schedule(
     mu: float = 1.65,
     eps: float = 0.01,
     max_retries: int = 10,
+    wire_precision: str = "f32",
+    master_dtype: str = "f32",
 ):
     """Leaf-bucket profile -> Solver -> Preserver feedback loop.
 
     coverage_rate > 0 rescales the analytic comm times to that CR — used
     by examples/tests to reproduce a paper regime (VGG-like CR=2, GPT-2
-    CR=1) on arbitrary model sizes.
+    CR=1) on arbitrary model sizes.  ``wire_precision`` engages the §13
+    per-bucket precision ladder ('auto') or forces a uniform wire dtype;
+    the returned ``PlanResult`` carries the adopted policy.
     """
     bucket_of, nb = assign_buckets(params, cfg, partition_elems)
     hw = HardwareModel(dp_degree=dp)
@@ -101,8 +105,9 @@ def build_schedule(
     res = Planner().plan(PlanRequest(
         times=times, walk=walk, heterogeneous=heterogeneous, mu=mu,
         eps=eps, max_retries=max_retries,
+        wire_precision=wire_precision, master_dtype=master_dtype,
     ))
-    return bucket_of, nb, times, res.schedule, res.verdict, res.scheduler_cfg
+    return bucket_of, nb, times, res
 
 
 def restore_runtime_state(runtime, ckpt_dir: str, params_abs):
@@ -226,6 +231,19 @@ def main() -> None:
                     default="f32",
                     help="forward/backward precision of the flat engines "
                          "(the master copy stays f32)")
+    ap.add_argument("--wire-precision",
+                    choices=["auto", "f32", "bf16", "int8"],
+                    default="f32",
+                    help="gradient wire precision (DESIGN.md §13): "
+                         "'auto' lets the planner pick a per-bucket "
+                         "policy from the knapsack-priced ladder, gated "
+                         "by the precision-aware Preserver; a dtype "
+                         "forces that uniform wire")
+    ap.add_argument("--master-dtype", choices=["f32", "bf16sr"],
+                    default="f32",
+                    help="resident master-param dtype: 'bf16sr' keeps "
+                         "params at bf16 with seeded stochastic-rounded "
+                         "updates (flat engine only; moments stay f32)")
     ap.add_argument("--decoupled", action="store_true",
                     help="stream per-bucket all-gathers into the forward "
                          "instead of the phase-start burst (DESIGN.md §12; "
@@ -293,11 +311,16 @@ def main() -> None:
             params_abs = jax.eval_shape(
                 lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
             )
-            bucket_of, nb, times, schedule, verdict, scfg = build_schedule(
+            bucket_of, nb, times, plan = build_schedule(
                 params_abs, cfg, dp=dp, seq_len=args.seq,
                 per_device_batch=max(args.batch // dp, 1),
                 partition_elems=args.partition_elems,
                 coverage_rate=args.coverage_rate,
+                wire_precision=args.wire_precision,
+                master_dtype=args.master_dtype,
+            )
+            schedule, verdict, scfg = (
+                plan.schedule, plan.verdict, plan.scheduler_cfg
             )
             print(f"deft: {nb} buckets, CR={times.coverage_rate:.2f}, "
                   f"period={schedule.period}, "
@@ -305,14 +328,23 @@ def main() -> None:
                   f"batch-size seq={schedule.batch_size_sequence}, "
                   f"preserver ratio={verdict.ratio:.4f} "
                   f"(capacity x{scfg.capacity_factor:.2f})")
+            if plan.precision is not None:
+                print(f"precision: wire={plan.precision.describe()} "
+                      f"master={plan.precision.master}")
             # FSDP archs run the sharded flat engine: the layout pads
             # every bucket so it splits into dp equal lane-aligned spans
             layout = build_bucket_layout(params_abs, bucket_of, nb,
                                          shard_count=dp if fsdp else 1)
+            if plan.precision is not None:
+                layout = layout.with_precision(plan.precision)
             compute_dtype = (jnp.bfloat16 if args.compute_dtype == "bf16"
                              else None)
-            rcfg = RuntimeConfig(fsdp=fsdp, compute_dtype=compute_dtype,
-                                 decoupled=args.decoupled)
+            rcfg = RuntimeConfig(
+                fsdp=fsdp, compute_dtype=compute_dtype,
+                decoupled=args.decoupled,
+                master_dtype=(args.master_dtype
+                              if args.master_dtype != "f32" else None),
+            )
             runtime = DeftRuntime(cfg, opt, schedule, layout, mesh,
                                   config=rcfg, tracer=tracer)
             state = None
@@ -363,10 +395,12 @@ def main() -> None:
             controller = AdaptiveController(
                 times, schedule, scfg,
                 cfg=AdaptConfig(eta=1e-3, warmup_steps=4, check_every=4,
-                                cooldown_steps=2 * schedule.period),
+                                cooldown_steps=2 * schedule.period,
+                                wire_precision=args.wire_precision),
                 repartitioner=repartitioner,
                 bucket_of=bucket_of if repartitioner else None,
                 tracer=runtime.tracer,
+                precision=plan.precision,
             )
             if args.adapt_drop_step > 0:
                 telemetry_src = SyntheticTelemetrySource(
@@ -505,7 +539,11 @@ def main() -> None:
                 if telemetry_src is not None:
                     wall = telemetry_src.wall_time(
                         step, controller.schedule, controller.scheduler_cfg,
-                        runtime.last_phase, solve_times=controller.times,
+                        runtime.last_phase,
+                        # the priced view: synthetic walls must reflect
+                        # the installed wire precision or every replan
+                        # after a downgrade reads as fresh drift
+                        solve_times=controller.wire_times(),
                         run_base=run_base,
                     )
                     cold = None     # synthetic walls: no dispatch pollution
@@ -539,6 +577,17 @@ def main() -> None:
                         if event.partition_changed:
                             run_base = repartitioner.base_times_for(
                                 event.partition
+                            )
+                        # a precision change rides on the layout: same
+                        # partition, different wire policy (pure-alias
+                        # repack, DESIGN.md §13)
+                        if new_layout is not None:
+                            new_layout = new_layout.with_precision(
+                                controller.precision
+                            )
+                        elif event.precision_changed:
+                            new_layout = runtime.layout.with_precision(
+                                controller.precision
                             )
                         runtime.prepare_swap(
                             event.schedule, state,

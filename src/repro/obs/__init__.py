@@ -16,6 +16,7 @@ from repro.obs.trace import ManualClock, Span, SPAN_KINDS, Tracer
 from repro.obs.metrics import Metrics, METRICS_SCHEMA_VERSION, validate_summary
 from repro.obs.attribution import (
     Attribution,
+    WireBytesReport,
     attribute,
     attribute_trace,
     bucket_divergence,
@@ -25,6 +26,8 @@ from repro.obs.attribution import (
     sim_metrics_from_spans,
     spans_from_sim,
     timeline_bubbles,
+    wire_bytes_from_trace,
+    wire_bytes_report,
 )
 from repro.obs.events import format_event
 
@@ -36,6 +39,7 @@ __all__ = [
     "Span",
     "SPAN_KINDS",
     "Tracer",
+    "WireBytesReport",
     "attribute",
     "attribute_trace",
     "bucket_divergence",
@@ -47,4 +51,6 @@ __all__ = [
     "spans_from_sim",
     "timeline_bubbles",
     "validate_summary",
+    "wire_bytes_from_trace",
+    "wire_bytes_report",
 ]

@@ -454,3 +454,97 @@ def attribute_trace(
     """:func:`attribute` over the ``phase`` spans in a live trace."""
     measured = measured_phase_durations_from_trace(tracer, schedule.period)
     return attribute(measured, times, scfg, schedule)
+
+
+# ---------------------------------------------------------------------------
+# wire-byte attribution (§13): did the wire carry the bytes the plan priced?
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireBytesReport:
+    """Measured-vs-planned bytes on the wire per cycle phase.
+
+    ``planned_per_phase`` is what the *current* plan prices (layout
+    precision applied to each phase's synced buckets);
+    ``measured_per_phase`` is what the executed collectives actually
+    shipped, read back from the runtime's ``collective-group`` spans.
+    The two diverge exactly when execution lags the plan — e.g. steps
+    that ran on a stale layout while a precision hot-swap compiled —
+    so ``ok`` is the end-to-end check that the policy the knapsack
+    priced is the policy the wire carried.
+    """
+
+    period: int
+    planned_per_phase: Tuple[int, ...]
+    measured_per_phase: Tuple[Optional[float], ...]  # mean over cycles
+    precisions: Tuple[Optional[str], ...]            # span wire tags
+
+    @property
+    def planned_per_cycle(self) -> int:
+        return sum(self.planned_per_phase)
+
+    @property
+    def measured_per_cycle(self) -> float:
+        """Observed bytes per cycle (unobserved phases assume plan)."""
+        return sum(
+            m if m is not None else float(p)
+            for m, p in zip(self.measured_per_phase, self.planned_per_phase)
+        )
+
+    @property
+    def max_abs_error(self) -> float:
+        """Largest absolute measured-planned byte gap over phases."""
+        return max(
+            (abs(m - p) for m, p in
+             zip(self.measured_per_phase, self.planned_per_phase)
+             if m is not None),
+            default=0.0,
+        )
+
+    @property
+    def ok(self) -> bool:
+        """Every observed phase shipped exactly the planned bytes."""
+        return self.max_abs_error == 0.0
+
+
+def wire_bytes_from_trace(
+    tracer: Tracer, period: int
+) -> Tuple[List[Optional[float]], List[Optional[str]]]:
+    """Mean ``wire_bytes`` (and the wire tag) of the recorded
+    ``collective-group`` spans per cycle phase.  First-dispatch spans
+    are NOT excluded — byte counts are exact regardless of compile
+    pollution; only durations need the ``first`` filter."""
+    acc: Dict[int, List[float]] = {}
+    tags: Dict[int, str] = {}
+    for sp in tracer.spans("collective-group"):
+        if sp.phase is None or not 0 <= sp.phase < period:
+            continue
+        wb = sp.args.get("wire_bytes")
+        if wb is None:
+            continue
+        acc.setdefault(sp.phase, []).append(float(wb))
+        tag = sp.args.get("precision")
+        if tag is not None:
+            tags[sp.phase] = tag
+    measured = [
+        (sum(acc[p]) / len(acc[p])) if acc.get(p) else None
+        for p in range(period)
+    ]
+    return measured, [tags.get(p) for p in range(period)]
+
+
+def wire_bytes_report(
+    tracer: Tracer, planned_per_phase: Sequence[int]
+) -> WireBytesReport:
+    """Compare a live trace's shipped bytes against the plan's pricing
+    (``planned_per_phase`` — the runtime's per-phase wire-byte vector,
+    ``DeftRuntime._wire_bytes_of_step``-shaped: one entry per cycle
+    phase under the installed layout's precision)."""
+    period = len(planned_per_phase)
+    measured, tags = wire_bytes_from_trace(tracer, period)
+    return WireBytesReport(
+        period=period,
+        planned_per_phase=tuple(int(b) for b in planned_per_phase),
+        measured_per_phase=tuple(measured),
+        precisions=tuple(tags),
+    )

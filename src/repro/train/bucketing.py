@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.bucket import BucketTimes
+from repro.core.precision import PrecisionPolicy
 from repro.core.profiler import HardwareModel
 
 _GROUP_ORDER = {
@@ -149,6 +150,13 @@ class BucketLayout:
                     so the buffer splits into ``shards`` equal contiguous
                     spans and every span is itself a lane-aligned kernel
                     operand.  1 (the default) is the replicated engine.
+    precision:      per-bucket wire precision policy (DESIGN.md §13);
+                    ``None`` means all-f32.  Part of layout identity on
+                    purpose: the runtime's phase cache keys on the
+                    layout, so a precision change is a cycle-boundary
+                    layout swap — while :func:`build_layout_transition`
+                    ignores it, making the precision-only repack a pure
+                    aliasing pass (zero data movement).
     """
 
     bucket_of_leaf: Tuple[int, ...]
@@ -159,10 +167,30 @@ class BucketLayout:
     shapes: Tuple[Tuple[int, ...], ...]
     padded_sizes: Tuple[int, ...] = ()
     shards: int = 1
+    precision: Optional[PrecisionPolicy] = None
+
+    def __post_init__(self):
+        if self.precision is not None:
+            self.precision.validate(self.n_buckets)
 
     @property
     def n_leaves(self) -> int:
         return len(self.bucket_of_leaf)
+
+    def wire(self, b: int) -> str:
+        """Wire dtype name of bucket ``b`` ("f32" without a policy)."""
+        return "f32" if self.precision is None else self.precision.wire[b]
+
+    @property
+    def master_dtype(self) -> str:
+        return "f32" if self.precision is None else self.precision.master
+
+    def with_precision(
+        self, precision: Optional[PrecisionPolicy]
+    ) -> "BucketLayout":
+        """Same partition/sharding, different precision policy — the
+        layout a precision-only hot-swap targets."""
+        return dataclasses.replace(self, precision=precision)
 
     @property
     def total_elems(self) -> int:
@@ -196,6 +224,7 @@ def build_bucket_layout(
     *,
     pad_multiple: int = PAD_MULTIPLE,
     shard_count: int = 1,
+    precision: Optional[PrecisionPolicy] = None,
 ) -> BucketLayout:
     """Precompute the per-bucket flat-buffer layout for a parameter tree.
 
@@ -246,6 +275,7 @@ def build_bucket_layout(
         shapes=shapes,
         padded_sizes=tuple(padded),
         shards=shard_count,
+        precision=precision,
     )
 
 
@@ -364,9 +394,14 @@ class LeafTimeModel:
         *,
         comp_scale: float = 1.0,
         comm_scale: float = 1.0,
+        precision: Optional[PrecisionPolicy] = None,
     ) -> BucketTimes:
         """BucketTimes of an arbitrary partition of this tree, optionally
-        under calibrated effective scales."""
+        under calibrated effective scales.  ``precision`` prices each
+        bucket's comm at its policy wire width (§13) — the latency term
+        inside ``allreduce_time`` stays fixed."""
+        if precision is not None:
+            precision.validate(n_buckets)
         fwd = [0.0] * n_buckets
         comm_elems = [0] * n_buckets
         for i, b in enumerate(bucket_of_leaf):
@@ -375,7 +410,16 @@ class LeafTimeModel:
         fwd = [f * comp_scale for f in fwd]
         bwd = [2.0 * f for f in fwd]
         c_scale = self.comm_scale * comm_scale
-        comm = [self.hw.allreduce_time(e) * c_scale for e in comm_elems]
+        comm = [
+            self.hw.allreduce_time(
+                e,
+                bytes_per_elem=(
+                    None if precision is None
+                    else precision.wire_bytes_per_elem(b)
+                ),
+            ) * c_scale
+            for b, e in enumerate(comm_elems)
+        ]
         return BucketTimes(tuple(fwd), tuple(bwd), tuple(comm))
 
 

@@ -49,12 +49,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.precision import WIRE_BYTES
 from repro.core.scheduler import DeftSchedule, PhaseSpec
 from repro.kernels.bucket_update import (
     BucketSegments,
     apply_bucket_updates,
     build_segments,
     init_flat_opt_state,
+)
+from repro.kernels.quantize import (
+    cast_compute,
+    dequantize_int8,
+    quantize_dequantize_int8,
+    quantize_int8,
+    stochastic_round_bf16,
 )
 from repro.models.model import init_params, loss_fn
 from repro.obs.trace import Tracer
@@ -138,13 +146,64 @@ def _fused_metrics(loss, parts, phase: PhaseSpec, dp_axes, n_dp: int):
 
 
 def _cast_compute(params, compute_dtype):
-    """Mixed-precision boundary of the flat engines: the f32 master
-    buffers are cast to the compute dtype at the static slice/reshape
-    views, so the forward/backward runs in (e.g.) bf16 while the
-    optimizer state stays full-precision (DESIGN.md §8)."""
-    if compute_dtype is None or compute_dtype == jnp.float32:
+    """Mixed-precision boundary of the flat engines: the master buffers
+    are cast to the compute dtype at the static slice/reshape views, so
+    the forward/backward runs in (e.g.) bf16 while the optimizer state
+    stays full-precision (DESIGN.md §8).  Routed through the ONE cast
+    site in kernels/quantize/ops.py (DESIGN.md §13) — both directions:
+    a bf16sr resident master upcasts through the same call."""
+    if compute_dtype is None:
         return params
-    return jax.tree.map(lambda x: x.astype(compute_dtype), params)
+    return jax.tree.map(lambda x: cast_compute(x, compute_dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# Wire-precision edges (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _layout_wire(layout: BucketLayout) -> Tuple[str, ...]:
+    """Per-bucket wire dtype names; all-f32 when the layout carries no
+    :class:`PrecisionPolicy`."""
+    if layout.precision is None:
+        return ("f32",) * layout.n_buckets
+    return tuple(layout.precision.wire)
+
+
+def _wire_sync(x: jax.Array, wire: str, collective) -> jax.Array:
+    """Run a gradient-sum ``collective`` at a bucket's wire precision.
+
+    * ``bf16`` genuinely halves the wire bytes: the reduction runs on
+      bf16 values and the result is promoted back to f32 for routing and
+      the optimizer.
+    * ``int8`` projects the local contribution onto the blockwise int8
+      grid and runs the sum in f32 — an int8 ring sum would overflow at
+      the first hop, so this is value-exact emulation of the quantized
+      wire (the knapsack and obs account the int8 representation's
+      bytes; DESIGN.md §13).
+    """
+    if wire == "bf16":
+        return collective(x.astype(jnp.bfloat16)).astype(jnp.float32)
+    if wire == "int8":
+        return collective(quantize_dequantize_int8(x.astype(jnp.float32)))
+    return collective(x)
+
+
+def _wire_gather(
+    span: jax.Array, wire: str, gather, fwd_dtype
+) -> jax.Array:
+    """One param all-gather at a bucket's wire precision (the AG edge of
+    the sharded flat engine).  ``fwd_dtype`` is what the forward reads
+    (compute dtype, f32 by default): the gathered buffer is decoded back
+    to it, so the wire dtype is invisible downstream.  int8 genuinely
+    gathers int8 values plus the per-row f32 scales and dequantizes."""
+    if wire == "int8":
+        q, s = quantize_int8(span.astype(jnp.float32))
+        full = dequantize_int8(gather(q), gather(s))
+        return cast_compute(full, fwd_dtype)
+    if wire == "bf16":
+        return cast_compute(
+            gather(cast_compute(span, jnp.bfloat16)), fwd_dtype
+        )
+    return gather(cast_compute(span, fwd_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +305,7 @@ def _deft_body_flat(
     unroll: bool = False,
     update_impl: Optional[str] = None,
     compute_dtype=None,
+    master_dtype: Optional[str] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase with params and optimizer moments resident as
     per-bucket flat f32 buffers (DESIGN.md §8).
@@ -274,11 +334,14 @@ def _deft_body_flat(
     g_flat = flatten_buckets(layout, jax.tree_util.tree_leaves(grads))
     cur = [c[0] for c in state["cur"]]
     fut = [f[0] for f in state["fut"]]
+    wire = _layout_wire(layout)
 
     def sync(x: jax.Array, b: int) -> jax.Array:
         if phase.secondary[b]:
-            return _sync_secondary(x, dp_axes, dp_sizes)
-        return _sync_primary(x, dp_axes)
+            coll = lambda y: _sync_secondary(y, dp_axes, dp_sizes)
+        else:
+            coll = lambda y: _sync_primary(y, dp_axes)
+        return _wire_sync(x, wire[b], coll)
 
     gen, new_fut, cur_synced = _route_and_sync(phase, g_flat, cur, fut, sync)
 
@@ -291,6 +354,7 @@ def _deft_body_flat(
         pbuf, opt, zeroed = apply_bucket_updates(
             opt_spec, segments, pbuf, src, opt,
             grad_scale=scale, zero_grads=zero_grads, impl=update_impl,
+            master_dtype=master_dtype,
         )
         if phase.update_source == "cur" and gen is not None:
             new_cur = gen
@@ -333,6 +397,7 @@ def _deft_body_flat_rs(
     unroll: bool = False,
     update_impl: Optional[str] = None,
     compute_dtype=None,
+    master_dtype: Optional[str] = None,
     gather_reuse: Optional[Tuple[bool, ...]] = None,
     decoupled: bool = False,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
@@ -383,11 +448,14 @@ def _deft_body_flat_rs(
     # the bytes in bf16 instead of shipping f32 and casting after.
     # Buckets flagged in ``gather_reuse`` skip the collective entirely
     # and read the previous phase's stored gather (bit-identical: params
-    # did not change in between, by the static schedule).
-    if compute_dtype is not None and compute_dtype != jnp.float32:
-        gather_src = [s.astype(compute_dtype) for s in pbuf_sh]
-    else:
-        gather_src = pbuf_sh
+    # did not change in between, by the static schedule).  With a
+    # precision policy on the layout, each bucket's gather runs at its
+    # wire dtype (bf16 half-width; int8 values + per-row scales) and is
+    # decoded back to the forward dtype after the collective (§13).
+    wire = _layout_wire(layout)
+    fwd_dtype = compute_dtype if compute_dtype is not None else jnp.float32
+    ag_ = lambda x: jax.lax.all_gather(x, shard_axis, axis=0, tiled=True)
+    gather_bucket = lambda b: _wire_gather(pbuf_sh[b], wire[b], ag_, fwd_dtype)
     cache = state.get("pgather")
     reuse = gather_reuse if (cache is not None and gather_reuse) \
         else (False,) * layout.n_buckets
@@ -404,9 +472,8 @@ def _deft_body_flat_rs(
         # cotangent into its span, i.e. ``flatten_buckets`` of the leaf
         # grads, bit-for-bit (cast commutes with concat elementwise),
         # without ever differentiating through the collective.
-        cdt = compute_dtype if compute_dtype is not None else jnp.float32
         zbufs = tuple(
-            jnp.zeros((s,), cdt) for s in layout.buf_sizes
+            jnp.zeros((s,), fwd_dtype) for s in layout.buf_sizes
         )
 
         def run(z):
@@ -415,9 +482,7 @@ def _deft_body_flat_rs(
 
             def full_buf(b: int) -> jax.Array:
                 if b not in full:
-                    g = cache[b] if reuse[b] else jax.lax.all_gather(
-                        gather_src[b], shard_axis, axis=0, tiled=True
-                    )
+                    g = cache[b] if reuse[b] else gather_bucket(b)
                     gathered[b] = g
                     full[b] = g + z[b]
                 return full[b]
@@ -439,9 +504,8 @@ def _deft_body_flat_rs(
         g_flat = [g.astype(jnp.float32) for g in gz]
     else:
         pbuf = [
-            cache[b] if reuse[b]
-            else jax.lax.all_gather(s, shard_axis, axis=0, tiled=True)
-            for b, s in enumerate(gather_src)
+            cache[b] if reuse[b] else gather_bucket(b)
+            for b in range(nb_)
         ]
         params = jax.tree_util.tree_unflatten(
             treedef, unflatten_buckets(layout, pbuf)
@@ -457,15 +521,19 @@ def _deft_body_flat_rs(
     cur = [c[0] for c in state["cur"]]
     fut = [f[0] for f in state["fut"]]
 
-    def rs_shard(x: jax.Array) -> jax.Array:
+    def rs_shard(x: jax.Array, b: int) -> jax.Array:
         """Shard-local half of the hierarchical sync: reduce-scatter over
-        the fast shard axis, all-reduce across the outer axes."""
-        y = jax.lax.psum_scatter(
-            x, shard_axis, scatter_dimension=0, tiled=True
-        )
-        if outer_axes:
-            y = jax.lax.psum(y, outer_axes)
-        return y
+        the fast shard axis, all-reduce across the outer axes — run at
+        bucket ``b``'s wire precision (§13)."""
+        def coll(v: jax.Array) -> jax.Array:
+            y = jax.lax.psum_scatter(
+                v, shard_axis, scatter_dimension=0, tiled=True
+            )
+            if outer_axes:
+                y = jax.lax.psum(y, outer_axes)
+            return y
+
+        return _wire_sync(x, wire[b], coll)
 
     def gather(y: jax.Array) -> jax.Array:
         return jax.lax.all_gather(y, shard_axis, axis=0, tiled=True)
@@ -487,7 +555,7 @@ def _deft_body_flat_rs(
         gen = []
         for b, x in enumerate(gen_pre):
             if phase.route_new[b] == "sync":
-                gen_sh[b] = rs_shard(x)
+                gen_sh[b] = rs_shard(x, b)
                 # stored full only when this generation survives the
                 # phase (it becomes new_cur); a consumed one stays 1/N
                 gen.append(x if consumed_new else gather(gen_sh[b]))
@@ -500,7 +568,7 @@ def _deft_body_flat_rs(
     cur_synced = []
     for b, c in enumerate(cur):
         if phase.sync_cur[b]:
-            cur_sh[b] = rs_shard(c)
+            cur_sh[b] = rs_shard(c, b)
             cur_synced.append(c if consumed_cur else gather(cur_sh[b]))
         else:
             cur_synced.append(c)
@@ -522,6 +590,7 @@ def _deft_body_flat_rs(
             grad_scale=scale, zero_grads=False, impl=update_impl,
             shard_id=shard_id,
             norm_psum=lambda t: jax.lax.psum(t, shard_axis),
+            master_dtype=master_dtype,
         )
         pbuf_sh = list(pbuf_sh)
         if consumed_cur and gen is not None:
@@ -627,6 +696,7 @@ def deft_phase_step_flat(
     unroll: bool = False,
     update_impl: Optional[str] = None,
     compute_dtype=None,
+    master_dtype: Optional[str] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Flat-resident DeFT phase with explicit DP (params replicated)."""
     dp_axes = ("pod", "data") if multi_pod else ("data",)
@@ -646,6 +716,7 @@ def deft_phase_step_flat(
         unroll=unroll,
         update_impl=update_impl,
         compute_dtype=compute_dtype,
+        master_dtype=master_dtype,
     )
     return _shard_phase(body, _flat_state_specs, state, batch, mesh, dp_axes)
 
@@ -666,6 +737,7 @@ def deft_rs_phase_step_flat(
     unroll: bool = False,
     update_impl: Optional[str] = None,
     compute_dtype=None,
+    master_dtype: Optional[str] = None,
     gather_reuse: Optional[Tuple[bool, ...]] = None,
     decoupled: bool = False,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
@@ -705,6 +777,7 @@ def deft_rs_phase_step_flat(
         unroll=unroll,
         update_impl=update_impl,
         compute_dtype=compute_dtype,
+        master_dtype=master_dtype,
         gather_reuse=gather_reuse,
         decoupled=decoupled,
     )
@@ -888,6 +961,10 @@ class RuntimeConfig:
     compute_dtype: Any = None
     gather_skip: Optional[bool] = None
     decoupled: bool = False
+    # resident master dtype (DESIGN.md §13): None/'f32' keeps the f32
+    # master buffers; 'bf16sr' stores them bf16 and writes updates back
+    # through seeded stochastic rounding (flat engines only)
+    master_dtype: Optional[str] = None
 
     def __post_init__(self):
         self.validate()
@@ -929,6 +1006,21 @@ class RuntimeConfig:
                 "the flat engine runs those; flat_state=False applies "
                 "per-leaf updates"
             )
+        if self.master_dtype not in (None, "f32", "bf16sr"):
+            raise ValueError(
+                f"master_dtype={self.master_dtype!r}: expected None, "
+                f"'f32' or 'bf16sr'"
+            )
+        if self.master_dtype == "bf16sr" and self.flat_state is False:
+            raise ValueError(
+                "master_dtype='bf16sr' needs the flat engine: the "
+                "stochastic-rounding write-back rides the fused "
+                "bucket-update kernels (DESIGN.md §13)"
+            )
+
+    @property
+    def resolved_master(self) -> str:
+        return self.master_dtype or "f32"
 
     def replace(self, **overrides) -> "RuntimeConfig":
         """A new validated config with ``overrides`` applied."""
@@ -1028,6 +1120,34 @@ class DeftRuntime:
         # mixed precision (flat engines only): forward/backward in
         # compute_dtype against the f32 master buffers
         self.compute_dtype = config.compute_dtype
+        # precision as a layout dimension (DESIGN.md §13): per-bucket
+        # wire dtypes ride layout.precision; the resident-master dtype is
+        # config-owned and must agree with what the layout declares
+        lp_master = (
+            layout.precision.master if layout.precision is not None else None
+        )
+        if (config.master_dtype is not None and lp_master is not None
+                and config.master_dtype != lp_master):
+            raise ValueError(
+                f"master dtype disagreement: config.master_dtype="
+                f"{config.master_dtype!r} but the layout's precision "
+                f"policy says {lp_master!r}"
+            )
+        self.master_dtype = config.master_dtype or lp_master or "f32"
+        self._master_jdtype = (
+            jnp.bfloat16 if self.master_dtype == "bf16sr" else jnp.float32
+        )
+        quantized = layout.precision is not None and (
+            not layout.precision.all_f32
+        )
+        if (quantized or self.master_dtype != "f32") \
+                and not config.resolved_flat_state:
+            raise ValueError(
+                "a non-f32 PrecisionPolicy needs the flat engines: the "
+                "tree-state path has no per-bucket wire edges "
+                "(DESIGN.md §13) — drop flat_state=False"
+            )
+        self._validate_precision_layout(layout)
         # decoupled AG streaming (DESIGN.md §12): per-bucket forward
         # all-gathers at first use instead of the up-front ZeRO burst
         self.decoupled = config.decoupled
@@ -1109,6 +1229,56 @@ class DeftRuntime:
         self.last_dispatch_first = False   # last dispatch was an entry's first
         self._install(schedule)
 
+    # ---- precision (DESIGN.md §13) --------------------------------------
+    def _validate_precision_layout(self, layout: BucketLayout) -> None:
+        """Refuse a layout whose precision policy this runtime cannot
+        execute: int8 wire needs 128-lane-aligned buffers (and shard
+        spans, on the sharded engine) for the blockwise quantize grid,
+        and the layout's master dtype must match the runtime's."""
+        p = layout.precision
+        if p is not None and p.master != self.master_dtype \
+                and not (p.master == "f32" and self.master_dtype == "f32"):
+            raise ValueError(
+                f"layout precision master {p.master!r} != runtime "
+                f"master_dtype {self.master_dtype!r}"
+            )
+        if p is None:
+            return
+        for b, w in enumerate(p.wire):
+            if w != "int8":
+                continue
+            if layout.buf_sizes[b] % 128 != 0:
+                raise ValueError(
+                    f"int8 wire on bucket {b}: buffer size "
+                    f"{layout.buf_sizes[b]} is not a 128-lane multiple"
+                )
+            if self.flat_state and self.fsdp \
+                    and layout.shard_sizes[b] % 128 != 0:
+                raise ValueError(
+                    f"int8 wire on bucket {b}: shard span "
+                    f"{layout.shard_sizes[b]} is not a 128-lane multiple"
+                )
+
+    def _wire_bytes_of_phase(self, phase: PhaseSpec) -> int:
+        """Planned wire bytes of one phase's scheduled gradient syncs
+        under the installed layout's precision policy (int8 counts the
+        quantized values plus 4 bytes per 128-lane row of scales)."""
+        wire = _layout_wire(self.layout)
+        total = 0
+        for b in range(len(phase.route_new)):
+            synced = (
+                (phase.route_new[b] == "sync" and phase.rotate)
+                or phase.sync_cur[b]
+            )
+            if not synced:
+                continue
+            n = self.layout.buf_sizes[b]
+            if wire[b] == "int8":
+                total += n + 4 * (n // 128)
+            else:
+                total += n * WIRE_BYTES[wire[b]]
+        return total
+
     # ---- schedule installation ------------------------------------------
     @staticmethod
     def _schedule_has_reuse(schedule: DeftSchedule) -> bool:
@@ -1185,6 +1355,10 @@ class DeftRuntime:
                 treedef=self._treedef,
                 update_impl=self.update_impl,
                 compute_dtype=self.compute_dtype,
+                master_dtype=(
+                    self.master_dtype if self.master_dtype != "f32"
+                    else None
+                ),
             )
         if self.flat_state and self.fsdp:
             kw["gather_reuse"] = gather_reuse
@@ -1248,11 +1422,24 @@ class DeftRuntime:
         self._coll_of_step: Tuple[Dict[str, int], ...] = tuple(
             phase_collectives(ph) for ph in schedule.phases
         )
+        # planned wire bytes per cycle position under the installed
+        # layout's precision policy (§13) — the obs layer's measured-vs-
+        # planned bytes attribution reads these off the spans
+        self._wire_bytes_of_step: Tuple[int, ...] = tuple(
+            self._wire_bytes_of_phase(ph) for ph in schedule.phases
+        )
 
     # ---- state ----------------------------------------------------------
     @property
     def period(self) -> int:
         return self.schedule.period
+
+    @property
+    def wire_bytes_per_phase(self) -> Tuple[int, ...]:
+        """Planned bytes on the wire per cycle phase under the installed
+        layout's precision (what ``obs.wire_bytes_report`` audits the
+        trace against)."""
+        return self._wire_bytes_of_step
 
     @property
     def n_unique_phases(self) -> int:
@@ -1337,11 +1524,16 @@ class DeftRuntime:
         split = NamedSharding(self.mesh, P(dp))
         acc = init_fused_accumulators(self.layout, self.accum_devices)
         if self.flat_state:
-            # flat f32 master copy — one buffer per bucket (flatten
-            # promotes a low-precision init to f32)
+            # flat master copy — one buffer per bucket (flatten promotes
+            # a low-precision init to f32; a bf16sr master rounds back
+            # down through the seeded stochastic-rounding kernel)
             pbuf = tuple(
                 flatten_buckets(self.layout, jax.tree_util.tree_leaves(params))
             )
+            if self.master_dtype == "bf16sr":
+                pbuf = tuple(
+                    self._round_master(p, b) for b, p in enumerate(pbuf)
+                )
             opt = init_flat_opt_state(self.opt_spec, self.layout.buf_sizes)
             # sharded engine: commit buffers split over 'data' so every
             # device materializes only its 1/N span
@@ -1366,6 +1558,14 @@ class DeftRuntime:
             "cur": jax.device_put(acc["cur"], split),
             "fut": jax.device_put(acc["fut"], split),
         }
+
+    def _round_master(self, buf: jax.Array, b: int) -> jax.Array:
+        """One flat f32 buffer rounded into the bf16sr resident master
+        (seeded, deterministic); nearest rounding for buffers the 128-
+        lane kernels cannot tile."""
+        if buf.shape[0] % 128 == 0:
+            return stochastic_round_bf16(buf, jnp.uint32(b + 1))
+        return buf.astype(jnp.bfloat16)
 
     def _init_pgather(self, layout: BucketLayout) -> Tuple[jax.Array, ...]:
         """Cold gather cache for ``layout``: zeros in the compute dtype.
@@ -1444,8 +1644,12 @@ class DeftRuntime:
                                "m": flat(tree_state["opt"]["m"])}
         if "v" in tree_state["opt"]:
             opt["v"] = flat(tree_state["opt"]["v"])
-        out = {"pbuf": flat(tree_state["params"]), "opt": opt,
-               "cur": cur, "fut": fut}
+        pbuf = flat(tree_state["params"])
+        if self.master_dtype == "bf16sr":
+            # checkpointed bf16 values promote exactly through flatten;
+            # the plain downcast restores them bit-for-bit
+            pbuf = tuple(p.astype(jnp.bfloat16) for p in pbuf)
+        out = {"pbuf": pbuf, "opt": opt, "cur": cur, "fut": fut}
         if self._gather_skip:
             if not cross and "pgather" in tree_state:
                 out["pgather"] = tree_state["pgather"]
@@ -1475,18 +1679,22 @@ class DeftRuntime:
         cross = lay != self.layout
         if with_pgather is None:
             with_pgather = self._gather_skip and not cross
-        leaves = [jax.ShapeDtypeStruct(s, jnp.float32) for s in lay.shapes]
-        tree = lambda: jax.tree_util.tree_unflatten(self._treedef, leaves)
+        tree = lambda dt: jax.tree_util.tree_unflatten(
+            self._treedef,
+            [jax.ShapeDtypeStruct(s, dt) for s in lay.shapes],
+        )
         opt: Dict[str, Any] = {
-            "step": jax.ShapeDtypeStruct((), jnp.int32), "m": tree()
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": tree(jnp.float32),
         }
         if self.opt_spec.name == "adamw":
-            opt["v"] = tree()
+            opt["v"] = tree(jnp.float32)
         acc = lambda: tuple(
             jax.ShapeDtypeStruct((self.accum_devices, n), jnp.float32)
             for n in lay.buf_sizes
         )
-        out = {"params": tree(), "opt": opt, "cur": acc(), "fut": acc()}
+        out = {"params": tree(self._master_jdtype), "opt": opt,
+               "cur": acc(), "fut": acc()}
         if with_pgather:
             dt = self.compute_dtype or jnp.float32
             out["pgather"] = tuple(
@@ -1672,14 +1880,14 @@ class DeftRuntime:
             for n in layout.buf_sizes
         )
         if self.flat_state:
-            bufs = lambda: tuple(
-                sds((n,), jnp.float32, buf) for n in layout.buf_sizes
+            bufs = lambda dt: tuple(
+                sds((n,), dt, buf) for n in layout.buf_sizes
             )
-            out["pbuf"] = bufs()
+            out["pbuf"] = bufs(self._master_jdtype)
             opt: Dict[str, Any] = {"step": state_abs["opt"]["step"],
-                                   "m": bufs()}
+                                   "m": bufs(jnp.float32)}
             if "v" in state_abs["opt"]:
-                opt["v"] = bufs()
+                opt["v"] = bufs(jnp.float32)
             out["opt"] = opt
         if self._gather_skip:
             dt = self.compute_dtype or jnp.float32
@@ -1739,6 +1947,11 @@ class DeftRuntime:
         transition: Optional[LayoutTransition] = None
         new_segments: Optional[BucketSegments] = None
         if layout is not None and layout != self.layout:
+            # a hot-swap may change per-bucket WIRE precision (it is just
+            # a new layout identity; an all-identical repack aliases the
+            # state across) but never the resident master dtype — that
+            # would need a state-wide cast, not a repack
+            self._validate_precision_layout(layout)
             if self.flat_state and self.fsdp:
                 shape = dict(zip(self.mesh.axis_names,
                                  self.mesh.devices.shape))
@@ -1967,6 +2180,10 @@ class DeftRuntime:
                 n_buckets=self.layout.n_buckets,
                 shards=self.layout.shards,
                 repack_s=repack_s,
+                precision=(
+                    self.layout.precision.describe()
+                    if self.layout.precision is not None else "f32"
+                ),
             )
         off = (i - self._cycle_base) % self.period
         self.last_phase = off
@@ -1994,10 +2211,16 @@ class DeftRuntime:
                 first=first, update=spec.do_update,
             )
             coll = self._coll_of_step[off]
+            wire = (
+                self.layout.precision.describe()
+                if self.layout.precision is not None else "f32"
+            )
             self.tracer.add(
                 "collective-group", f"collectives@{off}", t0, t1,
                 step=i, phase=off,
                 primary=coll["primary"], secondary=coll["secondary"],
+                wire_bytes=self._wire_bytes_of_step[off],
+                precision=wire,
             )
             if spec.do_update:
                 self.tracer.instant(
@@ -2042,6 +2265,12 @@ class DeftRuntime:
                 (self.update_impl or default_bucket_update_impl())
                 if self.flat_state else "per-leaf"
             ),
+            "wire_precision": (
+                self.layout.precision.describe()
+                if self.layout.precision is not None else "f32"
+            ),
+            "master_dtype": self.master_dtype,
+            "planned_wire_bytes_per_cycle": sum(self._wire_bytes_of_step),
             "accum_devices": self.accum_devices,
             "n_buckets": self.layout.n_buckets,
             "n_leaves": self.layout.n_leaves,

@@ -118,6 +118,28 @@ def test_bench_decoupled_entry_floor():
     assert dc["engine"]["decoupled"] is True
 
 
+def test_bench_precision_entry_floor():
+    """The checked-in precision entry holds the §13 acceptance
+    properties: the planner-chosen mixed policy's simulated coverage is
+    at least the all-f32 row's (shedding wire bytes can only relieve
+    the comm capacity), its priced iteration time is no worse, the gate
+    passed, and the executed wire bytes per cycle actually shrank.
+    steps/s is reported but not floored — CPU-host collectives are
+    local memcpys, so the byte win only shows on a real interconnect."""
+    path = os.path.join(_ROOT, "BENCH_runtime.json")
+    pc = json.load(open(path))["precision"]
+    sim = pc["sim"]
+    assert sim["coverage_mixed"] >= sim["coverage_f32"] - 1e-9, sim
+    assert sim["iteration_time_mixed"] <= sim["iteration_time_f32"] + 1e-12
+    assert sim["gate_ok_mixed"] is True
+    assert 0.0 < sim["wire_bytes_scale_mixed"] <= 1.0
+    assert (pc["wire_bytes_per_cycle_mixed"]
+            <= pc["wire_bytes_per_cycle_f32"])
+    if pc["engine"]["wire_precision"] != f"f32x{pc['model']['n_buckets']}":
+        assert (pc["wire_bytes_per_cycle_mixed"]
+                < pc["wire_bytes_per_cycle_f32"])
+
+
 def test_bench_obs_entry_floor():
     """The checked-in obs entry holds the §11 acceptance properties:
     span-closure reproduces the simulator, the undisturbed attribution
