@@ -124,6 +124,35 @@ _PRECISION_SCENARIO = {
     "wire_bytes_per_cycle_mixed": None,
 }
 
+_TWO_LINK_SCENARIO = {
+    "host_devices": None,
+    "mesh": {"data": None, "model": None},
+    "model": {"name": None, "params": None, "n_leaves": None,
+              "n_buckets": None},
+    "schedule": {"period": None, "updates_per_period": None,
+                 "secondary_slots_planned": None,
+                 "secondary_slots_forced": None,
+                 "ag_items": None, "ag_items_link1_planned": None},
+    "engine": {"flat_state": None, "sharded_state": None, "shards": None,
+               "decoupled": None, "secondary_chain": None},
+    "steps_timed": None,
+    "compile_s_chain_aot": None,
+    "steps_per_s_single_axis": None,
+    "steps_per_s_chain": None,
+    "steps_per_s_ratio_chain_vs_single_axis": None,
+    "sim": {
+        "mu": None,
+        "iteration_time_single_link": None,
+        "iteration_time_two_link": None,
+        "coverage_single_link": None,
+        "coverage_two_link": None,
+    },
+    "wire_bytes_primary_per_cycle": None,
+    "wire_bytes_secondary_per_cycle": None,
+    "wire_split_max_abs_error": None,
+    "wire_split_ok": None,
+}
+
 _REPACK = {
     "n_buckets_a": None,
     "n_buckets_b": None,
@@ -167,6 +196,7 @@ SCHEMAS: Dict[str, Dict[str, Any]] = {
         "fsdp_flat": _FSDP_FLAT_SCENARIO,
         "decoupled": _DECOUPLED_SCENARIO,
         "precision": _PRECISION_SCENARIO,
+        "two_link": _TWO_LINK_SCENARIO,
     },
     "BENCH_adapt.json": {
         "scenario": {"drop_step": None, "drop_scale": None,

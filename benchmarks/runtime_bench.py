@@ -679,6 +679,179 @@ def _inner_precision() -> dict:
     }
 
 
+def _inner_two_link() -> dict:
+    """two_link scenario (DESIGN.md §14): per-link ring-chain execution
+    of the secondary RS/AG traffic vs the single-axis collectives, on 4
+    forced host devices.  Reported side by side:
+
+    * simulated steady state of the SAME profile solved with the
+      secondary link priced (two-link knapsack) vs solved single-link —
+      the secondary chain can only add communication capacity, so
+      two-link coverage >= single-link (the floor test pins this on the
+      checked-in file);
+    * measured steps/s of the SAME schedule executed through the
+      per-link chain collectives vs the single-axis originals.  Every
+      synced bucket is forced onto the secondary link and every
+      streamed AG item onto link 1 (maximal chain routing — the parity
+      suite proves routing is bitwise-neutral), so the ratio isolates
+      the chain's ppermute cost.  On CPU hosts the n-1 store-and-forward
+      hops are real memcpys while XLA's fused collectives are one, so
+      the ratio is reported, not floored — the chain wins only when the
+      secondary link is real extra wire;
+    * the per-link wire-byte audit: traced primary/secondary bytes per
+      cycle must match the planned split exactly
+      (``obs.wire_bytes_report`` with ``planned_split``).
+    """
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+
+    import jax
+
+    import repro  # noqa: F401
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core.bucket import BucketTimes
+    from repro.core.deft import Planner, PlanRequest, ag_times, rs_times
+    from repro.core.profiler import HardwareModel
+    from repro.core.scheduler import DeftScheduler
+    from repro.core.simulator import simulate_deft
+    from repro.data.pipeline import make_batch
+    from repro.launch.mesh import ring_chain
+    from repro.obs import Tracer, wire_bytes_report
+    from repro.optim.optimizers import adamw
+    from repro.train import (
+        DeftRuntime,
+        RuntimeConfig,
+        assign_buckets,
+        build_bucket_layout,
+        init_train_state,
+        leaf_bucket_times,
+    )
+
+    cfg = reduce_for_smoke(get_config("qwen3-4b"))
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    mesh = jax.make_mesh((4, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    chain = ring_chain(4, 1)
+    B, S = 8, 32
+
+    probe = init_train_state(key, cfg, opt)
+    bucket_of, nb = assign_buckets(probe["params"], cfg,
+                                   partition_elems=150_000)
+    times = leaf_bucket_times(probe["params"], cfg, bucket_of, nb,
+                              HardwareModel(dp_degree=4), S, 2)
+    scale = 1.8 * (times.fwd_total + times.bwd_total) / max(
+        times.comm_total, 1e-12
+    )
+    times = BucketTimes(times.fwd, times.bwd,
+                        tuple(c * scale for c in times.comm))
+    res = Planner().plan(PlanRequest(times=times, preserve=False,
+                                     decoupled=True))
+    sched, scfg, ag_plan = res.schedule, res.scheduler_cfg, res.ag_plan
+
+    # ---- simulated steady state: same RS-side profile solved with the
+    # secondary link priced vs solved single-link — the two-link
+    # knapsack sees strictly more capacity
+    rs = rs_times(times)
+    split = ag_times(times)
+    scfg_one = dataclasses.replace(scfg, heterogeneous=False)
+    plans_two = DeftScheduler(rs, scfg).run(48)
+    plans_one = DeftScheduler(rs, scfg_one).run(48)
+    sim_two = simulate_deft(rs, plans_two, mu=scfg.mu,
+                            heterogeneous=True,
+                            link_models=scfg.link_models,
+                            ag_times=split, ag_mode="streamed")
+    sim_one = simulate_deft(rs, plans_one, mu=scfg.mu,
+                            heterogeneous=False,
+                            ag_times=split, ag_mode="streamed")
+    slots_planned = sum(sum(ph.secondary) for ph in sched.phases)
+    ag_link1_planned = sum(1 for i in ag_plan.items if i.link == 1)
+
+    # ---- forced maximal routing: every synced bucket on the secondary
+    # link, every streamed AG item on link 1 — deterministic regardless
+    # of what the knapsack picked for this profile, and bitwise-neutral
+    # (tests/test_chain_parity.py), so the paired timing isolates the
+    # chain collectives themselves
+    phases = []
+    for ph in sched.phases:
+        sec = tuple(
+            (ph.route_new[b] == "sync" and ph.rotate) or ph.sync_cur[b]
+            for b in range(len(ph.route_new))
+        )
+        phases.append(dataclasses.replace(ph, secondary=sec))
+    sched = dataclasses.replace(sched, phases=tuple(phases))
+    slots_forced = sum(sum(ph.secondary) for ph in sched.phases)
+    ag_plan = dataclasses.replace(
+        ag_plan,
+        items=tuple(dataclasses.replace(i, link=1) for i in ag_plan.items),
+    )
+
+    lay = build_bucket_layout(probe["params"], bucket_of, nb,
+                              shard_count=4)
+    batch = make_batch(cfg, 0, 0, B, S)
+    base = RuntimeConfig(fsdp=True, decoupled=True)
+    tracer = Tracer(capacity=1 << 16)
+    with jax.set_mesh(mesh):
+        rt_s = DeftRuntime(cfg, opt, sched, lay, mesh, config=base)
+        state_s = rt_s.init_state(key)
+        rt_s.compile(state_s, batch)
+        rt_c = DeftRuntime(cfg, opt, sched, lay, mesh,
+                           config=base.replace(secondary_chain=chain),
+                           ag_plan=ag_plan, tracer=tracer)
+        state_c = rt_c.init_state(key)
+        compile_s = sum(rt_c.compile(state_c, batch).values())
+
+        engines = {
+            "single_axis": [lambda i, s: rt_s.step(i, s, batch), state_s],
+            "chain": [lambda i, s: rt_c.step(i, s, batch), state_c],
+        }
+        chunk = sched.period                 # period-aligned windows
+        reps = max(_STEPS // chunk, 1)
+        best, _, _ = _paired_min_of_reps(
+            engines, warmup=sched.period, chunk=chunk, reps=reps
+        )
+
+    # per-link wire-byte audit over the traced chain steps: totals AND
+    # the primary/secondary split must match the plan exactly
+    rep = wire_bytes_report(tracer, rt_c.wire_bytes_per_phase,
+                            planned_split=rt_c.wire_bytes_split_per_phase)
+    wire_split = rt_c.wire_bytes_split_per_phase
+    return {
+        "host_devices": jax.device_count(),
+        "mesh": {"data": 4, "model": 1},
+        "model": {"name": cfg.name, "params": int(cfg.total_params()),
+                  "n_leaves": lay.n_leaves, "n_buckets": nb},
+        "schedule": {"period": sched.period,
+                     "updates_per_period": sched.updates_per_period,
+                     "secondary_slots_planned": slots_planned,
+                     "secondary_slots_forced": slots_forced,
+                     "ag_items": len(ag_plan.items),
+                     "ag_items_link1_planned": ag_link1_planned},
+        "engine": {"flat_state": True, "sharded_state": True,
+                   "shards": lay.shards, "decoupled": True,
+                   "secondary_chain": list(chain)},
+        "timing": "paired-interleaved-min-of-reps",
+        "steps_timed": reps * chunk,
+        "compile_s_chain_aot": compile_s,
+        "steps_per_s_single_axis": 1.0 / best["single_axis"],
+        "steps_per_s_chain": 1.0 / best["chain"],
+        "steps_per_s_ratio_chain_vs_single_axis": (
+            best["single_axis"] / best["chain"]
+        ),
+        "sim": {
+            "mu": scfg.mu,
+            "iteration_time_single_link": sim_one.iteration_time,
+            "iteration_time_two_link": sim_two.iteration_time,
+            "coverage_single_link": 1.0 - sim_one.bubble_fraction,
+            "coverage_two_link": 1.0 - sim_two.bubble_fraction,
+        },
+        "wire_bytes_primary_per_cycle": sum(p for p, _ in wire_split),
+        "wire_bytes_secondary_per_cycle": sum(s for _, s in wire_split),
+        "wire_split_max_abs_error": rep.max_abs_split_error,
+        "wire_split_ok": bool(rep.ok),
+    }
+
+
 def _bench_update_path() -> dict:
     """Isolated optimizer-apply wall time: fused flat bucket kernels
     (kernels/bucket_update) vs per-leaf apply_updates over the same
@@ -907,7 +1080,8 @@ def run() -> None:
                        ("dp4", ["--inner", "4"]),
                        ("fsdp_flat", ["--inner-fsdp"]),
                        ("decoupled", ["--inner-decoupled"]),
-                       ("precision", ["--inner-precision"])):
+                       ("precision", ["--inner-precision"]),
+                       ("two_link", ["--inner-two-link"])):
         proc = subprocess.run(
             [sys.executable, os.path.abspath(__file__), *args],
             env=env, capture_output=True, text=True, timeout=1800,
@@ -993,6 +1167,21 @@ def run() -> None:
           f"{pc['wire_bytes_per_cycle_mixed']},"
           f"mixed {pc['wire_bytes_per_cycle_mixed'] / 1e6:.1f}MB vs f32 "
           f"{pc['wire_bytes_per_cycle_f32'] / 1e6:.1f}MB")
+    tl = results["two_link"]
+    print(f"runtime_two_link_sim_coverage,"
+          f"{tl['sim']['coverage_two_link'] * 1e4:.0f},"
+          f"two-link {tl['sim']['coverage_two_link']:.3f} vs single-link "
+          f"{tl['sim']['coverage_single_link']:.3f} (mu {tl['sim']['mu']})")
+    print(f"runtime_two_link_steps_per_s,"
+          f"{1e6 / tl['steps_per_s_chain']:.0f},"
+          f"chain {tl['steps_per_s_chain']:.3f} vs single-axis "
+          f"{tl['steps_per_s_single_axis']:.3f} steps/s "
+          f"({tl['steps_per_s_ratio_chain_vs_single_axis']:.2f}x)")
+    print(f"runtime_two_link_wire_bytes_secondary,"
+          f"{tl['wire_bytes_secondary_per_cycle']},"
+          f"secondary {tl['wire_bytes_secondary_per_cycle'] / 1e6:.1f}MB vs "
+          f"primary {tl['wire_bytes_primary_per_cycle'] / 1e6:.1f}MB per "
+          f"cycle (split audit ok={tl['wire_split_ok']})")
     for gran, u in results["update_path"].items():
         print(f"update_path_{gran}_apply_ms,"
               f"{u['apply_ms_flat'] * 1e3:.0f},"
@@ -1026,6 +1215,9 @@ if __name__ == "__main__":
         print()
     elif len(sys.argv) > 1 and sys.argv[1] == "--inner-precision":
         json.dump(_inner_precision(), sys.stdout)
+        print()
+    elif len(sys.argv) > 1 and sys.argv[1] == "--inner-two-link":
+        json.dump(_inner_two_link(), sys.stdout)
         print()
     else:
         run()

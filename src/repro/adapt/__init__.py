@@ -10,6 +10,7 @@ from repro.adapt.calibrate import (
     CalibratedProfile,
     calibrate,
     fit_scales,
+    fit_secondary_scale,
     scale_times,
     schedule_plans,
     steady_phase_durations,
@@ -20,6 +21,8 @@ from repro.adapt.repartition import (
     RepartitionConfig,
     Repartitioner,
     candidate_solve_table,
+    dp_partition,
+    exposed_makespan,
 )
 from repro.adapt.scenario import (
     BandwidthDrop,
@@ -49,7 +52,10 @@ __all__ = [
     "TelemetryConfig",
     "candidate_solve_table",
     "calibrate",
+    "dp_partition",
+    "exposed_makespan",
     "fit_scales",
+    "fit_secondary_scale",
     "run_control_loop",
     "scale_times",
     "schedule_plans",

@@ -26,9 +26,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.bucket import BucketTimes
+from repro.core.links import LinkModel
 from repro.core.profiler import HardwareModel
 from repro.core.scheduler import DeftScheduler, IterationPlan, SchedulerConfig
 from repro.core.simulator import simulate_deft
@@ -84,12 +85,16 @@ def steady_phase_durations(
     *,
     mu: float,
     heterogeneous: bool,
+    link_models: Optional[Dict[int, LinkModel]] = None,
 ) -> Tuple[float, ...]:
     """Steady-state wall seconds of each cycle phase when the given plans
     execute under ``run_times`` (which may differ from the times the plans
-    were solved for — that difference IS the drift being measured)."""
+    were solved for — that difference IS the drift being measured).
+    ``link_models`` prices each link separately (DESIGN.md §14); None
+    keeps the legacy scalar-``mu`` secondary."""
     sim = simulate_deft(
-        run_times, plans, mu=mu, heterogeneous=heterogeneous
+        run_times, plans, mu=mu, heterogeneous=heterogeneous,
+        link_models=link_models,
     )
     durs = sim.iteration_durations
     out = []
@@ -117,11 +122,18 @@ class CalibratedProfile:
     residual: float             # rms per-phase fit residual, seconds
     planned: Tuple[float, ...]  # per-phase durations the plan assumed
     measured: Tuple[float, ...] # per-phase durations telemetry saw
+    # per-link refinement (DESIGN.md §14): the secondary link's residual
+    # inverse-bandwidth multiplier on top of comm_scale, and the fitted
+    # LinkModels a heterogeneity-aware replan consumes
+    # (``PlanRequest.link_models``).  1.0 / None without the refinement.
+    sec_scale: float = 1.0
+    link_models: Optional[Dict[int, LinkModel]] = None
 
     @property
     def drift(self) -> float:
-        """Largest relative deviation of either fitted scale from 1."""
-        return max(abs(self.comp_scale - 1.0), abs(self.comm_scale - 1.0))
+        """Largest relative deviation of any fitted scale from 1."""
+        return max(abs(self.comp_scale - 1.0), abs(self.comm_scale - 1.0),
+                   abs(self.sec_scale - 1.0))
 
 
 def _rms(xs: Sequence[float]) -> float:
@@ -150,11 +162,14 @@ def fit_scales(
     span: float = 32.0,
     coarse: int = 9,
     refine_rounds: int = 2,
+    link_models: Optional[Dict[int, LinkModel]] = None,
 ) -> Tuple[float, float, float]:
     """Fit (comp_scale, comm_scale) so the simulated per-phase durations
     of the installed plans match the measured EMAs.  Log-space grid over
     ``[1/span, span]``, refined ``refine_rounds`` times around the best
-    cell.  Returns (comp_scale, comm_scale, rms_residual)."""
+    cell.  Returns (comp_scale, comm_scale, rms_residual).
+    ``link_models`` fixes per-link pricing inside the forward model (the
+    coordinate-descent partner of :func:`fit_secondary_scale`)."""
     plans = schedule_plans(planned_times, scfg, horizon=fit_horizon(period))
     obs = [(i, m) for i, m in enumerate(measured[:period]) if m is not None]
     if not obs:
@@ -170,6 +185,7 @@ def fit_scales(
         pred = steady_phase_durations(
             plans, scale_times(planned_times, a, b), period,
             mu=scfg.mu, heterogeneous=scfg.heterogeneous,
+            link_models=link_models,
         )
         return _rms([pred[i] - m for i, m in obs]) + reg * (
             abs(math.log(a)) + abs(math.log(b))
@@ -196,16 +212,106 @@ def fit_scales(
     return best[0], best[1], best_l
 
 
+def fit_secondary_scale(
+    planned_times: BucketTimes,
+    scfg: SchedulerConfig,
+    period: int,
+    measured: Sequence[Optional[float]],
+    comp_scale: float,
+    comm_scale: float,
+    *,
+    span: float = 8.0,
+    coarse: int = 9,
+    refine_rounds: int = 2,
+) -> Tuple[float, Optional[Dict[int, LinkModel]], float]:
+    """Per-link refinement of the 2-D fit (DESIGN.md §14).
+
+    The joint ``comm_scale`` moves BOTH links together, so a
+    secondary-only degradation (the common case: the slow host/DCN path
+    congests while the primary fabric holds) aliases into it.  With the
+    global scales pinned, this 1-D stage fits the secondary link's
+    residual inverse-bandwidth multiplier by re-simulating the installed
+    plans under per-link :class:`LinkModel` pricing.  Returns
+    ``(sec_scale, link_models, rms_residual)`` — the models carry the
+    fitted multiplier on top of the config's base models (latency terms
+    preserved) and feed ``PlanRequest.link_models`` for the replan.
+    ``(1.0, None, 0.0)`` when the setup is homogeneous or unobserved.
+    """
+    obs = [(i, m) for i, m in enumerate(measured[:period]) if m is not None]
+    if not obs or not scfg.heterogeneous:
+        return 1.0, None, 0.0
+    plans = schedule_plans(planned_times, scfg, horizon=fit_horizon(period))
+    run = scale_times(planned_times, comp_scale, comm_scale)
+    base = scfg.models()
+    reg = 1e-3 * sum(m for _, m in obs) / len(obs)
+
+    def models_for(s: float) -> Dict[int, LinkModel]:
+        return {
+            lid: (m if lid == 0
+                  else LinkModel(m.latency, m.inv_bw * s))
+            for lid, m in base.items()
+        }
+
+    def loss(s: float) -> float:
+        pred = steady_phase_durations(
+            plans, run, period, mu=scfg.mu,
+            heterogeneous=scfg.heterogeneous,
+            link_models=models_for(s),
+        )
+        return _rms([pred[i] - m for i, m in obs]) + reg * abs(math.log(s))
+
+    best_s = 1.0
+    best_l = loss(best_s)
+    lo, hi = -math.log(span), math.log(span)
+    for _ in range(1 + refine_rounds):
+        for i in range(coarse):
+            ls = lo + (hi - lo) * i / (coarse - 1)
+            l = loss(math.exp(ls))
+            if l < best_l:
+                best_l, best_s = l, math.exp(ls)
+        w = (hi - lo) / (coarse - 1)
+        c = math.log(best_s)
+        lo, hi = c - w, c + w
+    return best_s, models_for(best_s), best_l
+
+
 def calibrate(
     planned_times: BucketTimes,
     scfg: SchedulerConfig,
     period: int,
     measured: Sequence[Optional[float]],
     hw: Optional[HardwareModel] = None,
+    *,
+    per_link: bool = False,
 ) -> CalibratedProfile:
-    """Fit the effective scales and package the re-based profile."""
+    """Fit the effective scales and package the re-based profile.
+
+    ``per_link=True`` adds the staged secondary-link refinement
+    (:func:`fit_secondary_scale`): the profile then carries fitted
+    :class:`LinkModel` s and its residual is the per-link fit's."""
     hw = hw or HardwareModel()
     a, b, resid = fit_scales(planned_times, scfg, period, measured)
+    sec_scale, link_models = 1.0, None
+    if per_link and scfg.heterogeneous:
+        # coordinate descent: a secondary-only slowdown aliases into the
+        # joint (a, b) fit, so alternate the 1-D per-link stage with
+        # (a, b) re-fits under the fitted LinkModels until both views of
+        # the measurements agree.  Two alternations suffice — each stage
+        # is a regularized global grid search, not a local step.
+        for _ in range(2):
+            sec_scale, link_models, resid = fit_secondary_scale(
+                planned_times, scfg, period, measured, a, b
+            )
+            if link_models is None:
+                break
+            a, b, resid = fit_scales(
+                planned_times, scfg, period, measured,
+                link_models=link_models,
+            )
+        if link_models is not None:
+            sec_scale, link_models, resid = fit_secondary_scale(
+                planned_times, scfg, period, measured, a, b
+            )
     planned = planned_phase_durations(planned_times, scfg, period)
     eff_hw = dataclasses.replace(
         hw,
@@ -226,4 +332,6 @@ def calibrate(
         measured=tuple(
             m if m is not None else p for m, p in zip(measured, planned)
         ),
+        sec_scale=sec_scale,
+        link_models=link_models,
     )

@@ -403,7 +403,8 @@ class AdaptiveController:
             cum_comp = self._cum_comp * profile.comp_scale
             cum_comm = self._cum_comm * profile.comm_scale
             cands = self.repartitioner.candidates(
-                self.bucket_of, self.times.n
+                self.bucket_of, self.times.n,
+                comp_scale=cum_comp, comm_scale=cum_comm,
             )
             pairs = []
             for c in cands:

@@ -29,11 +29,12 @@ shims over the Planner; new call sites must use the facade
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.bucket import BucketTimes
 from repro.core.knapsack import deadline_knapsack
+from repro.core.links import LinkModel
 from repro.core.precision import (
     PRECISION_SIGMA_GAIN,
     PrecisionPolicy,
@@ -144,6 +145,24 @@ class AgStreamPlan:
         return 1.0 if total <= 0.0 else self.covered_s / total
 
 
+def ag_sim_kwargs(ag_plan: Optional[AgStreamPlan]):
+    """Per-bucket ``(durations, links)`` of the first gathering phase —
+    the shape ``simulate_deft(ag_times=..., ag_links=...)`` consumes.
+    Every gathering phase places the same full bucket set, so the first
+    one is representative; returns ``(None, None)`` when the plan has no
+    items (pure-stale cycle or no plan at all)."""
+    if ag_plan is None or not ag_plan.items:
+        return None, None
+    t0 = ag_plan.items[0].phase
+    nb = max(i.bucket for i in ag_plan.items) + 1
+    durs = [0.0] * nb
+    links = [0] * nb
+    for item in ag_plan.items_for_phase(t0):
+        durs[item.bucket] = item.duration
+        links[item.bucket] = item.link
+    return tuple(durs), tuple(links)
+
+
 def plan_ag_stream(
     schedule: DeftSchedule,
     times: BucketTimes,
@@ -178,8 +197,13 @@ def plan_ag_stream(
         rest = [b for b in range(nb) if b not in sel]
         sel2 = set()
         if scfg.heterogeneous and rest:
+            if scfg.link_models is None:
+                sec_durs = [durs[b] * scfg.mu for b in rest]
+            else:
+                lm1 = scfg.models().get(1, LinkModel(0.0, scfg.mu))
+                sec_durs = [lm1.time(durs[b]) for b in rest]
             picked = deadline_knapsack(
-                [durs[b] * scfg.mu for b in rest],
+                sec_durs,
                 [deadlines[b] for b in rest],
                 cap,
             )
@@ -239,6 +263,9 @@ class PlanRequest:
     heterogeneous: bool = True
     mu: float = 1.65
     warmup: int = 16
+    # per-link latency + inverse-bandwidth models (heterogeneous-link
+    # pricing); None = legacy scalar ``mu``
+    link_models: Optional[Dict[int, LinkModel]] = None
 
     # candidate scoring (candidates path)
     baseline_tag: Optional[str] = None
@@ -377,6 +404,7 @@ class Planner:
             scfg = SchedulerConfig(
                 heterogeneous=req.heterogeneous, mu=req.mu,
                 capacity_factor=factor,
+                link_models=req.link_models,
             )
             schedule = self._solve(times, scfg, warmup=req.warmup)
             if not req.preserve:
@@ -410,6 +438,30 @@ class Planner:
         plans = sched.run()
         return extract_schedule(plans, n_buckets or times.n, warmup=warmup)
 
+    @staticmethod
+    def _ag_sim_kwargs(schedule, times: BucketTimes,
+                       scfg: SchedulerConfig, req: PlanRequest) -> dict:
+        """Streamed-AG kwargs for candidate scoring.
+
+        A decoupled request must be priced with its AG items on their
+        *planned links* — without this every gather simulates on the
+        primary link, mispricing exactly the candidates whose plan
+        off-loaded gathers to the secondary link (the ranking can flip).
+        ``times`` are the full (unsplit) bucket times the AG items derive
+        from."""
+        if not req.decoupled:
+            return {}
+        agp = plan_ag_stream(
+            schedule, times, scfg,
+            ag_fraction=req.ag_fraction,
+            gather_skip=req.gather_skip,
+        )
+        durs, links = ag_sim_kwargs(agp)
+        if durs is None:
+            return {}
+        return {"ag_times": durs, "ag_links": links,
+                "ag_skip": req.gather_skip}
+
     def _plan_candidates(self, req: PlanRequest):
         """Candidate-partition path: run the feedback loop over SEVERAL
         bucket partitions of the same model, score each by simulated
@@ -432,6 +484,8 @@ class Planner:
                 DeftScheduler(solve_on, scfg).run(req.sim_iterations),
                 mu=scfg.mu,
                 heterogeneous=scfg.heterogeneous,
+                link_models=scfg.link_models,
+                **self._ag_sim_kwargs(schedule, times, scfg, req),
             )
             solves.append(CandidateSolve(
                 tag=tag,
@@ -513,6 +567,8 @@ class Planner:
             DeftScheduler(solve_on, scfg).run(req.sim_iterations),
             mu=scfg.mu,
             heterogeneous=scfg.heterogeneous,
+            link_models=scfg.link_models,
+            **self._ag_sim_kwargs(schedule, priced, scfg, req),
         )
         # wire-volume scale vs all-f32, weighted by each bucket's f32
         # comm time (proportional to its bytes — BucketTimes carries no

@@ -42,6 +42,7 @@ from repro.core.knapsack import (
     naive_knapsack,
     recursive_knapsack,
 )
+from repro.core.links import LinkModel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +89,13 @@ class SchedulerConfig:
     mu: float = 1.65               # primary/secondary speed ratio
     capacity_factor: float = 1.0   # Preserver feedback scales capacities
     horizon: int = 96              # iterations to run before cycle detection
+    # per-link latency + inverse-bandwidth pricing; None = the legacy
+    # scalar model (unit primary, ``mu``-scaled secondary, no latency) —
+    # that path is kept literally so existing plans stay byte-identical
+    link_models: Optional[Dict[int, LinkModel]] = None
+
+    def models(self) -> Dict[int, LinkModel]:
+        return self.link_models or LinkModel.pair_from_mu(self.mu)
 
 
 class DeftScheduler:
@@ -100,16 +108,66 @@ class DeftScheduler:
 
     # ---- helpers -----------------------------------------------------------
     def _caps(self, compute_time: float) -> Tuple[float, float]:
+        """(primary, secondary) capacity in *nominal* comm seconds.
+
+        With the legacy scalar model the secondary capacity is ``c / mu``
+        (a duration d fits iff ``d * mu <= c``).  With per-link models the
+        same conversion uses the secondary's inverse bandwidth; the
+        latency term cannot be folded into a capacity and is charged
+        per-item by the selection helpers instead."""
         c = compute_time * self.cfg.capacity_factor
-        if self.cfg.heterogeneous:
+        if not self.cfg.heterogeneous:
+            return c, 0.0
+        if self.cfg.link_models is None:
             return c, c / self.cfg.mu
-        return c, 0.0
+        models = self.cfg.models()
+        lm0 = models.get(0, LinkModel())
+        lm1 = models.get(1, LinkModel(0.0, self.cfg.mu))
+        return c / max(lm0.inv_bw, 1e-12), c / max(lm1.inv_bw, 1e-12)
+
+    def _sec_fill(
+        self, ordered: List[Task], cap_s: float
+    ) -> Tuple[List[Task], List[Task]]:
+        """Longest-first greedy fill of the slow link; returns
+        (secondary, remaining).  ``cap_s`` is in nominal seconds; with
+        per-link models each placed item is additionally charged the
+        secondary latency (converted to nominal units)."""
+        times = [self.times.comm[t.bucket] for t in ordered]
+        lat = 0.0
+        if self.cfg.link_models is not None:
+            lm1 = self.cfg.models().get(1, LinkModel())
+            lat = lm1.latency / max(lm1.inv_bw, 1e-12)
+        sec: List[Task] = []
+        for i in sorted(range(len(ordered)), key=lambda j: -times[j]):
+            if times[i] + lat <= cap_s:
+                sec.append(ordered[i])
+                cap_s -= times[i] + lat
+        return sec, [t for t in ordered if t not in sec]
 
     def _select_two_link(
         self, tasks: List[Task], cap_p: float, cap_s: float
     ) -> Tuple[List[Task], List[Task], List[Task]]:
         """(primary, secondary, leftover) from a task list via Problem 2."""
         times = [self.times.comm[t.bucket] for t in tasks]
+        if self.cfg.link_models is not None:
+            # charge per-item link latencies (nominal units) by shrinking
+            # the offered durations' headroom: items are priced at
+            # duration + latency/inv_bw on each link
+            models = self.cfg.models()
+            lm0 = models.get(0, LinkModel())
+            lm1 = models.get(1, LinkModel())
+            lat_p = lm0.latency / max(lm0.inv_bw, 1e-12)
+            lat_s = lm1.latency / max(lm1.inv_bw, 1e-12)
+            if lat_p > 0.0 or lat_s > 0.0:
+                # distinct per-link weights: greedy secondary fill first
+                # (longest-first, true secondary cost), exact DP on the
+                # primary over the rest at true primary cost
+                sec, rest = self._sec_fill(tasks, cap_s)
+                rest_w = [self.times.comm[t.bucket] + lat_p for t in rest]
+                sel = naive_knapsack(rest_w, cap_p)
+                prim = [rest[i] for i in sel]
+                leftover = [t for t in rest if t not in prim]
+                return prim, sec, leftover
         p_idx, s_idx = knapsack_two_link(times, cap_p, cap_s)
         chosen = set(p_idx) | set(s_idx)
         return (
@@ -135,13 +193,7 @@ class DeftScheduler:
         frozen = [t for t in tasks if t.bucket == 0]
         sec: List[Task] = []
         if cap_s > 0 and ordered:
-            times = [self.times.comm[t.bucket] for t in ordered]
-            # longest-first greedy fill of the slow link
-            for i in sorted(range(len(ordered)), key=lambda j: -times[j]):
-                if times[i] <= cap_s:
-                    sec.append(ordered[i])
-                    cap_s -= times[i]
-            ordered = [t for t in ordered if t not in sec]
+            sec, ordered = self._sec_fill(ordered, cap_s)
         comm = [self.times.comm[t.bucket] for t in ordered]
         bwd = [self.times.bwd[t.bucket] for t in ordered]
         sel = recursive_knapsack(comm, cap_p, bwd)

@@ -23,6 +23,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.bucket import BucketTimes
+from repro.core.links import LinkModel
 from repro.core.policies import BaselinePolicy
 from repro.core.scheduler import IterationPlan, Task
 
@@ -49,13 +50,13 @@ class SimResult:
 
 
 class _Link:
-    def __init__(self, speed_factor: float = 1.0):
+    def __init__(self, model: LinkModel = LinkModel()):
         self.free_at = 0.0
-        self.speed = speed_factor   # >1 = slower (multiply durations)
+        self.model = model
 
     def transmit(self, ready: float, duration: float) -> Tuple[float, float]:
         start = max(self.free_at, ready)
-        end = start + duration * self.speed
+        end = start + self.model.time(duration)
         self.free_at = end
         return start, end
 
@@ -144,6 +145,7 @@ def simulate_deft(
     ag_mode: str = "streamed",
     ag_links: Optional[Sequence[int]] = None,
     ag_skip: bool = True,
+    link_models: Optional[Dict[int, LinkModel]] = None,
 ) -> SimResult:
     """Run the DeFT plan list through the timeline model.
 
@@ -162,9 +164,17 @@ def simulate_deft(
     stalls forward block ``b`` until its own AG lands — late AGs cost a
     *stall*, not a WaitAll bubble; ``ag_mode="burst"`` makes the first
     block wait for every AG (the fused engine's up-front ZeRO gather
-    burst, kept as the comparison baseline)."""
+    burst, kept as the comparison baseline).
+
+    Heterogeneous-link pricing: ``link_models`` maps link id to a
+    :class:`LinkModel` (latency + inverse-bandwidth); when omitted the
+    legacy scalar model applies (unit primary, ``mu``-scaled secondary,
+    no latency)."""
     n = times.n
-    links = {0: _Link(1.0), 1: _Link(mu)}
+    models = dict(link_models) if link_models else LinkModel.pair_from_mu(mu)
+    links = {lid: _Link(m) for lid, m in models.items()}
+    links.setdefault(0, _Link(LinkModel(0.0, 1.0)))
+    links.setdefault(1, _Link(LinkModel(0.0, mu)))
     t = 0.0
     timeline: List[Tuple[str, float, float, str]] = []
     iter_starts: List[float] = []

@@ -176,7 +176,10 @@ class ElasticController:
                 factors=self.cfg.repartition_factors,
                 min_gain=self.cfg.min_gain,
             ))
-            for c in rp.candidates(self.bucket_of, self.n_buckets):
+            for c in rp.candidates(
+                self.bucket_of, self.n_buckets,
+                comp_scale=self._comp_scale, comm_scale=self._comm_scale,
+            ):
                 if c.tag == "current":
                     continue
                 cands[c.tag] = (c.bucket_of, c.n_buckets)

@@ -26,6 +26,7 @@ from repro.obs.attribution import (
     sim_metrics_from_spans,
     spans_from_sim,
     timeline_bubbles,
+    link_wire_bytes_from_trace,
     wire_bytes_from_trace,
     wire_bytes_report,
 )
@@ -51,6 +52,7 @@ __all__ = [
     "spans_from_sim",
     "timeline_bubbles",
     "validate_summary",
+    "link_wire_bytes_from_trace",
     "wire_bytes_from_trace",
     "wire_bytes_report",
 ]

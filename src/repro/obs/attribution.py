@@ -37,6 +37,7 @@ from repro.adapt.calibrate import (
     scale_times,
 )
 from repro.core.bucket import BucketTimes
+from repro.core.links import effective_mu
 from repro.core.scheduler import DeftSchedule, SchedulerConfig
 from repro.core.simulator import SimResult, simulate_deft
 from repro.obs.trace import Span, Tracer
@@ -389,10 +390,15 @@ def attribute(
     plans = schedule_plans(times, scfg, horizon=fit_horizon(period))
     sim = simulate_deft(
         run_times, plans, mu=scfg.mu,
-        heterogeneous=scfg.heterogeneous, keep_timeline=True, **ag_kw,
+        heterogeneous=scfg.heterogeneous, keep_timeline=True,
+        link_models=scfg.link_models, **ag_kw,
     )
+    # with per-link LinkModels (§14) the wall-to-nominal conversion for
+    # secondary spans uses the models' bandwidth ratio, not the scalar mu
+    mu_eff = (effective_mu(scfg.models())
+              if scfg.link_models is not None else scfg.mu)
     m = sim_metrics_from_spans(
-        spans_from_sim(sim), mu=scfg.mu, warm=max(2, len(plans) // 4)
+        spans_from_sim(sim), mu=mu_eff, warm=max(2, len(plans) // 4)
     )
 
     # knapsack capacities per iteration (scheduler._caps semantics, in
@@ -405,8 +411,8 @@ def attribute(
         busy0 = m.link_busy_per_iter.get(0, 0.0)
         util["link0"] = busy0 / cap_p
         if scfg.heterogeneous:
-            busy1 = m.link_busy_per_iter.get(1, 0.0) / max(scfg.mu, 1e-12)
-            util["link1"] = busy1 / (cap_p / scfg.mu)
+            busy1 = m.link_busy_per_iter.get(1, 0.0) / max(mu_eff, 1e-12)
+            util["link1"] = busy1 / (cap_p / mu_eff)
 
     return Attribution(
         period=period,
@@ -478,6 +484,14 @@ class WireBytesReport:
     planned_per_phase: Tuple[int, ...]
     measured_per_phase: Tuple[Optional[float], ...]  # mean over cycles
     precisions: Tuple[Optional[str], ...]            # span wire tags
+    # per-link split (§14): (primary, secondary) bytes per phase — did
+    # the traffic the knapsack placed on each link actually ride it?
+    # None when the runtime predates per-link spans or no split was
+    # requested; unobserved phases are None entries in measured_split.
+    planned_split: Optional[Tuple[Tuple[int, int], ...]] = None
+    measured_split: Optional[
+        Tuple[Optional[Tuple[float, float]], ...]
+    ] = None
 
     @property
     def planned_per_cycle(self) -> int:
@@ -502,9 +516,23 @@ class WireBytesReport:
         )
 
     @property
+    def max_abs_split_error(self) -> float:
+        """Largest per-link |measured - planned| byte gap over observed
+        phases; 0 when no split was recorded."""
+        if self.planned_split is None or self.measured_split is None:
+            return 0.0
+        return max(
+            (max(abs(m[0] - p[0]), abs(m[1] - p[1]))
+             for m, p in zip(self.measured_split, self.planned_split)
+             if m is not None),
+            default=0.0,
+        )
+
+    @property
     def ok(self) -> bool:
-        """Every observed phase shipped exactly the planned bytes."""
-        return self.max_abs_error == 0.0
+        """Every observed phase shipped exactly the planned bytes —
+        in total AND per link when a split is recorded."""
+        return self.max_abs_error == 0.0 and self.max_abs_split_error == 0.0
 
 
 def wire_bytes_from_trace(
@@ -533,18 +561,60 @@ def wire_bytes_from_trace(
     return measured, [tags.get(p) for p in range(period)]
 
 
+def link_wire_bytes_from_trace(
+    tracer: Tracer, period: int
+) -> List[Optional[Tuple[float, float]]]:
+    """Mean (primary, secondary) wire bytes of the recorded
+    ``collective-group`` spans per cycle phase (§14).  ``None`` for
+    phases with no spans or spans from a runtime that predates the
+    per-link attrs."""
+    acc: Dict[int, List[Tuple[float, float]]] = {}
+    for sp in tracer.spans("collective-group"):
+        if sp.phase is None or not 0 <= sp.phase < period:
+            continue
+        wp = sp.args.get("wire_bytes_primary")
+        ws = sp.args.get("wire_bytes_secondary")
+        if wp is None or ws is None:
+            continue
+        acc.setdefault(sp.phase, []).append((float(wp), float(ws)))
+    out: List[Optional[Tuple[float, float]]] = []
+    for p in range(period):
+        pairs = acc.get(p)
+        if not pairs:
+            out.append(None)
+        else:
+            out.append((
+                sum(x for x, _ in pairs) / len(pairs),
+                sum(y for _, y in pairs) / len(pairs),
+            ))
+    return out
+
+
 def wire_bytes_report(
-    tracer: Tracer, planned_per_phase: Sequence[int]
+    tracer: Tracer,
+    planned_per_phase: Sequence[int],
+    planned_split: Optional[Sequence[Tuple[int, int]]] = None,
 ) -> WireBytesReport:
     """Compare a live trace's shipped bytes against the plan's pricing
     (``planned_per_phase`` — the runtime's per-phase wire-byte vector,
     ``DeftRuntime._wire_bytes_of_step``-shaped: one entry per cycle
-    phase under the installed layout's precision)."""
+    phase under the installed layout's precision).  Pass the runtime's
+    ``wire_bytes_split_per_phase`` as ``planned_split`` to also check
+    the per-link (primary, secondary) attribution (§14)."""
     period = len(planned_per_phase)
     measured, tags = wire_bytes_from_trace(tracer, period)
+    m_split = (
+        tuple(link_wire_bytes_from_trace(tracer, period))
+        if planned_split is not None else None
+    )
     return WireBytesReport(
         period=period,
         planned_per_phase=tuple(int(b) for b in planned_per_phase),
         measured_per_phase=tuple(measured),
         precisions=tuple(tags),
+        planned_split=(
+            tuple((int(p), int(s)) for p, s in planned_split)
+            if planned_split is not None else None
+        ),
+        measured_split=m_split,
     )

@@ -1,0 +1,144 @@
+"""Per-link ring-chain collectives (DESIGN.md §14).
+
+The planner assigns RS/AG items to a secondary link (``PhaseSpec.
+secondary``, ``AgItem.link``); these collectives make that assignment
+*executable*: a bucket routed to link ``l`` runs its reduce-scatter /
+all-gather as ``ppermute`` rounds over that link's device-order chain
+(``launch.mesh.ring_chain``, DeAR-style ring reordering) instead of the
+single mesh axis every collective otherwise shares.  Distinct chains map
+neighbor hops onto distinct physical cable sets on a multi-NIC fabric —
+the chain is visible in the jaxpr as the ``ppermute`` permutation, which
+is how tests verify the secondary traffic really left the primary ring.
+
+Bitwise parity contract
+-----------------------
+Training must be bit-identical whichever link a bucket rides (the
+Preserver gate reasons about schedule noise, not link noise).  A classic
+ring reduce-scatter accumulates partial sums in *chain* order, which is
+NOT the order XLA's ``psum``/``psum_scatter`` reduce in (ascending device
+order on this backend — asserted by tests/test_chain_parity.py), so its
+floats drift by rounding.  Instead:
+
+* ``chain_reduce_scatter`` ships **raw per-source chunks** over ``n - 1``
+  jump-``s`` permutations of the chain (round ``s`` sends each device's
+  chunk for the device ``s`` chain-hops ahead — one chunk per device per
+  round, the same total volume as a ring RS) and reduces locally in
+  canonical ascending-device order.  The deferred reduction is what buys
+  bitwise equality with ``psum_scatter``.
+* ``chain_all_gather`` is a genuine store-and-forward ring relay on the
+  chain permutation — pure data movement, trivially exact.
+* ``chain_all_reduce`` composes the two (zero-padding non-divisible
+  buffers; padding never mixes into real lanes), matching ``psum``.
+
+All three take the chain as a static tuple of *axis indices* (positions
+along the named mesh axis), so a distinct chain compiles to a distinct
+executable — exactly like any other ``PhaseSpec`` dimension.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chain_perm(chain: Sequence[int], jump: int = 1) -> Tuple[Tuple[int, int], ...]:
+    """The ``ppermute`` permutation moving data ``jump`` hops forward
+    along ``chain`` (source, destination) — ``jump=1`` is the ring."""
+    n = len(chain)
+    return tuple(
+        (chain[p], chain[(p + jump) % n]) for p in range(n)
+    )
+
+
+def _chain_tables(chain: Sequence[int]):
+    """(position-of-device, device-at-position) lookup arrays."""
+    n = len(chain)
+    pos_of = [0] * n
+    for p, d in enumerate(chain):
+        pos_of[d] = p
+    return jnp.asarray(pos_of), jnp.asarray(list(chain))
+
+
+def chain_reduce_scatter(x: jax.Array, axis: str,
+                         chain: Sequence[int]) -> jax.Array:
+    """Reduce-scatter ``x`` over ``axis`` along ``chain``; bitwise-equal
+    to ``jax.lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)``.
+
+    ``x`` is the full (replicated-shape) per-device buffer; the leading
+    dimension must divide by ``len(chain)``.  Device ``d`` (axis index)
+    returns the fully reduced ``d``-th chunk.  ``n - 1`` ppermute rounds,
+    one chunk per device per round; the reduction itself happens locally
+    in ascending device order after all raw chunks land."""
+    n = len(chain)
+    if n == 1:
+        return x
+    if x.shape[0] % n:
+        raise ValueError(
+            f"chain_reduce_scatter: leading dim {x.shape[0]} not divisible "
+            f"by chain length {n}"
+        )
+    chunk = x.shape[0] // n
+    xt = x.reshape((n, chunk) + x.shape[1:])
+    posv, chainv = _chain_tables(chain)
+    ax = jax.lax.axis_index(axis)
+    mypos = posv[ax]
+    contrib = jnp.zeros_like(xt)
+    contrib = contrib.at[ax].set(xt[ax])
+    for s in range(1, n):
+        dest = chainv[(mypos + s) % n]
+        sent = jax.lax.ppermute(xt[dest], axis, chain_perm(chain, jump=s))
+        src = chainv[(mypos - s) % n]
+        contrib = contrib.at[src].set(sent)
+    acc = contrib[0]
+    for d in range(1, n):
+        acc = acc + contrib[d]
+    return acc
+
+
+def chain_all_gather(x: jax.Array, axis: str,
+                     chain: Sequence[int]) -> jax.Array:
+    """All-gather per-device shards over ``axis`` along ``chain``;
+    bitwise-equal to ``jax.lax.all_gather(x, axis, axis=0, tiled=True)``.
+
+    Store-and-forward ring relay: each round every device forwards the
+    chunk it received last round along the chain ring — after ``n - 1``
+    rounds every shard visited every device.  Pure movement, no
+    arithmetic."""
+    n = len(chain)
+    if n == 1:
+        return x
+    posv, chainv = _chain_tables(chain)
+    ax = jax.lax.axis_index(axis)
+    mypos = posv[ax]
+    perm = chain_perm(chain, jump=1)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = out.at[ax].set(x)
+    cur = x
+    for s in range(1, n):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        out = out.at[chainv[(mypos - s) % n]].set(cur)
+    return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def chain_all_reduce(x: jax.Array, axis: str,
+                     chain: Sequence[int]) -> jax.Array:
+    """All-reduce over ``axis`` along ``chain``; bitwise-equal to
+    ``jax.lax.psum(x, axis)`` (ascending-device reduction order).
+
+    Composes reduce-scatter + all-gather the way a ring all-reduce does;
+    arbitrary shapes are flattened and zero-padded to a chain multiple
+    (padding lanes never mix with real lanes and are dropped after the
+    gather)."""
+    n = len(chain)
+    if n == 1:
+        return x
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shard = chain_reduce_scatter(flat, axis, chain)
+    full = chain_all_gather(shard, axis, chain)
+    if pad:
+        full = full[: x.size]
+    return full.reshape(x.shape)

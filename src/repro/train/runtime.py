@@ -80,6 +80,7 @@ from repro.train.bucketing import (
     repack_buffers,
     unflatten_buckets,
 )
+from repro.train.chains import chain_all_gather, chain_reduce_scatter
 from repro.train.streaming import lazy_param_tree
 from repro.train.steps import (
     TrainState,
@@ -223,6 +224,7 @@ def _deft_body_fused(
     remat: bool,
     loss_chunk: int = 0,
     unroll: bool = False,
+    secondary_chain: Optional[Tuple[int, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase over per-bucket flat buffers, inside shard_map.
 
@@ -230,7 +232,9 @@ def _deft_body_fused(
     the manual mapping; we work on index [0] and re-add it on return.
     Every tensor this body syncs is a whole bucket buffer — there is no
     per-leaf collective and no tree flatten/unflatten outside the update
-    branch.
+    branch.  With ``secondary_chain`` the secondary-assigned buckets run
+    their all-reduce over that device-order ring chain (DESIGN.md §14)
+    instead of the shared mesh axis.
     """
     n_dp = 1
     for a in dp_axes:
@@ -250,7 +254,8 @@ def _deft_body_fused(
 
     def sync(x: jax.Array, b: int) -> jax.Array:
         if phase.secondary[b]:
-            return _sync_secondary(x, dp_axes, dp_sizes)
+            return _sync_secondary(x, dp_axes, dp_sizes,
+                                   chain=secondary_chain)
         return _sync_primary(x, dp_axes)
 
     gen, new_fut, cur_synced = _route_and_sync(phase, g_flat, cur, fut, sync)
@@ -306,6 +311,7 @@ def _deft_body_flat(
     update_impl: Optional[str] = None,
     compute_dtype=None,
     master_dtype: Optional[str] = None,
+    secondary_chain: Optional[Tuple[int, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase with params and optimizer moments resident as
     per-bucket flat f32 buffers (DESIGN.md §8).
@@ -338,7 +344,8 @@ def _deft_body_flat(
 
     def sync(x: jax.Array, b: int) -> jax.Array:
         if phase.secondary[b]:
-            coll = lambda y: _sync_secondary(y, dp_axes, dp_sizes)
+            coll = lambda y: _sync_secondary(y, dp_axes, dp_sizes,
+                                             chain=secondary_chain)
         else:
             coll = lambda y: _sync_primary(y, dp_axes)
         return _wire_sync(x, wire[b], coll)
@@ -400,6 +407,8 @@ def _deft_body_flat_rs(
     master_dtype: Optional[str] = None,
     gather_reuse: Optional[Tuple[bool, ...]] = None,
     decoupled: bool = False,
+    secondary_chain: Optional[Tuple[int, ...]] = None,
+    ag_links: Optional[Tuple[bool, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One DeFT phase with params and optimizer moments SHARDED over
     ``shard_axis``: each device holds one contiguous 1/N span of every
@@ -432,6 +441,16 @@ def _deft_body_flat_rs(
     ``cur``/``fut`` stay full-length per-device accumulators: an
     unsynchronized generation holds contributions to EVERY span, which a
     later reduce-scatter folds into the owning shard.
+
+    With ``secondary_chain`` (DESIGN.md §14) the per-link plan becomes
+    executable: a bucket the scheduler assigned to the secondary link
+    (``phase.secondary[b]``) runs its shard-axis reduce-scatter and any
+    trailing all-gather over that device-order ring chain; a bucket whose
+    streamed param AG was placed on the secondary link
+    (``ag_links[b]``, from ``AgItem.link``) gathers over the chain too.
+    The outer pod all-reduce is untouched — chain collectives are
+    bitwise-equal to the single-axis ones they replace (train/chains.py),
+    so routing never perturbs training.
     """
     n_dp = 1
     for a in dp_axes:
@@ -454,8 +473,14 @@ def _deft_body_flat_rs(
     # decoded back to the forward dtype after the collective (§13).
     wire = _layout_wire(layout)
     fwd_dtype = compute_dtype if compute_dtype is not None else jnp.float32
+    chained = lambda b: (
+        secondary_chain is not None and ag_links is not None and ag_links[b]
+    )
     ag_ = lambda x: jax.lax.all_gather(x, shard_axis, axis=0, tiled=True)
-    gather_bucket = lambda b: _wire_gather(pbuf_sh[b], wire[b], ag_, fwd_dtype)
+    ag_chain = lambda x: chain_all_gather(x, shard_axis, secondary_chain)
+    gather_bucket = lambda b: _wire_gather(
+        pbuf_sh[b], wire[b], ag_chain if chained(b) else ag_, fwd_dtype
+    )
     cache = state.get("pgather")
     reuse = gather_reuse if (cache is not None and gather_reuse) \
         else (False,) * layout.n_buckets
@@ -524,18 +549,30 @@ def _deft_body_flat_rs(
     def rs_shard(x: jax.Array, b: int) -> jax.Array:
         """Shard-local half of the hierarchical sync: reduce-scatter over
         the fast shard axis, all-reduce across the outer axes — run at
-        bucket ``b``'s wire precision (§13)."""
+        bucket ``b``'s wire precision (§13).  A secondary-assigned bucket
+        rides the secondary link's ring chain when one is configured
+        (§14); the outer pod all-reduce stays on its own fabric either
+        way, so the chain never has to split a joint-axis reduction."""
+        on_chain = secondary_chain is not None and phase.secondary[b]
+
         def coll(v: jax.Array) -> jax.Array:
-            y = jax.lax.psum_scatter(
-                v, shard_axis, scatter_dimension=0, tiled=True
-            )
+            if on_chain:
+                y = chain_reduce_scatter(v, shard_axis, secondary_chain)
+            else:
+                y = jax.lax.psum_scatter(
+                    v, shard_axis, scatter_dimension=0, tiled=True
+                )
             if outer_axes:
                 y = jax.lax.psum(y, outer_axes)
             return y
 
         return _wire_sync(x, wire[b], coll)
 
-    def gather(y: jax.Array) -> jax.Array:
+    def gather(y: jax.Array, b: int) -> jax.Array:
+        """Trailing all-gather of a synced-and-stored bucket — on the
+        same link its reduce-scatter used."""
+        if secondary_chain is not None and phase.secondary[b]:
+            return chain_all_gather(y, shard_axis, secondary_chain)
         return jax.lax.all_gather(y, shard_axis, axis=0, tiled=True)
 
     def slice_shard(x: jax.Array, b: int) -> jax.Array:
@@ -558,7 +595,7 @@ def _deft_body_flat_rs(
                 gen_sh[b] = rs_shard(x, b)
                 # stored full only when this generation survives the
                 # phase (it becomes new_cur); a consumed one stays 1/N
-                gen.append(x if consumed_new else gather(gen_sh[b]))
+                gen.append(x if consumed_new else gather(gen_sh[b], b))
             else:
                 gen.append(x)
         new_fut = [jnp.zeros_like(f) for f in fut]
@@ -569,7 +606,7 @@ def _deft_body_flat_rs(
     for b, c in enumerate(cur):
         if phase.sync_cur[b]:
             cur_sh[b] = rs_shard(c, b)
-            cur_synced.append(c if consumed_cur else gather(cur_sh[b]))
+            cur_synced.append(c if consumed_cur else gather(cur_sh[b], b))
         else:
             cur_synced.append(c)
 
@@ -697,6 +734,7 @@ def deft_phase_step_flat(
     update_impl: Optional[str] = None,
     compute_dtype=None,
     master_dtype: Optional[str] = None,
+    secondary_chain: Optional[Tuple[int, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Flat-resident DeFT phase with explicit DP (params replicated)."""
     dp_axes = ("pod", "data") if multi_pod else ("data",)
@@ -717,6 +755,7 @@ def deft_phase_step_flat(
         update_impl=update_impl,
         compute_dtype=compute_dtype,
         master_dtype=master_dtype,
+        secondary_chain=secondary_chain,
     )
     return _shard_phase(body, _flat_state_specs, state, batch, mesh, dp_axes)
 
@@ -740,6 +779,8 @@ def deft_rs_phase_step_flat(
     master_dtype: Optional[str] = None,
     gather_reuse: Optional[Tuple[bool, ...]] = None,
     decoupled: bool = False,
+    secondary_chain: Optional[Tuple[int, ...]] = None,
+    ag_links: Optional[Tuple[bool, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Sharded flat-resident DeFT phase (the FSDP/RS engine): manual over
     every DP axis, param/moment buffers split 1/N over the innermost
@@ -780,6 +821,8 @@ def deft_rs_phase_step_flat(
         master_dtype=master_dtype,
         gather_reuse=gather_reuse,
         decoupled=decoupled,
+        secondary_chain=secondary_chain,
+        ag_links=ag_links,
     )
     specs_fn = lambda s, axes: _flat_rs_state_specs(s, axes, shard_axis)
     return _shard_phase(body, specs_fn, state, batch, mesh, dp_axes)
@@ -798,6 +841,7 @@ def deft_phase_step_fused(
     remat: bool = True,
     loss_chunk: int = 0,
     unroll: bool = False,
+    secondary_chain: Optional[Tuple[int, ...]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """Fused DeFT phase with explicit DP (params replicated over DP)."""
     dp_axes = ("pod", "data") if multi_pod else ("data",)
@@ -813,6 +857,7 @@ def deft_phase_step_fused(
         remat=remat,
         loss_chunk=loss_chunk,
         unroll=unroll,
+        secondary_chain=secondary_chain,
     )
     return _shard_phase(body, _fused_state_specs, state, batch, mesh, dp_axes)
 
@@ -965,8 +1010,21 @@ class RuntimeConfig:
     # master buffers; 'bf16sr' stores them bf16 and writes updates back
     # through seeded stochastic rounding (flat engines only)
     master_dtype: Optional[str] = None
+    # secondary-link device-order ring chain (DESIGN.md §14): a
+    # permutation of the 'data'-axis positions (launch.mesh.ring_chain).
+    # None (default) keeps every collective on the mesh axis — the
+    # pre-§14 behavior bit-for-bit.  When set, secondary-assigned
+    # RS/AG items execute as ppermute chains over this ordering.
+    secondary_chain: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
+        if self.secondary_chain is not None:
+            # normalize (lists hash-break the frozen config) before
+            # validate sees it
+            object.__setattr__(
+                self, "secondary_chain",
+                tuple(int(p) for p in self.secondary_chain),
+            )
         self.validate()
 
     @property
@@ -1017,6 +1075,30 @@ class RuntimeConfig:
                 "stochastic-rounding write-back rides the fused "
                 "bucket-update kernels (DESIGN.md §13)"
             )
+        if self.secondary_chain is not None:
+            chain = self.secondary_chain
+            if sorted(chain) != list(range(len(chain))):
+                raise ValueError(
+                    f"secondary_chain={chain} is not a permutation of "
+                    f"0..{len(chain) - 1} — build it with "
+                    f"launch.mesh.ring_chain"
+                )
+            if self.fsdp and self.flat_state is False:
+                raise ValueError(
+                    "secondary_chain needs a 'data'-axis sync to reroute; "
+                    "the tree-state RS engine is manual over 'pod' only "
+                    "(DESIGN.md §14) — use the flat engines"
+                )
+            if self.multi_pod and not self.sharded_flat:
+                raise ValueError(
+                    "secondary_chain on a multi-pod mesh needs the "
+                    "sharded flat engine: its shard-axis reduce-scatter "
+                    "is separate from the pod all-reduce, so the chain "
+                    "swaps in bitwise-exactly.  The replicated engines "
+                    "sync with ONE joint ('pod','data') psum whose "
+                    "reduction order a per-axis chain cannot reproduce "
+                    "(DESIGN.md §14)"
+                )
 
     @property
     def resolved_master(self) -> str:
@@ -1065,6 +1147,7 @@ class DeftRuntime:
         *,
         config: Optional[RuntimeConfig] = None,
         tracer: Optional[Tracer] = None,
+        ag_plan: Any = None,
         multi_pod: Any = _UNSET,
         fsdp: Any = _UNSET,
         remat: Any = _UNSET,
@@ -1154,6 +1237,19 @@ class DeftRuntime:
         self._treedef = None
         self._segments: Optional[BucketSegments] = None
         shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        # secondary-link ring chain (DESIGN.md §14): a permutation of the
+        # 'data'-axis positions; the AG-link plan says which streamed
+        # param gathers ride it (gradient syncs follow phase.secondary)
+        if config.secondary_chain is not None:
+            n_data = int(shape.get("data", 0))
+            if len(config.secondary_chain) != n_data:
+                raise ValueError(
+                    f"secondary_chain covers "
+                    f"{len(config.secondary_chain)} positions but the "
+                    f"mesh 'data' axis is {n_data}-way — build it with "
+                    f"launch.mesh.ring_chain({n_data}, link)"
+                )
+        self._ag_plan = ag_plan
         if self.flat_state:
             params_abs = jax.eval_shape(
                 lambda: init_params(jax.random.PRNGKey(0), cfg)
@@ -1259,12 +1355,17 @@ class DeftRuntime:
                     f"{layout.shard_sizes[b]} is not a 128-lane multiple"
                 )
 
-    def _wire_bytes_of_phase(self, phase: PhaseSpec) -> int:
-        """Planned wire bytes of one phase's scheduled gradient syncs
-        under the installed layout's precision policy (int8 counts the
-        quantized values plus 4 bytes per 128-lane row of scales)."""
+    def _wire_bytes_split_of_phase(
+        self, phase: PhaseSpec
+    ) -> Tuple[int, int]:
+        """Planned (primary, secondary) wire bytes of one phase's
+        scheduled gradient syncs under the installed layout's precision
+        policy (int8 counts the quantized values plus 4 bytes per
+        128-lane row of scales).  The per-link split follows
+        ``phase.secondary`` — what the obs layer's per-link attribution
+        audits each link's measured traffic against (DESIGN.md §14)."""
         wire = _layout_wire(self.layout)
-        total = 0
+        primary = secondary = 0
         for b in range(len(phase.route_new)):
             synced = (
                 (phase.route_new[b] == "sync" and phase.rotate)
@@ -1274,10 +1375,18 @@ class DeftRuntime:
                 continue
             n = self.layout.buf_sizes[b]
             if wire[b] == "int8":
-                total += n + 4 * (n // 128)
+                bts = n + 4 * (n // 128)
             else:
-                total += n * WIRE_BYTES[wire[b]]
-        return total
+                bts = n * WIRE_BYTES[wire[b]]
+            if phase.secondary[b]:
+                secondary += bts
+            else:
+                primary += bts
+        return primary, secondary
+
+    def _wire_bytes_of_phase(self, phase: PhaseSpec) -> int:
+        """Total planned wire bytes of one phase (both links)."""
+        return sum(self._wire_bytes_split_of_phase(phase))
 
     # ---- schedule installation ------------------------------------------
     @staticmethod
@@ -1308,17 +1417,48 @@ class DeftRuntime:
             masks.append(((not fresh),) * nb)
         return masks
 
+    def _ag_link_masks(
+        self, schedule: DeftSchedule
+    ) -> List[Optional[Tuple[bool, ...]]]:
+        """Per cycle position, the per-bucket secondary-AG mask of the
+        sharded flat engine (DESIGN.md §14): True where the streamed
+        param all-gather was planned onto the secondary link
+        (``AgItem.link >= 1``), so the executable routes that bucket's
+        gather over the configured ring chain.  All-None without an AG
+        plan or a chain — the pre-§14 executables, byte-for-byte."""
+        if (self._ag_plan is None
+                or self.config.secondary_chain is None
+                or not (self.fsdp and self.flat_state)):
+            return [None] * schedule.period
+        per_phase: Dict[int, Dict[int, bool]] = {}
+        for item in self._ag_plan.items:
+            d = per_phase.setdefault(item.phase, {})
+            d[item.bucket] = d.get(item.bucket, False) or item.link >= 1
+        masks: List[Optional[Tuple[bool, ...]]] = []
+        for t, ph in enumerate(schedule.phases):
+            nb = len(ph.route_new)
+            hot = per_phase.get(t)
+            if not hot or not any(hot.values()):
+                masks.append(None)
+                continue
+            masks.append(tuple(
+                bool(hot.get(b, False)) for b in range(nb)
+            ))
+        return masks
+
     def _schedule_keys(
         self,
         schedule: DeftSchedule,
         layout: Optional[BucketLayout] = None,
     ) -> List[Tuple]:
         """Entry-cache keys, one per cycle position: the executable
-        identity is (layout, PhaseSpec, gather-skip mask)."""
+        identity is (layout, PhaseSpec, gather-skip mask, AG-link
+        mask)."""
         layout = layout or self.layout
         masks = self._gather_reuse_masks(schedule)
+        ag_masks = self._ag_link_masks(schedule)
         return [
-            (layout, ph, masks[t])
+            (layout, ph, masks[t], ag_masks[t])
             for t, ph in enumerate(schedule.phases)
         ]
 
@@ -1328,6 +1468,7 @@ class DeftRuntime:
         layout: BucketLayout,
         segments: Optional[BucketSegments],
         gather_reuse: Optional[Tuple[bool, ...]],
+        ag_links: Optional[Tuple[bool, ...]] = None,
     ) -> Callable:
         if self.flat_state:
             step_impl = (
@@ -1363,6 +1504,13 @@ class DeftRuntime:
         if self.flat_state and self.fsdp:
             kw["gather_reuse"] = gather_reuse
             kw["decoupled"] = self.decoupled
+        chain = self.config.secondary_chain
+        if chain is not None:
+            # validate() refused the one engine that cannot take it (the
+            # tree-state RS path), so every reachable step_impl accepts it
+            kw["secondary_chain"] = chain
+            if self.flat_state and self.fsdp:
+                kw["ag_links"] = ag_links
         if not self.fsdp:
             kw["multi_pod"] = self.multi_pod
         return jax.jit(
@@ -1387,9 +1535,10 @@ class DeftRuntime:
             if key in self._entries:
                 reused += 1
                 continue
-            _, phase, mask = key
+            _, phase, mask, ag_mask = key
             entry = _PhaseEntry(
-                phase, self._make_jitted(phase, layout, segments, mask)
+                phase,
+                self._make_jitted(phase, layout, segments, mask, ag_mask),
             )
             self._entries[key] = entry
             fresh.append(entry)
@@ -1424,9 +1573,13 @@ class DeftRuntime:
         )
         # planned wire bytes per cycle position under the installed
         # layout's precision policy (§13) — the obs layer's measured-vs-
-        # planned bytes attribution reads these off the spans
+        # planned bytes attribution reads these off the spans; split
+        # per link (§14) so each link's traffic audits separately
+        self._wire_bytes_split_of_step: Tuple[Tuple[int, int], ...] = tuple(
+            self._wire_bytes_split_of_phase(ph) for ph in schedule.phases
+        )
         self._wire_bytes_of_step: Tuple[int, ...] = tuple(
-            self._wire_bytes_of_phase(ph) for ph in schedule.phases
+            p + s for p, s in self._wire_bytes_split_of_step
         )
 
     # ---- state ----------------------------------------------------------
@@ -1440,6 +1593,13 @@ class DeftRuntime:
         layout's precision (what ``obs.wire_bytes_report`` audits the
         trace against)."""
         return self._wire_bytes_of_step
+
+    @property
+    def wire_bytes_split_per_phase(self) -> Tuple[Tuple[int, int], ...]:
+        """Planned (primary, secondary) wire bytes per cycle phase (§14)
+        — the per-link audit vector ``obs.wire_bytes_report`` takes as
+        ``planned_split``."""
+        return self._wire_bytes_split_of_step
 
     @property
     def n_unique_phases(self) -> int:
@@ -1905,6 +2065,7 @@ class DeftRuntime:
         *,
         background: bool = False,
         layout: Optional[BucketLayout] = None,
+        ag_plan: Any = _UNSET,
         retries: int = 2,
         retry_backoff_s: float = 0.05,
     ) -> Dict[str, Any]:
@@ -1943,6 +2104,13 @@ class DeftRuntime:
         carries across untouched because every buffer keeps its shape
         and sharding.
         """
+        # a replanned AG stream (DESIGN.md §14) re-derives the per-bucket
+        # secondary-AG masks for the staged executables; _UNSET keeps the
+        # current plan.  Takes effect immediately for key derivation —
+        # the installed schedule's entries were resolved at install and
+        # never re-keyed, so running dispatch is unaffected.
+        if ag_plan is not _UNSET:
+            self._ag_plan = ag_plan
         new_layout: Optional[BucketLayout] = None
         transition: Optional[LayoutTransition] = None
         new_segments: Optional[BucketSegments] = None
@@ -2136,6 +2304,7 @@ class DeftRuntime:
             self.layout if layout is None else layout,
             new_mesh,
             config=config,
+            ag_plan=self._ag_plan,
             # the sibling inherits the event stream by default: one trace
             # spans an elastic migration end to end
             tracer=(tracer if tracer is not None
@@ -2215,11 +2384,13 @@ class DeftRuntime:
                 self.layout.precision.describe()
                 if self.layout.precision is not None else "f32"
             )
+            wb_p, wb_s = self._wire_bytes_split_of_step[off]
             self.tracer.add(
                 "collective-group", f"collectives@{off}", t0, t1,
                 step=i, phase=off,
                 primary=coll["primary"], secondary=coll["secondary"],
                 wire_bytes=self._wire_bytes_of_step[off],
+                wire_bytes_primary=wb_p, wire_bytes_secondary=wb_s,
                 precision=wire,
             )
             if spec.do_update:

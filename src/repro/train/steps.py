@@ -189,12 +189,23 @@ def _sync_primary(x: jax.Array, dp_axes: Tuple[str, ...]) -> jax.Array:
 
 
 def _sync_secondary(
-    x: jax.Array, dp_axes: Tuple[str, ...], dp_sizes: Dict[str, int]
+    x: jax.Array, dp_axes: Tuple[str, ...], dp_sizes: Dict[str, int],
+    chain: Optional[Tuple[int, ...]] = None,
 ) -> jax.Array:
-    """Hierarchical slow-link sync: reduce-scatter over the innermost DP
-    axis, all-reduce over the outer (pod/DCN) axes, then all-gather.  Falls
-    back to a plain psum when the leading dim does not tile, or when the
-    installed jaxlib cannot partition tiled collectives inside a
+    """Slow-link sync for secondary-assigned buckets.
+
+    With ``chain`` (the secondary link's device-order permutation from
+    ``launch.mesh.ring_chain``) and a single DP axis, the all-reduce runs
+    as ppermute rounds along that chain (``train.chains``) — genuinely
+    distinct wires from the primary axis, bitwise-equal to ``psum``.
+    Multi-axis DP keeps the chain off: splitting the joint psum into
+    per-axis stages changes the float reduction grouping, and bitwise
+    parity with the single-collective path is the contract.
+
+    Without a chain: hierarchical reduce-scatter over the innermost DP
+    axis, all-reduce over the outer (pod/DCN) axes, then all-gather.
+    Falls back to a plain psum when the leading dim does not tile, or
+    when the installed jaxlib cannot partition tiled collectives inside a
     partial-manual region (see jax_compat.HIERARCHICAL_COLLECTIVES_OK —
     the all-reduce is numerically identical, only the link shaping is
     lost)."""
@@ -202,6 +213,10 @@ def _sync_secondary(
 
     fast = dp_axes[-1]
     size = dp_sizes[fast]
+    if chain is not None and len(dp_axes) == 1 and len(chain) == size:
+        from repro.train.chains import chain_all_reduce
+
+        return chain_all_reduce(x, fast, chain)
     if (HIERARCHICAL_COLLECTIVES_OK and x.ndim >= 1
             and x.shape[0] % size == 0 and x.shape[0] >= size):
         y = jax.lax.psum_scatter(x, fast, scatter_dimension=0, tiled=True)

@@ -16,6 +16,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.adapt import (
     AdaptConfig,
@@ -143,6 +144,64 @@ def test_fit_scales_faster_link_is_not_misread_as_drift():
     a, b, _ = fit_scales(times, scfg, schedule.period, measured)
     assert a == pytest.approx(1.0, rel=0.15)
     assert 0.3 <= b <= 1.1
+
+
+def test_per_link_fit_recovers_secondary_only_degradation():
+    """A secondary-only slowdown (slow host/DCN path congests, primary
+    fabric holds) is exactly what the 2-D fit cannot express — its
+    comm_scale moves both links.  The staged per-link fit (§14) must
+    recover the multiplier on the secondary link and hand back
+    LinkModels whose forward simulation matches the measurements at
+    least as well as the 2-D fit alone."""
+    from repro.core.links import LinkModel
+
+    times = _toy_times()
+    schedule, _, scfg, _ = feedback_solve(times, WALK)
+    plans = schedule_plans(times, scfg, horizon=fit_horizon(schedule.period))
+    true_s = 3.0
+    base = scfg.models()
+    degraded = {
+        lid: (m if lid == 0 else LinkModel(m.latency, m.inv_bw * true_s))
+        for lid, m in base.items()
+    }
+    measured = steady_phase_durations(
+        plans, times, schedule.period,
+        mu=scfg.mu, heterogeneous=scfg.heterogeneous, link_models=degraded,
+    )
+    prof2d = calibrate(times, scfg, schedule.period, measured)
+    prof = calibrate(times, scfg, schedule.period, measured, per_link=True)
+    assert prof.link_models is not None
+    # the degradation lands on the secondary link, not the joint scale:
+    # comm_scale * sec_scale carries the true multiplier between them,
+    # with the per-link stage providing the secondary-specific part
+    assert prof.sec_scale > 1.2
+    assert prof.comm_scale * prof.sec_scale == pytest.approx(
+        true_s, rel=0.35
+    )
+    assert prof.comp_scale == pytest.approx(1.0, rel=0.15)
+    # per-link forward model explains the data no worse than 2-D alone
+    assert prof.residual <= prof2d.residual + 1e-12
+    assert prof.drift > 0.2
+    # fitted models are consumable: secondary inv_bw grew, primary fixed
+    assert prof.link_models[0].inv_bw == pytest.approx(base[0].inv_bw)
+    assert prof.link_models[1].inv_bw > base[1].inv_bw
+
+
+def test_per_link_fit_noop_when_homogeneous_or_clean():
+    times = _toy_times()
+    schedule, _, scfg, _ = feedback_solve(times, WALK)
+    plans = schedule_plans(times, scfg, horizon=fit_horizon(schedule.period))
+    measured = steady_phase_durations(
+        plans, times, schedule.period,
+        mu=scfg.mu, heterogeneous=scfg.heterogeneous,
+    )
+    # clean measurements: the regularized 1-D stage stays at 1.0
+    prof = calibrate(times, scfg, schedule.period, measured, per_link=True)
+    assert prof.sec_scale == pytest.approx(1.0, rel=0.1)
+    # homogeneous config: the stage is skipped entirely
+    homo = dataclasses.replace(scfg, heterogeneous=False)
+    prof_h = calibrate(times, homo, schedule.period, measured, per_link=True)
+    assert prof_h.sec_scale == 1.0 and prof_h.link_models is None
 
 
 def test_calibrate_rebases_times_and_hardware_model():
@@ -289,6 +348,90 @@ def _leaf_model_setup(pe=20_000, cr=1.8):
     bo, nb = model.partition(pe)
     model = model.with_coverage_rate(bo, nb, cr)
     return model, bo, nb, model.bucket_times(bo, nb)
+
+
+def _synthetic_leaf_model(fwd, elems, comm_scale=1.0):
+    from repro.train.bucketing import LeafTimeModel
+
+    return LeafTimeModel(
+        order=tuple(range(len(fwd))),
+        fwd_s=tuple(fwd),
+        elems=tuple(int(e) for e in elems),
+        hw=HardwareModel(dp_degree=4),
+        comm_scale=comm_scale,
+    )
+
+
+leaf_atoms = st.integers(min_value=2, max_value=24).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.floats(1e-5, 5e-3), min_size=n, max_size=n),
+        st.lists(st.integers(1_000, 2_000_000), min_size=n, max_size=n),
+    )
+)
+
+
+@settings(max_examples=40)
+@given(leaf_atoms, st.floats(0.3, 3.0), st.floats(0.3, 3.0))
+def test_dp_partition_no_worse_than_greedy_on_surrogate(atoms, a, b):
+    """The boundary DP is exact over ALL contiguous partitions, so under
+    its own objective it can never lose to the greedy size-targeted fill
+    — at any calibrated (comp, comm) scale and any grid factor."""
+    from repro.adapt import dp_partition, exposed_makespan
+
+    fwd, elems = atoms
+    model = _synthetic_leaf_model(fwd, elems)
+    dp_bo, dp_nb = dp_partition(model, comp_scale=a, comm_scale=b)
+    assert dp_nb >= 1 and len(dp_bo) == len(fwd)
+    dp_cost = exposed_makespan(model, dp_bo, dp_nb,
+                               comp_scale=a, comm_scale=b)
+    total = sum(elems)
+    for frac in (0.05, 0.25, 1.0):
+        g_bo, g_nb = model.partition(max(int(total * frac), 1))
+        g_cost = exposed_makespan(model, g_bo, g_nb,
+                                  comp_scale=a, comm_scale=b)
+        assert dp_cost <= g_cost + 1e-12
+
+
+def test_dp_partition_shape_and_bounded_variant():
+    """DP output is a valid ascending contiguous model-order partition;
+    the ``max_buckets`` layered variant respects its cap and can only be
+    costlier than the unbounded optimum."""
+    from repro.adapt import dp_partition, exposed_makespan
+
+    model, bo, nb, _ = _leaf_model_setup()
+    dp_bo, dp_nb = dp_partition(model)
+    # every leaf assigned; buckets ascending+contiguous along model order
+    seq = [dp_bo[i] for i in model.order]
+    assert seq[0] == 0 and seq[-1] == dp_nb - 1
+    assert all(s2 - s1 in (0, 1) for s1, s2 in zip(seq, seq[1:]))
+    free = exposed_makespan(model, dp_bo, dp_nb)
+    for cap in (1, 2, max(dp_nb - 1, 1)):
+        c_bo, c_nb = dp_partition(model, max_buckets=cap)
+        assert 1 <= c_nb <= cap
+        assert exposed_makespan(model, c_bo, c_nb) >= free - 1e-12
+    # empty tree degenerates cleanly
+    empty = _synthetic_leaf_model((), ())
+    assert dp_partition(empty) == ((), 0)
+
+
+def test_repartitioner_candidate_superset_includes_dp():
+    """The candidate grid is {current} ∪ factor grid ∪ DP; ``use_dp``
+    gates the DP member and the DP candidate reprices with the
+    cumulative drift scales."""
+    from repro.adapt import RepartitionConfig, Repartitioner
+
+    model, bo, nb, _ = _leaf_model_setup()
+    rp = Repartitioner(model, RepartitionConfig(base_partition_elems=20_000))
+    cands = rp.candidates(bo, nb, comm_scale=3.0)
+    tags = [c.tag for c in cands]
+    assert tags[0] == "current"
+    assert "dp" in tags
+    dp_cand = next(c for c in cands if c.tag == "dp")
+    assert dp_cand.n_buckets >= 1
+    assert rp.times_for(dp_cand).n == dp_cand.n_buckets
+    off = Repartitioner(model, RepartitionConfig(
+        base_partition_elems=20_000, use_dp=False))
+    assert "dp" not in [c.tag for c in off.candidates(bo, nb)]
 
 
 def test_feedback_solve_candidates_gate_and_hysteresis():

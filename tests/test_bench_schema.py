@@ -140,6 +140,33 @@ def test_bench_precision_entry_floor():
                 < pc["wire_bytes_per_cycle_f32"])
 
 
+def test_bench_two_link_entry_floor():
+    """The checked-in two_link entry holds the §14 acceptance
+    properties: pricing the secondary link can only add communication
+    capacity, so the two-link solve's simulated coverage is at least
+    the single-link solve's and its iteration time no worse; the forced
+    maximal routing actually put traffic on the secondary link; and the
+    traced per-link wire bytes match the planned primary/secondary
+    split exactly.  steps/s is reported but not floored — on a CPU host
+    the chain's n-1 ppermute hops are real memcpys while XLA's fused
+    collectives are one, so the chain only wins on real extra wire."""
+    path = os.path.join(_ROOT, "BENCH_runtime.json")
+    tl = json.load(open(path))["two_link"]
+    sim = tl["sim"]
+    assert sim["coverage_two_link"] >= sim["coverage_single_link"] - 1e-9, sim
+    assert (sim["iteration_time_two_link"]
+            <= sim["iteration_time_single_link"] + 1e-12), sim
+    assert tl["engine"]["secondary_chain"] == [0, 2, 1, 3]
+    assert tl["schedule"]["secondary_slots_forced"] > 0
+    # forced maximal routing puts every synced bucket AND every streamed
+    # AG item on the secondary link, so primary wire bytes may be zero
+    assert tl["wire_bytes_secondary_per_cycle"] > 0
+    assert tl["wire_bytes_primary_per_cycle"] >= 0
+    assert tl["wire_split_max_abs_error"] == 0.0
+    assert tl["wire_split_ok"] is True
+    assert tl["steps_per_s_ratio_chain_vs_single_axis"] > 0.0
+
+
 def test_bench_obs_entry_floor():
     """The checked-in obs entry holds the §11 acceptance properties:
     span-closure reproduces the simulator, the undisturbed attribution

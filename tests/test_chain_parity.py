@@ -1,0 +1,321 @@
+"""Per-link ring-chain execution (DESIGN.md §14).
+
+Covers the whole stack of the heterogeneous-link runtime:
+
+* ``launch.mesh.ring_chain`` — link 0 is the natural order, link l > 0
+  a stride interleave that is a genuine permutation (distinct wires);
+* ``train.chains.chain_perm`` — the ppermute permutations a chain
+  compiles to;
+* ``RuntimeConfig.secondary_chain`` — construction-time validation
+  (permutation check, engine compatibility, mesh-width agreement);
+* the 4-device subprocess: chain reduce-scatter / all-gather /
+  all-reduce are BITWISE-equal to the single-axis collectives they
+  replace (including an int8-wire secondary-synced bucket and
+  chain-routed streamed AGs on the sharded flat engine), and a jaxpr
+  census proves the secondary traffic runs on the chain's permutations
+  — i.e. it genuinely left the primary ring's device order.
+
+The bitwise contract is the point: the Preserver gate reasons about
+schedule noise, not link noise, so training must be bit-identical
+whichever link a bucket rides.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.core.links import LinkModel, effective_mu
+from repro.launch.mesh import link_chains, ring_chain
+from repro.train.chains import chain_perm
+from repro.train.runtime import RuntimeConfig
+
+
+# ---------------------------------------------------------------------------
+# chains: topology-side properties
+# ---------------------------------------------------------------------------
+def test_ring_chain_link0_is_natural_order():
+    for n in (1, 2, 3, 4, 8, 16):
+        assert ring_chain(n, 0) == tuple(range(n))
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 8, 16, 17])
+@pytest.mark.parametrize("link", [0, 1, 2, 3])
+def test_ring_chain_is_permutation(n, link):
+    chain = ring_chain(n, link)
+    assert sorted(chain) == list(range(n))
+
+
+def test_ring_chain_secondary_is_distinct():
+    """Link 1 must use genuinely different neighbor pairs than link 0 —
+    same ring order would contend for the same wires."""
+    assert ring_chain(4, 1) == (0, 2, 1, 3)
+    for n in (3, 4, 8, 16):
+        natural = set(chain_perm(ring_chain(n, 0)))
+        second = set(chain_perm(ring_chain(n, 1)))
+        assert natural != second, n
+
+
+def test_link_chains_covers_all_links():
+    chains = link_chains(8, n_links=3)
+    assert set(chains) == {0, 1, 2}
+    assert chains[0] == tuple(range(8))
+    assert all(sorted(c) == list(range(8)) for c in chains.values())
+
+
+def test_chain_perm_pairs():
+    assert chain_perm((0, 2, 1, 3), jump=1) == (
+        (0, 2), (2, 1), (1, 3), (3, 0)
+    )
+    # jump-s rounds of the RS: every device both sends and receives once
+    for s in (1, 2, 3):
+        perm = chain_perm((0, 2, 1, 3), jump=s)
+        assert sorted(p[0] for p in perm) == [0, 1, 2, 3]
+        assert sorted(p[1] for p in perm) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# link models (pricing side)
+# ---------------------------------------------------------------------------
+def test_link_model_pricing_identities():
+    lm = LinkModel(latency=0.002, inv_bw=1.65)
+    assert lm.time(0.0) == 0.0              # nothing to send, no latency
+    assert lm.time(0.1) == 0.002 + 0.1 * 1.65
+    pair = LinkModel.pair_from_mu(1.65)
+    # legacy scalar-mu pricing, byte-identical: no latency term
+    assert pair[0].time(0.25) == 0.25
+    assert pair[1].time(0.25) == 0.25 * 1.65
+    assert effective_mu(pair) == 1.65
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig validation
+# ---------------------------------------------------------------------------
+def test_config_chain_normalizes_and_hashes():
+    c = RuntimeConfig(secondary_chain=[0, 2, 1, 3])
+    assert c.secondary_chain == (0, 2, 1, 3)
+    hash(c)  # frozen + tuple: usable as a cache-key component
+
+
+def test_config_chain_must_be_permutation():
+    with pytest.raises(ValueError, match="permutation"):
+        RuntimeConfig(secondary_chain=(0, 2, 2, 3))
+    with pytest.raises(ValueError, match="permutation"):
+        RuntimeConfig(secondary_chain=(1, 2, 3, 4))
+
+
+def test_config_chain_refuses_tree_state_rs_engine():
+    with pytest.raises(ValueError, match="tree-state"):
+        RuntimeConfig(fsdp=True, flat_state=False,
+                      secondary_chain=(0, 2, 1, 3))
+
+
+def test_config_chain_refuses_replicated_multi_pod():
+    # the replicated engines sync with ONE joint ('pod','data') psum —
+    # a per-axis chain cannot reproduce that reduction order bitwise
+    with pytest.raises(ValueError, match="multi-pod"):
+        RuntimeConfig(multi_pod=True, secondary_chain=(0, 2, 1, 3))
+    # the sharded flat engine's shard-axis RS is separate from the pod
+    # all-reduce, so the chain composes there
+    c = RuntimeConfig(multi_pod=True, fsdp=True,
+                      secondary_chain=(0, 2, 1, 3))
+    assert c.sharded_flat
+
+
+def test_runtime_refuses_chain_mesh_mismatch(single_mesh):
+    """A chain built for the wrong data-axis width is refused at
+    construction, not deep inside shard_map."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.optim.optimizers import adamw
+    from repro.train import DeftRuntime, init_train_state
+    from repro.train.bucketing import build_bucket_layout
+    from test_train_steps import _schedule_for
+
+    cfg = reduce_for_smoke(get_config("qwen3-4b"))
+    opt = adamw(1e-3)
+    probe = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    bucket_of, nb, sched = _schedule_for(cfg, probe["params"], cr=0.5)
+    layout = build_bucket_layout(probe["params"], bucket_of, nb)
+    with pytest.raises(ValueError, match="data' axis"):
+        DeftRuntime(
+            cfg, opt, sched, layout, single_mesh,
+            config=RuntimeConfig(secondary_chain=ring_chain(4, 1)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# 4-device bitwise parity + jaxpr census (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+_SCRIPT = r"""
+import dataclasses
+import functools
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.bucket import BucketTimes
+from repro.core.deft import Planner, PlanRequest
+from repro.core.precision import PrecisionPolicy
+from repro.core.preserver import WalkParams
+from repro.core.profiler import HardwareModel
+from repro.data.pipeline import make_batch
+from repro.launch.mesh import ring_chain
+from repro.optim.optimizers import adamw
+from repro.train import (DeftRuntime, RuntimeConfig, assign_buckets,
+                         build_bucket_layout, init_train_state,
+                         leaf_bucket_times)
+from repro.train.chains import (chain_all_gather, chain_all_reduce,
+                                chain_perm, chain_reduce_scatter)
+
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+CHAIN = ring_chain(4, 1)
+assert CHAIN == (0, 2, 1, 3)
+
+# ---- part A: raw chain collectives are bitwise-equal -----------------------
+def body_eq(x):
+    # device-distinct values: scale by (axis index + 1)
+    v = x * (jax.lax.axis_index("data") + 1.0)
+    rs_c = chain_reduce_scatter(v, "data", CHAIN)
+    rs_x = jax.lax.psum_scatter(v, "data", scatter_dimension=0, tiled=True)
+    ag_c = chain_all_gather(rs_x, "data", CHAIN)
+    ag_x = jax.lax.all_gather(rs_x, "data", axis=0, tiled=True)
+    w = v[:1021]  # non-divisible size exercises the AR padding
+    ar_c = chain_all_reduce(w, "data", CHAIN)
+    ar_x = jax.lax.psum(w, "data")
+    flags = jnp.stack([
+        jnp.all(rs_c == rs_x), jnp.all(ag_c == ag_x), jnp.all(ar_c == ar_x),
+    ]).astype(jnp.int32)
+    return jax.lax.psum(flags, "data")
+
+X = jax.random.normal(jax.random.PRNGKey(7), (4096,), jnp.float32)
+with jax.set_mesh(mesh):
+    flags = jax.jit(jax.shard_map(
+        body_eq, mesh=mesh, in_specs=P(), out_specs=P(),
+        axis_names={"data"}, check_vma=False,
+    ))(X)
+assert [int(f) for f in flags] == [4, 4, 4], flags
+print("raw chain collectives bitwise-equal")
+
+# ---- part B: runtime parity on the sharded flat engine ---------------------
+cfg = reduce_for_smoke(get_config("qwen3-4b"))
+opt = adamw(1e-3)
+key = jax.random.PRNGKey(0)
+probe = init_train_state(key, cfg, opt)
+bucket_of, nb = assign_buckets(probe["params"], cfg, partition_elems=150_000)
+B, S = 8, 32
+times = leaf_bucket_times(probe["params"], cfg, bucket_of, nb,
+                          HardwareModel(dp_degree=4), S, 2)
+scale = 1.8 * (times.fwd_total + times.bwd_total) / times.comm_total
+times = BucketTimes(times.fwd, times.bwd, tuple(c * scale for c in times.comm))
+WALK = WalkParams(s0=4.0, eta=0.01, mu=1.0, sigma=40.0, batch=256)
+res = Planner().plan(PlanRequest(times=times, walk=WALK, decoupled=True))
+sched = res.schedule
+
+# force every synced bucket onto the secondary link and every streamed AG
+# onto it too — maximal chain routing, deterministic regardless of what
+# the knapsack picked for this profile (routing must not change values)
+phases = []
+for ph in sched.phases:
+    sec = tuple(
+        (ph.route_new[b] == "sync" and ph.rotate) or ph.sync_cur[b]
+        for b in range(len(ph.route_new))
+    )
+    phases.append(dataclasses.replace(ph, secondary=sec))
+sched = dataclasses.replace(sched, phases=tuple(phases))
+assert any(any(ph.secondary) for ph in sched.phases)
+ag_plan = dataclasses.replace(
+    res.ag_plan,
+    items=tuple(dataclasses.replace(i, link=1) for i in res.ag_plan.items),
+)
+assert ag_plan.items, "decoupled plan must stream gathers"
+
+lay = build_bucket_layout(probe["params"], bucket_of, nb, shard_count=4)
+# int8 wire on bucket 0: the quantize edge must compose with the chain
+pol = PrecisionPolicy(wire=("int8",) + ("f32",) * (nb - 1))
+lay = lay.with_precision(pol)
+sec0 = any(ph.secondary[0] for ph in sched.phases)
+assert sec0, "bucket 0 must be secondary-synced somewhere in the cycle"
+
+base = RuntimeConfig(fsdp=True, decoupled=True)
+rt_p = DeftRuntime(cfg, opt, sched, lay, mesh, config=base)
+rt_c = DeftRuntime(cfg, opt, sched, lay, mesh,
+                   config=base.replace(secondary_chain=CHAIN),
+                   ag_plan=ag_plan)
+sp = rt_p.init_state(key)
+sc = rt_c.init_state(key)
+with jax.set_mesh(mesh):
+    for i in range(sched.period + 1):
+        b = make_batch(cfg, 0, i, B, S)
+        sp, mp = rt_p.step(i, sp, b)
+        sc, mc = rt_c.step(i, sc, b)
+        assert float(mp["loss"]) == float(mc["loss"]), (
+            i, float(mp["loss"]), float(mc["loss"]))
+    for a, c in zip(sp["pbuf"], sc["pbuf"]):
+        assert bool(jnp.array_equal(a, c)), "pbuf diverged across links"
+print("runtime chain parity bitwise (losses + pbuf), int8 bucket included")
+
+# ---- part C: jaxpr census — the chain is really on the wire ----------------
+def subjaxprs(p):
+    if hasattr(p, "eqns"):          # a raw Jaxpr
+        return [p]
+    if hasattr(p, "jaxpr"):         # a ClosedJaxpr
+        return [p.jaxpr]
+    if isinstance(p, (list, tuple)):
+        return [j for x in p for j in subjaxprs(x)]
+    return []
+
+def perms_of(jaxpr, out):
+    for eq in jaxpr.eqns:
+        if eq.primitive.name == "ppermute":
+            out.append(tuple(map(tuple, eq.params["perm"])))
+        for p in eq.params.values():
+            for sub in subjaxprs(p):
+                perms_of(sub, out)
+    return out
+
+off = next(t for t, ph in enumerate(sched.phases) if any(ph.secondary))
+key_c = rt_c._schedule_keys(sched)[off]
+jitted = rt_c._entries[key_c].jitted
+b0 = make_batch(cfg, 0, 0, B, S)
+with jax.set_mesh(mesh):
+    jaxpr = jax.make_jaxpr(jitted)(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sc), b0).jaxpr
+perms = perms_of(jaxpr, [])
+assert perms, "chain runtime emitted no ppermute"
+allowed = {chain_perm(CHAIN, jump=s) for s in (1, 2, 3)}
+natural = {chain_perm(tuple(range(4)), jump=s) for s in (1, 2, 3)}
+got = set(perms)
+assert got <= allowed, f"unexpected perms: {got - allowed}"
+assert not (got & natural), "secondary traffic still on the natural ring"
+
+# the no-chain runtime must emit NO ppermute at all
+key_p = rt_p._schedule_keys(sched)[off]
+with jax.set_mesh(mesh):
+    jaxpr_p = jax.make_jaxpr(rt_p._entries[key_p].jitted)(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sp), b0).jaxpr
+assert not perms_of(jaxpr_p, []), "chainless runtime emitted ppermute"
+print(f"jaxpr census: {len(perms)} ppermutes, all on chain {CHAIN}")
+print("CHAIN_PARITY_4DEV_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_chain_parity_on_4_devices(tmp_path):
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    script = tmp_path / "run.py"
+    script.write_text(_SCRIPT)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(script), src],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "CHAIN_PARITY_4DEV_OK" in out.stdout

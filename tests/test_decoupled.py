@@ -256,6 +256,61 @@ def test_planner_decoupled_attaches_ag_plan():
         assert item.duration == pytest.approx(split[item.bucket])
 
 
+def test_candidate_scoring_prices_ag_items_on_planned_links():
+    """Regression: ``_plan_candidates`` used to call ``simulate_deft``
+    without ``ag_links`` — every gather priced on the primary link even
+    when the AG plan had off-loaded it to the secondary.  These two toy
+    candidates are a concrete flip: under honest per-link pricing ``a``
+    wins, under primary-only pricing ``b`` would — so a planner that
+    drops the links picks the wrong partition."""
+    import random
+
+    def toy(cr, seed, n=8):
+        rng = random.Random(seed)
+        fwd = tuple(rng.uniform(0.002, 0.02) for _ in range(n))
+        bwd = tuple(2 * f for f in fwd)
+        comm = tuple(rng.uniform(0.005, 0.08) for _ in range(n))
+        t = BucketTimes(fwd, bwd, comm)
+        s = cr * (t.fwd_total + t.bwd_total) / t.comm_total
+        return BucketTimes(fwd, bwd, tuple(c * s for c in comm))
+
+    A, B = toy(1.8, seed=1), toy(2.2, seed=4)
+    req = PlanRequest(candidates=(("a", A), ("b", B)), walk=WALK,
+                      decoupled=True, sim_iterations=48)
+    planner = Planner()
+
+    def scores(zero_links: bool):
+        out = {}
+        for tag, times in req.candidates:
+            solve_on = rs_times(times, req.ag_fraction)
+            schedule, _, scfg, _ = planner._solve_times(solve_on, req)
+            kw = planner._ag_sim_kwargs(schedule, times, scfg, req)
+            assert kw and any(kw["ag_links"]), (
+                "precondition: the AG plan must place items on link 1")
+            if zero_links:
+                kw = dict(kw, ag_links=tuple(0 for _ in kw["ag_links"]))
+            sim = simulate_deft(
+                solve_on,
+                DeftScheduler(solve_on, scfg).run(req.sim_iterations),
+                mu=scfg.mu, heterogeneous=scfg.heterogeneous,
+                link_models=scfg.link_models, **kw,
+            )
+            out[tag] = sim.iteration_time
+        return out
+
+    honest, blind = scores(False), scores(True)
+    # the flip precondition: per-link pricing and primary-only pricing
+    # disagree on the ranking of this pair
+    assert honest["a"] < honest["b"]
+    assert blind["b"] < blind["a"]
+    # and the real planner agrees with the honest ranking
+    res = Planner().plan(req)
+    assert res.winner_tag == "a"
+    by_tag = {s.tag: s.iteration_time for s in res.candidates}
+    for tag in ("a", "b"):
+        assert by_tag[tag] == pytest.approx(honest[tag])
+
+
 def test_planner_default_walk_used_when_request_has_none():
     t = make_times([0.02] * 4, [0.03] * 4, [0.1] * 4)
     res = Planner(walk=WALK).plan(PlanRequest(times=t))

@@ -8,6 +8,7 @@ import dataclasses
 import json
 import math
 import random
+import statistics
 
 import jax
 import jax.numpy as jnp
@@ -625,7 +626,8 @@ def test_untraced_runtime_records_control_plane_only(single_mesh):
 @pytest.mark.slow
 def test_tracing_overhead_under_2_percent(single_mesh):
     """Dispatching with per-step tracing attached stays within 2% of the
-    untraced fused dispatch rate (interleaved min-of-chunks timing)."""
+    untraced fused dispatch rate (median of paired interleaved chunk
+    ratios, best of 3 attempts)."""
     import time
 
     cfg = _tiny_cfg()
@@ -650,17 +652,33 @@ def test_tracing_overhead_under_2_percent(single_mesh):
             jax.block_until_ready(m["loss"])
             return time.perf_counter() - t0, state
 
-        # warm both, then interleave chunks; min is robust to CPU noise
+        # warm both, then time paired rounds and take the MEDIAN of the
+        # per-round traced/plain ratios: pairing shares each round's
+        # ambient load between the two engines, alternating which goes
+        # first cancels any systematic second-position penalty, and the
+        # median kills rounds where a load spike hit only one side
+        # (min-of-chunks is one-sided — a single anomalously fast plain
+        # chunk sets a floor the traced side can never match).  On a
+        # loaded single-core host even that flakes, so the measurement
+        # retries up to 3 times: a genuine overhead regression shifts
+        # every round of every attempt and still fails.
         _, s_plain = timed(rt_plain, s_plain, n=10)
         _, s_traced = timed(rt_traced, s_traced, n=10)
-        best_plain, best_traced = math.inf, math.inf
-        for _ in range(5):
-            dt, s_plain = timed(rt_plain, s_plain)
-            best_plain = min(best_plain, dt)
-            dt, s_traced = timed(rt_traced, s_traced)
-            best_traced = min(best_traced, dt)
-    overhead = best_traced / best_plain - 1.0
+        overhead = math.inf
+        for _attempt in range(3):
+            ratios = []
+            for r in range(9):
+                if r % 2 == 0:
+                    dp, s_plain = timed(rt_plain, s_plain)
+                    dt, s_traced = timed(rt_traced, s_traced)
+                else:
+                    dt, s_traced = timed(rt_traced, s_traced)
+                    dp, s_plain = timed(rt_plain, s_plain)
+                ratios.append(dt / dp)
+            overhead = min(overhead, statistics.median(ratios) - 1.0)
+            if overhead < 0.02:
+                break
     assert overhead < 0.02, (
         f"tracing overhead {overhead * 100:.2f}% >= 2% "
-        f"(traced {best_traced:.3f}s vs plain {best_plain:.3f}s)"
+        f"(median of paired traced/plain chunk ratios, best of 3 attempts)"
     )
